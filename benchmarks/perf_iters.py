@@ -1,0 +1,133 @@
+"""Perf hillclimbing on the three selected cells (EXPERIMENTS.md §Perf).
+
+Cells (chosen from the baseline roofline table):
+  A. rwkv6-3b    x train_4k   — worst roofline fraction (6.8%), collective-bound
+  B. mixtral-8x7b x train_4k  — largest absolute collective term (33s modeled)
+  C. deepseek-7b x decode_32k — memory-bound; most representative of the
+                                paper's technique (narrow the bytes)
+
+Each experiment records hypothesis -> change -> before/after roofline terms.
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+      PYTHONPATH=src python -m benchmarks.perf_iters
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run():
+    from benchmarks.roofline import measure_cell
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    out_path = os.path.join(here, "results", "perf_iters.json")
+    results = []
+
+    def experiment(cell_name, arch, shape, variant, hypothesis, **kw):
+        rec = measure_cell(arch, shape, **kw)
+        rec.update(cell=cell_name, variant=variant, hypothesis=hypothesis)
+        results.append(rec)
+        print(f"[{cell_name}/{variant}] comp={rec['t_compute_s']*1e3:.1f}ms "
+              f"mem={rec['t_memory_s']*1e3:.1f}ms "
+              f"coll={rec['t_collective_s']*1e3:.1f}ms "
+              f"dom={rec['dominant']} temp={rec['memory_temp_gb']:.1f}GB",
+              flush=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+        return rec
+
+    # ---------------- Cell A: rwkv6-3b train_4k --------------------------
+    experiment("A", "rwkv6-3b", "train_4k", "baseline",
+               "paper-faithful baseline (FSDP f32 gathers + SP)")
+    experiment("A", "rwkv6-3b", "train_4k", "bf16_gather",
+               "A1: cast params bf16 before use -> FSDP all-gather bytes "
+               "halve -> collective term ~ -40%",
+               overrides={"train_cast_bf16": True})
+    experiment("A", "rwkv6-3b", "train_4k", "bf16_gather+batch_shard",
+               "A2: recurrences hate seq sharding; shard batch over BOTH "
+               "mesh axes (256-way DP), no SP -> seq collectives vanish; "
+               "activations 0.7GB/dev still fit",
+               overrides={"train_cast_bf16": True,
+                          "act_pspec": (("data", "model"),)})
+    experiment("A", "rwkv6-3b", "train_4k", "bf16_gather+batch_shard+accum2",
+               "A3: 2 microbatches shrink peak activations further at the "
+               "price of re-gathering weights twice",
+               overrides={"train_cast_bf16": True,
+                          "act_pspec": (("data", "model"),)},
+               accum=2)
+
+    # ---------------- Cell B: mixtral-8x7b train_4k ----------------------
+    experiment("B", "mixtral-8x7b", "train_4k", "baseline",
+               "baseline (accum=4, f32 gathers)")
+    experiment("B", "mixtral-8x7b", "train_4k", "bf16_gather",
+               "B1: bf16 FSDP gathers halve the dominant weight-gather "
+               "bytes (47B params x 4 microbatches)",
+               overrides={"train_cast_bf16": True})
+    experiment("B", "mixtral-8x7b", "train_4k", "bf16_gather+accum2",
+               "B2: accum 4->2 halves weight re-gathers again; expert "
+               "buffers double but fit after the bf16/remat fixes",
+               overrides={"train_cast_bf16": True}, accum=2)
+    experiment("B", "mixtral-8x7b", "train_4k", "bf16_gather+accum1",
+               "B3: no microbatching: weight gathers once per step; "
+               "checks whether activation memory still fits",
+               overrides={"train_cast_bf16": True}, accum=1)
+
+    # ---------------- Cell C: deepseek-7b decode_32k ---------------------
+    experiment("C", "deepseek-7b", "decode_32k", "baseline",
+               "baseline (bf16 KV cache)")
+    experiment("C", "deepseek-7b", "decode_32k", "int8_kv",
+               "C1: the paper's technique on the decode working set — int8 "
+               "KV codes + per-vector scales -> cache bytes ~0.53x -> "
+               "memory term ~ -45%",
+               overrides={"kv_cache_dtype": "int8"})
+
+    print("wrote", out_path)
+
+
+if __name__ == "__main__":
+    import os as _os
+    _os.environ.setdefault("XLA_FLAGS",
+                           "--xla_force_host_platform_device_count=512")
+    run()
+
+
+def run_round2():
+    """Second hillclimb round: A4 (bf16 chunk staging) + B4 (int8 gathers)."""
+    from benchmarks.roofline import measure_cell
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    out_path = os.path.join(here, "results", "perf_iters.json")
+    with open(out_path) as f:
+        results = json.load(f)
+
+    def experiment(cell_name, arch, shape, variant, hypothesis, **kw):
+        rec = measure_cell(arch, shape, **kw)
+        rec.update(cell=cell_name, variant=variant, hypothesis=hypothesis)
+        results[:] = [r for r in results if not (
+            r["cell"] == cell_name and r["variant"] == variant)]
+        results.append(rec)
+        print(f"[{cell_name}/{variant}] comp={rec['t_compute_s']*1e3:.1f}ms "
+              f"mem={rec['t_memory_s']*1e3:.1f}ms "
+              f"coll={rec['t_collective_s']*1e3:.1f}ms "
+              f"dom={rec['dominant']} temp={rec['memory_temp_gb']:.1f}GB",
+              flush=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+        return rec
+
+    experiment("A", "rwkv6-3b", "train_4k", "batch_shard+bf16_staging",
+               "A4: on top of A2 — stage r/k/v (and SSD u/B/C) in bf16, "
+               "cast f32 per chunk in VMEM -> chunk-scan HBM reads halve "
+               "-> memory term (now dominant) ~ -25%",
+               overrides={"act_pspec": (("data", "model"),)})
+    experiment("B", "mixtral-8x7b", "train_4k", "int8_gathers+accum2",
+               "B4: paper technique on the collective wire — QAT int8 "
+               "codes+scales gathered instead of f32 weights -> expert "
+               "weight-gather bytes ~ -75% -> collective term ~ -50%",
+               overrides={"train_weight_cast": "int8"}, accum=2)
+    experiment("C", "deepseek-7b", "decode_32k", "int8_kv+bf16_params",
+               "C2: int8 cache + confirm the bf16 param store (already "
+               "default for serving) — memory term vs C1 unchanged "
+               "(cache-dominated), records the combined final state",
+               overrides={"kv_cache_dtype": "int8"})
+    print("wrote", out_path)

@@ -1,0 +1,82 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from results JSON.
+
+    PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS_tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(name):
+    path = os.path.join(HERE, "results", name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_table() -> str:
+    recs = load("dryrun.json")
+    lines = ["| arch | shape | mesh | compile | FLOPs/dev | HBM B/dev | "
+             "coll B/dev | temp GB | args GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP (sub-quadratic only) | | | | | |")
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']}s | {r['flops']:.2e} | {r['hbm_bytes']:.2e} | "
+            f"{r['collective_bytes'].get('total', 0):.2e} | "
+            f"{m['temp_size'] / 1e9:.1f} | {m['argument_size'] / 1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    recs = load("roofline.json")
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f}ms | "
+            f"{r['t_memory_s']*1e3:.1f}ms | {r['t_collective_s']*1e3:.1f}ms | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def perf_table() -> str:
+    recs = load("perf_iters.json")
+    lines = ["| cell | variant | compute | memory | collective | dominant | "
+             "step time (max term) |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        step = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        lines.append(
+            f"| {r['cell']} | {r['variant']} | {r['t_compute_s']*1e3:.1f}ms |"
+            f" {r['t_memory_s']*1e3:.1f}ms | {r['t_collective_s']*1e3:.1f}ms |"
+            f" {r['dominant']} | {step*1e3:.1f}ms |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table\n")
+    print(roofline_table())
+    print("\n## Perf iterations\n")
+    print(perf_table())
+
+
+if __name__ == "__main__":
+    main()

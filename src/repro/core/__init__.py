@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — bit-width analysis for stage DAGs.
+
+- `fixedpoint`: (alpha, beta) fixed-point types + bit-accurate JAX ops
+- `interval`, `affine`: abstract domains (paper §III-C)
+- `absval`: the pluggable-domain framework (paper §IV-C)
+- `graph`: stage-DAG IR with expanded expression trees (PolyMage analogue)
+- `range_analysis`: alpha-analysis, Algorithm 1 (paper §IV-B)
+- `profile`: profile-driven alpha^max / alpha^avg (paper §V-A)
+- `beta_search`: uniform + reverse-topo beta heuristic (paper §V-B)
+- `cost_model`: FPGA power/area proxies; `policy`: TPU container legalization
+"""
+from repro.core.fixedpoint import FixedPointType, alpha_for_range
+from repro.core.interval import Interval
+from repro.core.affine import AffineForm
+from repro.core.graph import Pipeline, Stage, stencil_expr
+from repro.core.range_analysis import analyze, alpha_table, StageRange
+
+__all__ = [
+    "FixedPointType", "alpha_for_range", "Interval", "AffineForm",
+    "Pipeline", "Stage", "stencil_expr", "analyze", "alpha_table", "StageRange",
+]

@@ -1,0 +1,178 @@
+"""FPGA power/area cost model + TPU byte model.
+
+We cannot run Vivado P&R here (the paper's Tables III/VI/VII/X are post-P&R
+measurements on a Zynq XC7Z020), so power/area are *modeled* from the same
+quantity the paper's analysis controls: per-stage operator bit-widths.  The
+model is deliberately simple and is used only for *relative* comparisons
+(fixed vs float), which is how the paper reports its wins (3.8x power,
+6.2x area on HCD).
+
+Proxies (per output pixel):
+  ripple add / sub / cmp / select of width w  ->  w     bit-ops,  w   LUT-bits
+  multiplier  wa x wb                         ->  wa*wb/8 bit-ops, wa*wb/8 DSP-bits
+  divider / sqrt of width w                   ->  w*w/4 bit-ops (iterative array)
+  line buffer of a stage with halo h          ->  2h rows x W pixels x width bits (BRAM)
+
+Float32 op costs use the classic FPGA soft-float factors: a float adder
+(align + add + normalize) ~ 4x a 32-bit int adder; float multiply ~ a 24x24
+mantissa multiplier (+ exponent adder).  These land the model's float/fixed
+ratios in the same regime the paper measures; we report model numbers as
+modeled, never as measured watts.
+
+TPU side: bytes/pixel/stage after container legalization (`core.policy`),
+the quantity that actually drives HBM energy on the real target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core.fixedpoint import FixedPointType
+from repro.core.graph import (BinOp, Call, Cmp, Const, Expr, ParamRef,
+                              Pipeline, Pow, Ref, Select)
+
+FLOAT_ADD_FACTOR = 4.0          # soft-float adder vs int adder of same width
+FLOAT_MANTISSA = 24             # f32 mantissa incl. hidden bit
+
+
+@dataclasses.dataclass
+class StageCost:
+    bit_ops: float          # dynamic-power proxy (switched bits per output pixel)
+    lut_bits: float         # area proxy: adder/logic bits
+    dsp_bits: float         # area proxy: multiplier array bits
+    bram_bits: float        # line-buffer storage bits
+    storage_bits: int       # stage output element width
+
+
+def _w(t: Optional[FixedPointType]) -> int:
+    return 32 if t is None else t.width
+
+
+def _expr_cost(e: Expr, w_in: Dict[str, int], w_out: int, is_float: bool,
+               params_width: int = 32) -> Tuple[float, float, float]:
+    """(bit_ops, lut_bits, dsp_bits) for one evaluation of `e`.
+
+    Width discipline: each op computes at the max of its operand widths
+    (the HLS datapath the paper's generated code produces); the final result
+    is stored at `w_out`.
+    Returns cost and implicitly the width via closure recursion.
+    """
+    bit_ops = lut = dsp = 0.0
+
+    def go(n: Expr) -> int:           # returns value width of subtree
+        nonlocal bit_ops, lut, dsp
+        if isinstance(n, Const):
+            return FLOAT_MANTISSA if is_float else max(int(abs(n.value)).bit_length(), 8)
+        if isinstance(n, Ref):
+            return w_in[n.stage]
+        if isinstance(n, ParamRef):
+            return params_width if is_float else 16
+        if isinstance(n, BinOp):
+            wl, wr = go(n.left), go(n.right)
+            if n.op in "+-":
+                w = max(wl, wr) + 1
+                c = w * (FLOAT_ADD_FACTOR if is_float else 1.0)
+                bit_ops += c; lut += c
+                return min(w, 64)
+            if n.op == "*":
+                # constant multiplies fold to shift-adds: charge an adder
+                if isinstance(n.left, Const) and abs(n.left.value) in (0.0, 1.0):
+                    return wr
+                wa, wb = (FLOAT_MANTISSA, FLOAT_MANTISSA) if is_float else (wl, wr)
+                c = wa * wb / 8.0
+                bit_ops += c; dsp += c
+                return min(wl + wr, 64) if not is_float else 32
+            if n.op == "/":
+                w = max(wl, wr) if not is_float else FLOAT_MANTISSA
+                c = w * w / 4.0
+                bit_ops += c; lut += c
+                return w
+        if isinstance(n, Pow):
+            wb = go(n.base)
+            wa = FLOAT_MANTISSA if is_float else wb
+            c = wa * wa / 8.0 * max(n.n - 1, 1)
+            bit_ops += c; dsp += c
+            return min(wb * n.n, 64) if not is_float else 32
+        if isinstance(n, Call):
+            ws = [go(a) for a in n.args]
+            w = max(ws)
+            if n.fn == "sqrt":
+                c = w * w / 4.0
+            else:  # abs/min/max ~ one compare-select
+                c = w * (FLOAT_ADD_FACTOR if is_float else 1.0)
+            bit_ops += c; lut += c
+            return w
+        if isinstance(n, Cmp):
+            wl, wr = go(n.left), go(n.right)
+            w = max(wl, wr)
+            c = w * (FLOAT_ADD_FACTOR if is_float else 1.0)
+            bit_ops += c; lut += c
+            return 1
+        if isinstance(n, Select):
+            go(n.cond)
+            wt, wo = go(n.then), go(n.other)
+            w = max(wt, wo)
+            bit_ops += w; lut += w
+            return w
+        raise TypeError(type(n))
+
+    go(e)
+    return bit_ops, lut, dsp
+
+
+def stage_cost(pipeline: Pipeline, name: str,
+               types: Dict[str, Optional[FixedPointType]],
+               image_width: int = 1920) -> StageCost:
+    st = pipeline.stages[name]
+    w_out = _w(types.get(name))
+    if st.is_input or st.expr is None:
+        return StageCost(0.0, 0.0, 0.0, 0.0, w_out)
+    is_float = types.get(name) is None
+    w_in = {i: _w(types.get(i)) for i in st.inputs}
+    bit_ops, lut, dsp = _expr_cost(st.expr, w_in, w_out, is_float)
+    halo = st.halo()
+    # line buffers: 2*halo full image rows per input, at the input's width
+    bram = sum(2 * halo * image_width * w_in[i] for i in st.inputs) if halo else 0.0
+    return StageCost(bit_ops=bit_ops, lut_bits=lut, dsp_bits=dsp,
+                     bram_bits=float(bram), storage_bits=w_out)
+
+
+@dataclasses.dataclass
+class DesignCost:
+    power_proxy: float       # sum of per-pixel switched bit-ops (dynamic power ~)
+    lut_bits: float
+    dsp_bits: float
+    bram_bits: float
+    bytes_per_pixel_tpu: float   # after container legalization
+
+    def ratios_vs(self, other: "DesignCost") -> Dict[str, float]:
+        def r(a, b):
+            return b / a if a > 0 else float("inf")
+        return {
+            "power": r(self.power_proxy, other.power_proxy),
+            "area_lut": r(self.lut_bits, other.lut_bits),
+            "area_dsp": r(self.dsp_bits, other.dsp_bits),
+            "bram": r(self.bram_bits, other.bram_bits),
+            "tpu_bytes": r(self.bytes_per_pixel_tpu, other.bytes_per_pixel_tpu),
+        }
+
+
+def design_cost(pipeline: Pipeline,
+                types: Dict[str, Optional[FixedPointType]],
+                image_width: int = 1920) -> DesignCost:
+    from repro.core.policy import container_bytes
+    power = lut = dsp = bram = tbytes = 0.0
+    for name in pipeline.topo_order():
+        c = stage_cost(pipeline, name, types, image_width)
+        power += c.bit_ops
+        lut += c.lut_bits
+        dsp += c.dsp_bits
+        bram += c.bram_bits
+        tbytes += container_bytes(types.get(name))
+    return DesignCost(power_proxy=power, lut_bits=lut, dsp_bits=dsp,
+                      bram_bits=bram, bytes_per_pixel_tpu=tbytes)
+
+
+def float_design(pipeline: Pipeline) -> Dict[str, Optional[FixedPointType]]:
+    """The float32 reference design: every stage typed None."""
+    return {n: None for n in pipeline.stages}

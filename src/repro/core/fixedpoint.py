@@ -1,0 +1,193 @@
+"""Variable-width fixed-point data types — paper §III-A.
+
+A fixed-point type is a tuple (alpha, beta): `alpha` integral bits, `beta`
+fractional bits (total width alpha+beta).  Signed types use two's complement,
+so the representable ranges are
+
+    unsigned: [0, 2^alpha - 2^-beta]
+    signed:   [-2^(alpha-1), 2^(alpha-1) - 2^-beta]
+
+On the FPGA the paper synthesizes an (alpha+beta)-bit datapath directly.  On
+TPU we *emulate bit-accurately* by storing the scaled integer value
+``round(x * 2^beta)`` in the smallest containing hardware container
+(int8/int16/int32 — see `repro.core.policy`), with **saturation-mode**
+arithmetic as the paper prescribes (§III-A: saturation instead of wrap-around).
+
+Everything here is pure JAX and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointType:
+    """(alpha, beta) fixed-point format — paper's `typ` parameter."""
+
+    alpha: int            # integral bits (includes sign bit when signed)
+    beta: int             # fractional bits
+    signed: bool = True
+
+    def __post_init__(self):
+        if self.alpha < 0 or self.beta < 0:
+            raise ValueError(f"negative field width: {self}")
+        if self.alpha + self.beta == 0:
+            raise ValueError("zero-width fixed-point type")
+
+    # -- derived quantities ------------------------------------------------
+    @property
+    def width(self) -> int:
+        return self.alpha + self.beta
+
+    @property
+    def resolution(self) -> float:
+        """Smallest representable increment, 2^-beta."""
+        return 2.0 ** (-self.beta)
+
+    @property
+    def min_value(self) -> float:
+        return -(2.0 ** (self.alpha - 1)) if self.signed else 0.0
+
+    @property
+    def max_value(self) -> float:
+        if self.signed:
+            return 2.0 ** (self.alpha - 1) - self.resolution
+        return 2.0 ** self.alpha - self.resolution
+
+    # scaled-integer bounds (value * 2^beta)
+    @property
+    def int_min(self) -> int:
+        return -(1 << (self.width - 1)) if self.signed else 0
+
+    @property
+    def int_max(self) -> int:
+        return (1 << (self.width - 1)) - 1 if self.signed else (1 << self.width) - 1
+
+    def __str__(self) -> str:  # e.g. s13.4 / u8.0
+        return f"{'s' if self.signed else 'u'}{self.alpha}.{self.beta}"
+
+    # -- classmethods -------------------------------------------------------
+    @staticmethod
+    def for_range(lo: float, hi: float, beta: int = 0) -> "FixedPointType":
+        """Smallest type whose range covers [lo, hi] — paper's alpha formula."""
+        alpha = alpha_for_range(lo, hi)
+        return FixedPointType(alpha=alpha, beta=beta, signed=lo < 0)
+
+
+def alpha_for_range(lo: float, hi: float) -> int:
+    """Number of integral bits for range [lo, hi] — paper §IV-B, eq. for alpha.
+
+        alpha = max(ceil(log2(ceil|lo|)), ceil(log2(floor|hi| + 1))) + 1   if lo < 0
+        alpha = ceil(log2(floor(hi) + 1))                                  otherwise
+    """
+    if math.isinf(lo) or math.isinf(hi):
+        return 64  # sentinel: analysis blew up (division by interval containing 0)
+    if lo > hi:
+        raise ValueError(f"empty range [{lo}, {hi}]")
+
+    def _clog2(v: float) -> int:
+        if v <= 1:
+            return 0
+        return int(math.ceil(math.log2(v)))
+
+    if lo < 0:
+        a_neg = _clog2(math.ceil(abs(lo)))
+        a_pos = _clog2(math.floor(abs(hi)) + 1) if hi > 0 else 0
+        return max(a_neg, a_pos) + 1
+    return max(_clog2(math.floor(hi) + 1), 1)
+
+
+# ---------------------------------------------------------------------------
+# Bit-accurate fixed-point emulation ops (jit-safe).
+#
+# Representation: "qvalue" = the scaled integer round(x * 2^beta), carried in
+# an int32 (or int64 for wide intermediates).  All ops saturate.
+# ---------------------------------------------------------------------------
+
+def _container_dtype(width: int):
+    # emulation container — wide enough for exact arithmetic
+    if width <= 15:
+        return jnp.int32  # products of two 15-bit values fit int32? use 64 for safety
+    return jnp.int64
+
+
+def quantize(x: jax.Array, t: FixedPointType) -> jax.Array:
+    """float -> scaled-int qvalue with round-to-nearest-even + saturation."""
+    scaled = x * (2.0 ** t.beta)
+    # rint = round-half-to-even, matching typical HLS ap_fixed AP_RND_CONV
+    q = jnp.rint(scaled)
+    q = jnp.clip(q, t.int_min, t.int_max)
+    return q.astype(jnp.int64)
+
+
+def dequantize(q: jax.Array, t: FixedPointType) -> jax.Array:
+    return q.astype(jnp.float64 if q.dtype == jnp.int64 else jnp.float32) * (2.0 ** -t.beta)
+
+
+def fix_round(x: jax.Array, t: FixedPointType) -> jax.Array:
+    """Round a float array onto the (alpha,beta) grid with saturation.
+
+    This is the float-in/float-out view used by the profiling executor: it is
+    numerically identical to quantize->dequantize but keeps float dtype.
+    """
+    step = 2.0 ** t.beta
+    q = jnp.rint(x * step)
+    q = jnp.clip(q, float(t.int_min), float(t.int_max))
+    return q / step
+
+
+def saturating_add(qa, qb, t: FixedPointType):
+    s = qa + qb
+    return jnp.clip(s, t.int_min, t.int_max)
+
+
+def saturating_sub(qa, qb, t: FixedPointType):
+    s = qa - qb
+    return jnp.clip(s, t.int_min, t.int_max)
+
+
+def saturating_mul(qa, qb, ta: FixedPointType, tb: FixedPointType,
+                   tout: FixedPointType):
+    """(a * 2^ba) * (b * 2^bb) = ab * 2^(ba+bb); rescale to tout.beta."""
+    prod = qa * qb                       # exact in int64
+    shift = ta.beta + tb.beta - tout.beta
+    if shift > 0:
+        # round-half-up on the dropped bits (cheap FPGA rounding)
+        prod = (prod + (1 << (shift - 1))) >> shift
+    elif shift < 0:
+        prod = prod << (-shift)
+    return jnp.clip(prod, tout.int_min, tout.int_max)
+
+
+# ---------------------------------------------------------------------------
+# Float-view helpers used by executors: op in f64, then snap to grid.
+# The paper's HLS simulation does exactly this via ap_fixed C++ overloads.
+# ---------------------------------------------------------------------------
+
+def apply_fixed(x: jax.Array, t: Optional[FixedPointType]) -> jax.Array:
+    """Snap to type grid; None = keep float (the float reference design)."""
+    if t is None:
+        return x
+    return fix_round(x, t)
+
+
+def quant_error_bound(t: FixedPointType) -> float:
+    """Max rounding error introduced by one snap: half a resolution step."""
+    return 0.5 * t.resolution
+
+
+def storage_bits(t: Optional[FixedPointType]) -> int:
+    """Bits per stored element (float reference = 32)."""
+    return 32 if t is None else t.width
+
+
+def np_quantize(x: np.ndarray, t: FixedPointType) -> np.ndarray:
+    """NumPy twin of `quantize` for oracles in tests."""
+    q = np.rint(x * (2.0 ** t.beta))
+    return np.clip(q, t.int_min, t.int_max).astype(np.int64)

@@ -1,0 +1,88 @@
+"""Profile-driven analysis — paper §V-A.
+
+Runs the pipeline (float executor) over a sample image set and extracts, per
+stage i and sample s, the max integral bits alpha_i^s needed by any pixel;
+then
+
+    alpha_i^max = max_s alpha_i^s        (worst case over the training set)
+    alpha_i^avg = round(mean_s alpha_i^s)
+
+plus the per-pixel bit-width CDF data behind the paper's Figure 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import Pipeline
+from repro.core.interval import Interval
+
+
+def np_alpha_bits(x: np.ndarray) -> np.ndarray:
+    """Per-pixel integral bits (paper's alpha formula, vectorized).
+
+    For v >= 0: ceil(log2(floor(v)+1));  for v < 0 the sign bit is added and
+    magnitude uses ceil(log2(ceil(|v|))).  Matches `fixedpoint.alpha_for_range`
+    applied to the degenerate range [v, v].
+    """
+    x = np.asarray(x, dtype=np.float64)
+    pos = np.maximum(x, 0.0)
+    bits_pos = np.ceil(np.log2(np.floor(pos) + 1.0))
+    neg = np.ceil(np.abs(np.minimum(x, 0.0)))
+    with np.errstate(divide="ignore"):
+        bits_neg = np.where(neg > 1.0, np.ceil(np.log2(neg)), 0.0)
+    bits = np.where(x < 0.0, np.maximum(bits_neg, bits_pos) + 1.0,
+                    np.maximum(bits_pos, 1.0))
+    return bits.astype(np.int32)
+
+
+@dataclasses.dataclass
+class ProfileResult:
+    """Per-stage profile statistics over a sample set."""
+    alpha_max: Dict[str, int]
+    alpha_avg: Dict[str, int]
+    observed_range: Dict[str, Interval]          # join over all samples
+    # Fig-5 data: stage -> (bit values, cumulative % of pixels <= bits)
+    cdf: Dict[str, Tuple[np.ndarray, np.ndarray]]
+
+
+def profile_pipeline(pipeline: Pipeline, images: Sequence[np.ndarray],
+                     run_float, param_values: Dict[str, float] | None = None,
+                     ) -> ProfileResult:
+    """`run_float(image, params) -> Dict[stage, np.ndarray]` is the executor
+    (injected to avoid a core->dsl dependency; see repro.dsl.exec.run_float).
+    """
+    names = pipeline.topo_order()
+    per_sample_alpha: Dict[str, List[int]] = {n: [] for n in names}
+    lo: Dict[str, float] = {n: math.inf for n in names}
+    hi: Dict[str, float] = {n: -math.inf for n in names}
+    hist: Dict[str, np.ndarray] = {n: np.zeros(65, dtype=np.int64) for n in names}
+
+    for img in images:
+        outs = run_float(img, param_values or {})
+        for n in names:
+            arr = np.asarray(outs[n])
+            bits = np_alpha_bits(arr)
+            per_sample_alpha[n].append(int(bits.max()))
+            lo[n] = min(lo[n], float(arr.min()))
+            hi[n] = max(hi[n], float(arr.max()))
+            h = np.bincount(bits.ravel(), minlength=65)
+            hist[n] += h[:65]
+
+    alpha_max = {n: max(v) for n, v in per_sample_alpha.items()}
+    alpha_avg = {n: int(round(float(np.mean(v)))) for n, v in per_sample_alpha.items()}
+    cdf = {}
+    for n in names:
+        total = hist[n].sum()
+        cum = 100.0 * np.cumsum(hist[n]) / max(total, 1)
+        upper = max(int(np.nonzero(hist[n])[0].max(initial=0)) + 1, 1)
+        cdf[n] = (np.arange(upper), cum[:upper])
+    return ProfileResult(
+        alpha_max=alpha_max,
+        alpha_avg=alpha_avg,
+        observed_range={n: Interval(lo[n], hi[n]) for n in names},
+        cdf=cdf,
+    )

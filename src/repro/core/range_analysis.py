@@ -1,0 +1,127 @@
+"""Range (alpha) analysis — paper §IV-B, Algorithm 1.
+
+Walks the stage DAG in topologically sorted order; at each stage the
+expression tree is evaluated over the chosen abstract domain, exploiting the
+homogeneity of pixel signals within a stage: every `Ref` leaf materializes
+the *stage-level* combined range of its producer (fresh signal per tap
+occurrence — taps read distinct pixels and are treated as independent).
+
+Returns per-stage `(range, alpha)` exactly as Algorithm 1's
+COMPUTEBITWIDTH 3-tuples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.core.absval import Domain, get_domain
+from repro.core.fixedpoint import alpha_for_range
+from repro.core.graph import (BinOp, Call, Cmp, Const, Expr, ParamRef,
+                              Pipeline, Pow, Ref, Select)
+from repro.core.interval import Interval
+
+
+@dataclasses.dataclass
+class StageRange:
+    """Algorithm 1's (z_lo, z_hi, alpha) bit-width 3-tuple for one stage."""
+    range: Interval
+    alpha: int
+    signed: bool
+
+    @staticmethod
+    def from_interval(iv: Interval) -> "StageRange":
+        return StageRange(range=iv, alpha=alpha_for_range(iv.lo, iv.hi),
+                          signed=iv.lo < 0)
+
+
+def eval_expr_abstract(e: Expr, domain: Domain,
+                       stage_ranges: Dict[str, Interval],
+                       params: Dict[str, Interval],
+                       param_cache: Optional[Dict[str, Any]] = None) -> Any:
+    """Recursive abstract evaluation — the body of COMPUTEBITWIDTH.
+
+    `param_cache` shares one abstract signal across all occurrences of the
+    same scalar parameter (a parameter is a single correlated signal; the
+    affine domain exploits this for cancellation, e.g. USM's `weight`).
+    """
+    if param_cache is None:
+        param_cache = {}
+
+    def rec(n: Expr) -> Any:
+        return eval_expr_abstract(n, domain, stage_ranges, params, param_cache)
+
+    if isinstance(e, Const):
+        return domain.const(e.value)
+    if isinstance(e, Ref):
+        return domain.fresh_signal(stage_ranges[e.stage])
+    if isinstance(e, ParamRef):
+        if e.name not in param_cache:
+            param_cache[e.name] = domain.fresh_signal(params[e.name])
+        return param_cache[e.name]
+    if isinstance(e, BinOp):
+        l = rec(e.left)
+        r = rec(e.right)
+        if e.op == "+":
+            return l + r
+        if e.op == "-":
+            return l - r
+        if e.op == "*":
+            return l * r
+        if e.op == "/":
+            return l / r
+        raise ValueError(f"unknown binop {e.op}")
+    if isinstance(e, Pow):
+        # the compiler maps x*x -> x**2 for tighter even-power ranges (§IV-B)
+        return rec(e.base) ** e.n
+    if isinstance(e, Call):
+        args = [rec(a) for a in e.args]
+        if e.fn == "abs":
+            return args[0].abs()
+        if e.fn == "sqrt":
+            return args[0].sqrt()
+        if e.fn == "min":
+            return args[0].min_(args[1])
+        if e.fn == "max":
+            return args[0].max_(args[1])
+        raise ValueError(f"unknown call {e.fn}")
+    if isinstance(e, Select):
+        # value range of a select is the join of both branches
+        t = rec(e.then)
+        o = rec(e.other)
+        return t.select(t, o) if hasattr(t, "select") else t.join(o)
+    if isinstance(e, Cmp):
+        raise ValueError("bare comparison outside Select")
+    raise TypeError(f"unknown expr node {type(e)}")
+
+
+def analyze(pipeline: Pipeline, domain: str | Domain = "interval",
+            input_ranges: Optional[Dict[str, Interval]] = None,
+            ) -> Dict[str, StageRange]:
+    """alpha-analysis over the whole DAG (topological order).
+
+    `input_ranges` overrides the declared ranges of input stages (used by the
+    profile-refined re-analysis).
+    """
+    dom = get_domain(domain) if isinstance(domain, str) else domain
+    ranges: Dict[str, Interval] = {}
+    out: Dict[str, StageRange] = {}
+    param_cache: Dict[str, Any] = {}   # shared across stages: one signal/param
+
+    for name in pipeline.topo_order():
+        st = pipeline.stages[name]
+        if st.is_input:
+            iv = (input_ranges or {}).get(name, st.input_range)
+            if iv is None:
+                raise ValueError(f"input stage {name!r} has no declared range")
+        else:
+            v = eval_expr_abstract(st.expr, dom, ranges, pipeline.params,
+                                   param_cache)
+            iv = dom.to_interval(v)
+        ranges[name] = iv
+        out[name] = StageRange.from_interval(iv)
+    return out
+
+
+def alpha_table(pipeline: Pipeline, **kw) -> Dict[str, int]:
+    """Convenience: stage -> alpha (the paper's Table II right column)."""
+    return {k: v.alpha for k, v in analyze(pipeline, **kw).items()}

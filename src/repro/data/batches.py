@@ -1,0 +1,69 @@
+"""Synthetic batch construction + ShapeDtypeStruct input specs per arch.
+
+`make_batch` materializes data (smoke tests / examples); `input_specs`
+returns ShapeDtypeStructs only (dry-run: no allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    shapes: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.arch_class == "vlm":
+        shapes["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.arch_class == "encdec":
+        shapes["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return shapes
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    out: Dict = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }
+    if cfg.arch_class == "vlm":
+        out["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_image_tokens, cfg.d_model)) * 0.02,
+            jnp.float32)
+    if cfg.arch_class == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return out
+
+
+class TokenStream:
+    """Deterministic sharded synthetic token pipeline.
+
+    Each data shard draws from a seed derived from (epoch, step, shard), so
+    restarts and elastic re-sharding reproduce the same global batch order —
+    the property the straggler/fault story relies on (DESIGN.md §6).
+    """
+
+    def __init__(self, cfg: ModelConfig, global_batch: int, seq: int,
+                 n_shards: int = 1, shard_id: int = 0, seed: int = 1234):
+        assert global_batch % n_shards == 0
+        self.cfg = cfg
+        self.local_batch = global_batch // n_shards
+        self.seq = seq
+        self.shard_id = shard_id
+        self.seed = seed
+
+    def batch_at(self, step: int) -> Dict:
+        return make_batch(self.cfg, self.local_batch, self.seq,
+                          seed=hash((self.seed, step, self.shard_id)) % (2**31))

@@ -1,0 +1,10 @@
+"""PolyMage-flavored DSL front end + polymorphic executors."""
+from repro.dsl.builder import (PipelineBuilder, absv, ite, maxv, minv,
+                               shifted, sqrtv)
+from repro.dsl.exec import (make_jitted_fixed, run_abstract, run_fixed,
+                            run_float)
+
+__all__ = [
+    "PipelineBuilder", "absv", "ite", "maxv", "minv", "shifted", "sqrtv",
+    "make_jitted_fixed", "run_abstract", "run_fixed", "run_float",
+]

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+stencil : fixed-point 2-D stencil with VMEM line-buffer bands
+qmatmul : int8 x int8 -> int32 MXU matmul (+ fused dequant epilogue)
+qdq     : fused block quantize/dequantize (fake-quant, gradient compression)
+"""

@@ -1,0 +1,64 @@
+"""Fused block-quantize / dequantize Pallas kernel.
+
+The bit-truncation wire of the paper, as a TPU kernel: chunk a tensor into
+blocks, compute one absmax scale per block, emit int8 codes + scales.  Used
+by (a) the fake-quant training path and (b) quantized gradient all-reduce
+compression (`repro.train.compression`) — the paper's technique applied to
+collective bytes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, qmax: int):
+    x = x_ref[...]
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    s = jnp.where(s == 0.0, 1.0, s)
+    q_ref[...] = jnp.clip(jnp.rint(x / s), -qmax - 1, qmax).astype(jnp.int8)
+    s_ref[...] = s.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def block_quantize(x: jax.Array, rows_per_tile: int = 8, qmax: int = 127,
+                   interpret: bool = True):
+    """x: (NB, BS) f32 -> (codes int8 (NB, BS), scales f32 (NB, 1))."""
+    NB, BS = x.shape
+    rt = rows_per_tile
+    while NB % rt != 0:
+        rt -= 1
+    kern = functools.partial(_quant_kernel, qmax=qmax)
+    return pl.pallas_call(
+        kern,
+        grid=(NB // rt,),
+        in_specs=[pl.BlockSpec((rt, BS), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rt, BS), lambda i: (i, 0)),
+                   pl.BlockSpec((rt, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((NB, BS), jnp.int8),
+                   jax.ShapeDtypeStruct((NB, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def block_dequantize(q: jax.Array, s: jax.Array, rows_per_tile: int = 8,
+                     interpret: bool = True) -> jax.Array:
+    NB, BS = q.shape
+    rt = rows_per_tile
+    while NB % rt != 0:
+        rt -= 1
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(NB // rt,),
+        in_specs=[pl.BlockSpec((rt, BS), lambda i: (i, 0)),
+                  pl.BlockSpec((rt, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rt, BS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((NB, BS), jnp.float32),
+        interpret=interpret,
+    )(q, s)

@@ -1,0 +1,50 @@
+"""Public API: tensor-shaped fake-quant + flat compress/decompress."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qdq.kernel import block_dequantize, block_quantize
+from repro.kernels.qdq.ref import block_dequantize_ref, block_quantize_ref
+
+
+def _to_blocks(x: jax.Array, block_size: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block_size
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block_size), pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "use_ref",
+                                             "interpret"))
+def fake_quant(x: jax.Array, block_size: int = 256, use_ref: bool = False,
+               interpret: bool = True) -> jax.Array:
+    """Quantize-dequantize round trip preserving shape (STE forward)."""
+    blocks, pad = _to_blocks(x, block_size)
+    if use_ref:
+        q, s = block_quantize_ref(blocks)
+        out = block_dequantize_ref(q, s)
+    else:
+        q, s = block_quantize(blocks, interpret=interpret)
+        out = block_dequantize(q, s, interpret=interpret)
+    flat = out.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(x.shape).astype(x.dtype)
+
+
+def compress(x: jax.Array, block_size: int = 256, interpret: bool = True):
+    """-> (codes int8, scales f32, pad): 4x fewer bytes on the wire."""
+    blocks, pad = _to_blocks(x, block_size)
+    q, s = block_quantize(blocks, interpret=interpret)
+    return q, s, pad
+
+
+def decompress(q: jax.Array, s: jax.Array, pad: int, shape,
+               interpret: bool = True) -> jax.Array:
+    out = block_dequantize(q, s, interpret=interpret).reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape)

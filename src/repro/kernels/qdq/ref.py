@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for block quantize/dequantize."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_quantize_ref(x, qmax: int = 127):
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    s = jnp.where(s == 0.0, 1.0, s)
+    q = jnp.clip(jnp.rint(x / s), -qmax - 1, qmax).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def block_dequantize_ref(q, s):
+    return q.astype(jnp.float32) * s

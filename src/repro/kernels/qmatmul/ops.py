@@ -1,0 +1,62 @@
+"""Public quantized-matmul API: f32 in, int8 internally, f32 out.
+
+`matmul_quantized(a, b)` = rowwise-absmax-quantize(a) @ colwise(b), the
+symmetric per-channel scheme `repro.quant` assigns when the range analysis
+legalizes a matmul's operands to int8 containers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmatmul.kernel import qmatmul_dequant, qmatmul_i32
+from repro.kernels.qmatmul.ref import qmatmul_dequant_ref
+
+
+def absmax_scale(x: jax.Array, axis: int, qmax: int = 127) -> jax.Array:
+    s = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / qmax
+    return jnp.where(s == 0.0, 1.0, s)
+
+
+def quantize_rows(a: jax.Array, qmax: int = 127):
+    s = absmax_scale(a, axis=1, qmax=qmax)                    # (M, 1)
+    q = jnp.clip(jnp.rint(a / s), -qmax - 1, qmax).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def quantize_cols(b: jax.Array, qmax: int = 127):
+    s = absmax_scale(b, axis=0, qmax=qmax)                    # (1, N)
+    q = jnp.clip(jnp.rint(b / s), -qmax - 1, qmax).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_ref", "interpret"))
+def matmul_quantized(a: jax.Array, b: jax.Array, block: int = 128,
+                     use_ref: bool = False, interpret: bool = True) -> jax.Array:
+    """f32 (M, K) @ (K, N) via per-channel int8 quantization."""
+    M, K = a.shape
+    _, N = b.shape
+    a_q, sa = quantize_rows(a)
+    b_q, sb = quantize_cols(b)
+    if use_ref:
+        return qmatmul_dequant_ref(a_q, b_q, sa, sb)
+    bm = min(block, M) if M % min(block, M) == 0 else 1
+    # pad every dim to the block multiple (cheap; sliced off afterwards)
+    a_q = _pad_to(_pad_to(a_q, block, 0), block, 1)
+    b_q = _pad_to(_pad_to(b_q, block, 0), block, 1)
+    sa_p = _pad_to(sa, block, 0)
+    sb_p = _pad_to(sb, block, 1)
+    out = qmatmul_dequant(a_q, b_q, sa_p, sb_p, block_m=block, block_n=block,
+                          block_k=block, interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for the quantized matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qmatmul_i32_ref(a_q, b_q):
+    return jnp.dot(a_q.astype(jnp.int32), b_q.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def qmatmul_dequant_ref(a_q, b_q, a_scale, b_scale):
+    acc = qmatmul_i32_ref(a_q, b_q)
+    return acc.astype(jnp.float32) * a_scale * b_scale

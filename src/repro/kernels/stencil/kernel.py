@@ -1,0 +1,71 @@
+"""Fixed-point 2-D stencil Pallas kernel — the paper's core datapath on TPU.
+
+FPGA adaptation (DESIGN.md §2): the paper's designs stream pixels through
+*line buffers* so each output pixel sees its stencil window without HBM
+re-reads.  The TPU analogue keeps a band of rows (the tile + halo) resident
+in VMEM: the input stays in HBM (`pl.ANY`), each grid step copies one
+(TH + 2*halo)-row band, and the taps become static shifted slices combined
+with integer multiply-accumulate in VREGs.
+
+Arithmetic is the paper's saturating fixed point, exactly:
+
+    out_q = clip( (sum_k w_q[k] * in_q[y+dy_k, x+dx_k] + round_bias) >> shift,
+                  qmin, qmax )
+
+with `in_q` the (alpha_in, beta_in) scaled integers, `w_q` the stencil
+weights quantized at `w_beta` fractional bits, and
+`shift = beta_in + w_beta - beta_out`.  All integer math is exact in int32
+(ops.py checks the width budget), so kernel == oracle bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Tap = Tuple[int, int, int]   # (dy, dx, w_q)
+
+
+def _stencil_kernel(x_ref, o_ref, *, taps: Sequence[Tap], halo: int,
+                    shift: int, qmin: int, qmax: int, tile_h: int, width: int):
+    i = pl.program_id(0)
+    # one VMEM-resident band of rows: the line-buffer analogue
+    band = x_ref[pl.ds(i * tile_h, tile_h + 2 * halo), :]
+    acc = jnp.zeros((tile_h, width), jnp.int32)
+    for dy, dx, wq in taps:
+        if wq == 0:
+            continue
+        sl = band[halo + dy: halo + dy + tile_h,
+                  halo + dx: halo + dx + width]
+        acc = acc + wq * sl
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift     # round-half-up
+    o_ref[...] = jnp.clip(acc, qmin, qmax)            # saturation mode
+
+
+def fixedpoint_stencil(x_q: jax.Array, taps: Sequence[Tap], halo: int,
+                       shift: int, qmin: int, qmax: int,
+                       tile_h: int = 8, interpret: bool = True) -> jax.Array:
+    """Apply the quantized stencil to a pre-padded scaled-int image.
+
+    x_q: int32 (H + 2*halo, W + 2*halo), edge-padded
+    returns int32 (H, W) at the output type's scale.
+    """
+    Hp, Wp = x_q.shape
+    H, W = Hp - 2 * halo, Wp - 2 * halo
+    if H % tile_h != 0:
+        raise ValueError(f"H={H} not divisible by tile_h={tile_h}")
+    kern = functools.partial(_stencil_kernel, taps=tuple(taps), halo=halo,
+                             shift=shift, qmin=qmin, qmax=qmax,
+                             tile_h=tile_h, width=W)
+    return pl.pallas_call(
+        kern,
+        grid=(H // tile_h,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],   # stays in HBM; band-loaded
+        out_specs=pl.BlockSpec((tile_h, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.int32),
+        interpret=interpret,
+    )(x_q)

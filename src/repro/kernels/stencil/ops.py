@@ -1,0 +1,88 @@
+"""jit'd public wrapper: float image -> fixed-point stencil -> float image.
+
+Handles weight quantization (exact where the weights are dyadic — all the
+paper's stencils are w/2^k), input/output (alpha, beta) scaling, edge
+padding, and the int32 width budget check.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import FixedPointType
+from repro.kernels.stencil.kernel import fixedpoint_stencil
+from repro.kernels.stencil.ref import fixedpoint_stencil_ref
+
+
+def quantize_weights(weights: Sequence[Sequence[float]], scale: float,
+                     max_beta: int = 12):
+    """(taps, w_beta): smallest w_beta that represents scale*weights exactly,
+    else max_beta.  Returns taps [(dy, dx, w_q)] centered on the kernel."""
+    rows = len(weights)
+    cols = max(len(r) for r in weights)
+    cy, cx = rows // 2, cols // 2
+    vals = [scale * w for r in weights for w in r]
+    for w_beta in range(max_beta + 1):
+        if all(abs(v * (1 << w_beta) - round(v * (1 << w_beta))) < 1e-9
+               for v in vals):
+            break
+    else:
+        w_beta = max_beta
+    taps = []
+    for r, row in enumerate(weights):
+        for c, w in enumerate(row):
+            wq = int(round(scale * w * (1 << w_beta)))
+            if wq != 0:
+                taps.append((r - cy, c - cx, wq))
+    return taps, w_beta
+
+
+def check_width_budget(t_in: FixedPointType, taps, w_beta: int) -> None:
+    """Exactness requires the accumulator to fit int32."""
+    wsum = sum(abs(w) for _, _, w in taps)
+    max_abs = max(abs(t_in.int_min), t_in.int_max) * wsum
+    if max_abs >= 2 ** 31:
+        raise ValueError(
+            f"stencil accumulator needs {math.ceil(math.log2(max_abs)) + 1} bits"
+            f" > int32; reduce beta_in ({t_in}) or w_beta ({w_beta})")
+
+
+@functools.partial(jax.jit, static_argnames=("taps", "t_in", "t_out",
+                                             "w_beta", "tile_h", "use_ref",
+                                             "interpret"))
+def _stencil_fixed(img, taps, t_in: FixedPointType, t_out: FixedPointType,
+                   w_beta: int, tile_h: int, use_ref: bool, interpret: bool):
+    halo = max(max(abs(dy), abs(dx)) for dy, dx, _ in taps)
+    shift = t_in.beta + w_beta - t_out.beta
+    if shift < 0:
+        raise ValueError("negative shift: raise w_beta or lower beta_out")
+    # quantize input to scaled ints (int32 carrier)
+    q = jnp.clip(jnp.rint(img * (1 << t_in.beta)), t_in.int_min,
+                 t_in.int_max).astype(jnp.int32)
+    q = jnp.pad(q, ((halo, halo), (halo, halo)), mode="edge")
+    fn = fixedpoint_stencil_ref if use_ref else functools.partial(
+        fixedpoint_stencil, tile_h=tile_h, interpret=interpret)
+    out_q = fn(q, taps, halo, shift, t_out.int_min, t_out.int_max)
+    return out_q.astype(jnp.float32) * (2.0 ** -t_out.beta)
+
+
+def stencil_fixed(img, weights, scale: float, t_in: FixedPointType,
+                  t_out: FixedPointType, tile_h: int = 8,
+                  use_ref: bool = False, interpret: bool = True):
+    """Public API: float (H, W) image -> fixed-point stencil -> float (H, W).
+
+    `interpret=True` runs the Pallas kernel in interpret mode (CPU); on a
+    real TPU pass interpret=False.
+    """
+    taps, w_beta = quantize_weights(weights, scale)
+    check_width_budget(t_in, taps, w_beta)
+    H = img.shape[0]
+    th = tile_h
+    while H % th != 0:        # shrink tile to divide the image
+        th -= 1
+    return _stencil_fixed(img, tuple(taps), t_in, t_out, w_beta, th,
+                          use_ref, interpret)

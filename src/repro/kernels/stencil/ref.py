@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fixed-point stencil kernel (bit-exact)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+Tap = Tuple[int, int, int]
+
+
+def fixedpoint_stencil_ref(x_q, taps: Sequence[Tap], halo: int, shift: int,
+                           qmin: int, qmax: int):
+    """Identical integer math to kernel.py, expressed with whole-array slices."""
+    Hp, Wp = x_q.shape
+    H, W = Hp - 2 * halo, Wp - 2 * halo
+    acc = jnp.zeros((H, W), jnp.int32)
+    for dy, dx, wq in taps:
+        if wq == 0:
+            continue
+        acc = acc + wq * x_q[halo + dy: halo + dy + H,
+                             halo + dx: halo + dx + W].astype(jnp.int32)
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    return jnp.clip(acc, qmin, qmax)

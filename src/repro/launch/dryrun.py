@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the 512
+placeholder host devices let jax.make_mesh build the production meshes; the
+compiled artifact's memory/cost analyses feed EXPERIMENTS.md's roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single   # 16x16 only
+Results stream to benchmarks/results/dryrun.json (one record per cell).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.lowering import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, skip_reason
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results")
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out: list) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    reason = skip_reason(cfg, cell)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if reason:
+        rec.update(status="skip", reason=reason)
+        out.append(rec)
+        print(f"[skip] {arch} x {shape} x {mesh_name}: {reason}", flush=True)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lc = lower_cell(arch, cfg, cell, mesh, mesh_name)
+        rec.update(status="ok", compile_s=round(time.time() - t0, 1),
+                   **lc.analyses())
+        mem = rec["memory"]
+        n_dev = 512 if multi_pod else 256
+        print(f"[ok]   {arch} x {shape} x {mesh_name}: "
+              f"{rec['compile_s']}s compile, "
+              f"flops={rec['flops']:.3e}, hbm={rec['hbm_bytes']:.3e}, "
+              f"coll={rec['collective_bytes'].get('total', 0):.3e}, "
+              f"temp/dev={mem['temp_size']/1e9:.2f}GB "
+              f"args/dev={mem['argument_size']/1e9:.2f}GB", flush=True)
+    except Exception as e:  # a failure here is a sharding bug
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   compile_s=round(time.time() - t0, 1))
+        print(f"[FAIL] {arch} x {shape} x {mesh_name}: {e}", flush=True)
+        traceback.print_exc()
+    out.append(rec)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        "dry-run needs the 512-device placeholder topology; do not import "
+        "jax before this module sets XLA_FLAGS")
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    mesh_names = {"pod2x16x16" if m else "pod16x16" for m in meshes}
+
+    os.makedirs(os.path.abspath(RESULTS), exist_ok=True)
+    out_path = args.out or os.path.abspath(
+        os.path.join(RESULTS, "dryrun.json"))
+    records: list = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            records = [r for r in json.load(f)
+                       if not ((args.arch is None or r["arch"] == args.arch)
+                               and (args.shape is None
+                                    or r["shape"] == args.shape)
+                               and r["mesh"] in mesh_names)]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_one(arch, shape, multi, records)
+                n_fail += rec["status"] == "fail"
+                with open(out_path, "w") as f:
+                    json.dump(records, f, indent=1)
+    print(f"\nwrote {out_path}; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Elastic re-scaling: move a training job between device topologies.
+
+Scenario (the 1000+-node reality): a pod loses a rack mid-run, or capacity
+grows.  Because checkpoints are host-numpy trees (train/checkpoint.py) and
+shardings are *derived* (logical axes x rules x mesh), re-scaling is:
+
+    1. restore_latest(...) with shardings built for the NEW mesh
+    2. verify divisibility (spec_for's fallback replicates what no longer
+       divides — reported, not fatal)
+    3. resume; the deterministic TokenStream re-shards the data pipeline
+       (seed depends on (step, shard), so no sample is skipped or repeated)
+
+`plan_rescale` reports exactly which tensors change layout and which fall
+back to replication, so an operator can veto a bad target topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+
+from repro.launch import sharding as shd
+
+
+@dataclasses.dataclass
+class RescalePlan:
+    n_from: int
+    n_to: int
+    resharded: List[str]          # tensors whose PartitionSpec changes
+    newly_replicated: List[str]   # tensors that no longer divide -> warn
+    bytes_moved: float            # lower-bound resharding traffic
+
+
+def plan_rescale(shapes_tree, axes_tree, mesh_from, mesh_to,
+                 rules=None) -> RescalePlan:
+    resharded, newly_repl = [], []
+    moved = 0.0
+    flat_s = jax.tree_util.tree_flatten_with_path(shapes_tree)[0]
+    flat_a = jax.tree.leaves(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    for (path, sds), axes in zip(flat_s, flat_a):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        s_from = shd.spec_for(tuple(sds.shape), axes, mesh_from, rules)
+        s_to = shd.spec_for(tuple(sds.shape), axes, mesh_to, rules)
+        if s_from != s_to:
+            resharded.append(name)
+            moved += float(sds.size) * sds.dtype.itemsize
+        sharded_from = any(p is not None for p in s_from)
+        sharded_to = any(p is not None for p in s_to)
+        if sharded_from and not sharded_to:
+            newly_repl.append(name)
+    return RescalePlan(
+        n_from=int(np_prod(mesh_from.shape.values())),
+        n_to=int(np_prod(mesh_to.shape.values())),
+        resharded=resharded, newly_replicated=newly_repl,
+        bytes_moved=moved)
+
+
+def np_prod(vals):
+    out = 1
+    for v in vals:
+        out *= v
+    return out
+
+
+def rescale_restore(ckpt_dir: str, like_tree, axes_tree, new_mesh,
+                    rules=None):
+    """Restore the latest checkpoint re-sharded for `new_mesh`."""
+    from repro.train import checkpoint as ckpt
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), like_tree)
+    shards = shd.shardings_for_tree(shapes, axes_tree, new_mesh, rules)
+    return ckpt.restore_latest(ckpt_dir, like_tree, sharding_tree=shards)

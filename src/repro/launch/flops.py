@@ -1,0 +1,147 @@
+"""Analytic FLOP/byte model per (arch x shape) — the roofline numerator.
+
+XLA's cost_analysis visits each while-loop (scan) body ONCE regardless of
+trip count, so compiled HLO_FLOPs understate scanned models by ~L.  The
+roofline pipeline therefore combines:
+
+  * MODEL_FLOPS   — the classic 6*N*D (dense) / 6*N_active*D (MoE) training
+                    estimate, decode variants for serve steps
+  * ANALYTIC      — a per-op walk of the architecture (matmuls, attention
+                    quadratic term, chunked-recurrence work), forward or
+                    forward+backward
+  * HLO           — compiled cost_analysis, corrected for scan trip counts
+                    by the differential method in benchmarks/roofline.py
+
+Bytes: parameter traffic + activation traffic at the layer interfaces
+(lower bound; the compiled bytes-accessed figure is the upper line).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.launch.shapes import ShapeCell
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class FlopsReport:
+    model_flops: float       # 6ND-style headline number (per step, global)
+    analytic_flops: float    # op-walk estimate (per step, global)
+    param_bytes: float       # one full parameter read (bf16)
+    act_bytes: float         # layer-interface activation traffic (bf16)
+
+
+def _attn_layer_flops(cfg: ModelConfig, T: int, ctx: int) -> float:
+    """One attention block, forward: projections + score/value matmuls."""
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    proj = 2 * T * D * (H * hd + 2 * KV * hd) + 2 * T * H * hd * D
+    window = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+    quad = 2 * 2 * T * window * H * hd * 0.5   # causal halves the square
+    return proj + quad
+
+
+def _mlp_layer_flops(cfg: ModelConfig, T: int) -> float:
+    D = cfg.d_model
+    if cfg.is_moe:
+        f = 6 * T * cfg.top_k * D * cfg.moe_d_ff
+        if cfg.shared_expert_d_ff:
+            f += 6 * T * D * cfg.shared_expert_d_ff
+        f += 2 * T * D * cfg.n_experts      # router
+        return f
+    return 6 * T * D * cfg.d_ff
+
+
+def _rwkv_layer_flops(cfg: ModelConfig, T: int, chunk: int = 64) -> float:
+    D = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = D // K
+    proj = 2 * T * D * D * 5 + 2 * T * D * D         # r,k,v,g,o + w-lora-ish
+    # chunked WKV: per chunk 4C^2K + 4CKV + O(CK) per head
+    C = chunk
+    nc = max(T // C, 1)
+    rec = H * nc * (4 * C * C * K + 4 * C * K * K)
+    cmix = 2 * T * D * cfg.d_ff * 2 + 2 * T * D * D
+    return proj + rec + cmix
+
+
+def _mamba_layer_flops(cfg: ModelConfig, T: int, chunk: int = 64) -> float:
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    d_in_proj = 2 * d_inner + 2 * N + H
+    proj = 2 * T * D * d_in_proj + 2 * T * d_inner * D
+    conv = 2 * T * (d_inner + 2 * N) * 4
+    C = chunk
+    nc = max(T // C, 1)
+    rec = nc * (2 * C * C * N + H * (C * C + 2 * C * C * P + 4 * C * N * P))
+    return proj + conv + rec
+
+
+def _layer_flops(cfg: ModelConfig, T: int, ctx: int) -> float:
+    if cfg.arch_class == "rwkv":
+        return _rwkv_layer_flops(cfg, T)
+    if cfg.arch_class == "hybrid":
+        per_mamba = _mamba_layer_flops(cfg, T)
+        shared = _attn_layer_flops(cfg, T, ctx) + _mlp_layer_flops(cfg, T)
+        # one shared block per `period` mamba layers
+        return per_mamba + shared / cfg.shared_attn_period
+    return _attn_layer_flops(cfg, T, ctx) + _mlp_layer_flops(cfg, T)
+
+
+def analytic_flops(cfg: ModelConfig, cell: ShapeCell) -> FlopsReport:
+    B, S = cell.global_batch, cell.seq
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    N_param = cfg.param_count()
+
+    if cell.kind in ("train", "prefill"):
+        T = B * S
+        fwd = cfg.n_layers * _layer_flops(cfg, T, S) + 2 * T * D * Vp
+        if cfg.arch_class == "encdec":
+            Te = B * cfg.encoder_seq
+            fwd += cfg.n_encoder_layers * (
+                _attn_layer_flops(cfg, Te, cfg.encoder_seq)
+                + _mlp_layer_flops(cfg, Te))
+            # cross attention per decoder layer
+            fwd += cfg.n_layers * 2 * 2 * T * cfg.encoder_seq * cfg.n_heads \
+                * cfg.hd
+        total = 3 * fwd if cell.kind == "train" else fwd
+        if cell.kind == "train" and cfg.remat:
+            total += fwd  # full-block remat recomputes the forward once
+        model = (6 if cell.kind == "train" else 2)
+        n_active = N_param
+        if cfg.is_moe:
+            E, k = cfg.n_experts, cfg.top_k
+            expert_p = 3 * D * cfg.moe_d_ff * cfg.n_layers
+            n_active = N_param - (E - k) * expert_p
+        model_flops = model * n_active * T
+        act = 2 * cfg.n_layers * T * D * 2
+    else:  # decode: one token per sequence, context = cell.seq
+        T = B
+        ctx = S
+        fwd = cfg.n_layers * _layer_flops(cfg, T, ctx) + 2 * T * D * Vp
+        if cfg.arch_class in ("rwkv", "hybrid"):
+            # recurrent decode touches state, not context
+            fwd = cfg.n_layers * _layer_flops(cfg, T, 1) + 2 * T * D * Vp
+        total = fwd
+        n_active = N_param
+        if cfg.is_moe:
+            E, k = cfg.n_experts, cfg.top_k
+            expert_p = 3 * D * cfg.moe_d_ff * cfg.n_layers
+            n_active = N_param - (E - k) * expert_p
+        model_flops = 2 * n_active * T
+        # decode reads the KV cache / state once per step
+        if cfg.arch_class in ("dense", "moe", "vlm", "encdec"):
+            act = (cfg.n_layers * 2 * B * cfg.n_kv_heads * S * cfg.hd * 2
+                   + 2 * B * D * cfg.n_layers * 2)
+        else:
+            K = cfg.rwkv_head_dim
+            act = cfg.n_layers * B * (D // K) * K * K * 4 * 2
+
+    param_bytes = 2.0 * N_param      # one bf16 sweep
+    return FlopsReport(model_flops=float(model_flops),
+                       analytic_flops=float(total),
+                       param_bytes=float(param_bytes),
+                       act_bytes=float(act))

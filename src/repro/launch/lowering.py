@@ -1,0 +1,217 @@
+"""Shared lowering logic: build abstract args + shardings and jit-lower one
+(arch x shape x mesh) cell.  Used by dryrun.py, benchmarks/roofline.py, and
+the perf-iteration scripts — mesh-size agnostic (works on the 1-CPU debug
+mesh for tests and the 512-device placeholder topology for the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.batches import batch_shapes
+from repro.launch import sharding as shd
+from repro.launch.shapes import ShapeCell
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelBundle, get_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainState, init_train_state, \
+    make_train_step
+
+PyTree = Any
+
+
+def _abstract(tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _with_shardings(shapes: PyTree, shardings: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def train_state_shapes(bundle: ModelBundle) -> TrainState:
+    """Abstract TrainState via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(bundle, k), jax.random.PRNGKey(0))
+
+
+def train_state_shardings(bundle: ModelBundle, state_shapes: TrainState,
+                          mesh: Mesh) -> TrainState:
+    axes = bundle.param_axes()
+    p_shard = shd.shardings_for_tree(state_shapes.params, axes, mesh,
+                                     rules=shd.TRAIN_RULES)
+    oaxes = shd.opt_state_axes(axes, state_shapes.params, mesh,
+                               rules=shd.TRAIN_RULES)
+    m_shard = shd.shardings_for_tree(state_shapes.opt.m, oaxes, mesh,
+                                     rules=shd.TRAIN_ZERO1_RULES)
+    v_shard = shd.shardings_for_tree(state_shapes.opt.v, oaxes, mesh,
+                                     rules=shd.TRAIN_ZERO1_RULES)
+    scalar = shd.replicated(mesh)
+    opt_shard = state_shapes.opt._replace(step=scalar, m=m_shard, v=v_shard)
+    return TrainState(params=p_shard, opt=opt_shard, ef=None)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
+                ) -> Tuple[PyTree, PyTree]:
+    """ShapeDtypeStruct stand-ins + shardings for the cell's model inputs."""
+    if cell.kind in ("train", "prefill"):
+        shapes = batch_shapes(cfg, cell.global_batch, cell.seq)
+        axes = shd.batch_logical_axes(shapes)
+        shard = {k: NamedSharding(
+            mesh, shd.spec_for(tuple(shapes[k].shape), axes[k], mesh))
+            for k in shapes}
+        return shapes, shard
+    # decode: one token + the decode state
+    bundle = get_model(cfg)
+    state_shapes = jax.eval_shape(
+        lambda: bundle.init_decode_state(cell.global_batch, cell.seq,
+                                         cell.seq - 1))
+    axes = shd.decode_state_axes(cfg)
+    state_shard = jax.tree.map(
+        lambda s, ax: NamedSharding(
+            mesh, shd.spec_for(tuple(s.shape), ax, mesh)),
+        state_shapes, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    tok = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+    tok_shard = NamedSharding(
+        mesh, shd.spec_for((cell.global_batch,), ("batch",), mesh))
+    return {"token": tok, "state": state_shapes}, \
+        {"token": tok_shard, "state": state_shard}
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    arch: str
+    shape: str
+    mesh_name: str
+    lowered: Any
+    compiled: Any
+
+    def analyses(self) -> Dict:
+        cost = self.compiled.cost_analysis() or {}
+        mem = self.compiled.memory_analysis()
+        coll = collective_bytes(self.compiled.as_text())
+        out = {
+            "flops": float(cost.get("flops", 0.0)),
+            "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+            "collective_bytes": coll,
+            "memory": {
+                "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+        }
+        return out
+
+
+_COLL_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+                "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    cost_analysis() does not expose collective traffic, so we parse the
+    compiled module: each matched op contributes the byte size of its
+    result shape(s) (per participating device).
+    """
+    totals: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_str, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[op] = totals.get(op, 0.0) + nbytes
+        totals["total"] = totals.get("total", 0.0) + nbytes
+    return totals
+
+
+def lower_cell(arch: str, cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+               mesh_name: str = "", donate: bool = True,
+               seq_parallel: bool = True,
+               accum_steps=None) -> LoweredCell:
+    if seq_parallel and not cfg.act_pspec and cell.kind in ("train",
+                                                            "prefill"):
+        # Megatron-SP: residual stream sharded (batch -> data, seq -> model)
+        # at layer boundaries, so remat-saved activations are 16x smaller
+        bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        cfg = dataclasses.replace(cfg, act_pspec=(bax, "model"))
+    bundle = get_model(cfg)
+    with mesh:
+        if cell.kind == "train":
+            opt_cfg = AdamWConfig(
+                schedule="wsd" if "minicpm" in arch else "cosine")
+            # MoE cells microbatch 4x: expert capacity buffers dominate
+            # activation memory and scale with tokens-in-flight
+            accum = accum_steps if accum_steps else (4 if cfg.is_moe else 1)
+            step_fn = make_train_step(bundle, opt_cfg, accum_steps=accum)
+            state_shapes = train_state_shapes(bundle)
+            state_shard = train_state_shardings(bundle, state_shapes, mesh)
+            batch_sh, batch_shard = input_specs(cfg, cell, mesh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(state_shard, batch_shard),
+                out_shardings=(state_shard, shd.replicated(mesh)),
+                donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(_with_shardings(state_shapes, state_shard),
+                                   _with_shardings(batch_sh, batch_shard))
+        elif cell.kind == "prefill":
+            # serving stores bf16 weights (training keeps f32 masters);
+            # AutoQuant int8 stores halve this again (see repro.quant)
+            params_shapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16),
+                jax.eval_shape(bundle.init_params, jax.random.PRNGKey(0)))
+            p_shard = shd.shardings_for_tree(params_shapes,
+                                             bundle.param_axes(), mesh)
+            batch_sh, batch_shard = input_specs(cfg, cell, mesh)
+            jitted = jax.jit(bundle.forward,
+                             in_shardings=(p_shard, batch_shard))
+            lowered = jitted.lower(_with_shardings(params_shapes, p_shard),
+                                   _with_shardings(batch_sh, batch_shard))
+        else:  # decode
+            params_shapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16),
+                jax.eval_shape(bundle.init_params, jax.random.PRNGKey(0)))
+            p_shard = shd.shardings_for_tree(params_shapes,
+                                             bundle.param_axes(), mesh)
+            specs, shards = input_specs(cfg, cell, mesh)
+
+            def serve_step(params, token, state):
+                return bundle.decode_step(params, token, state)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, shards["token"], shards["state"]),
+                out_shardings=None,
+                donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(
+                _with_shardings(params_shapes, p_shard),
+                _with_shardings(specs["token"], shards["token"]),
+                _with_shardings(specs["state"], shards["state"]))
+        compiled = lowered.compile()
+    return LoweredCell(arch=arch, shape=cell.name, mesh_name=mesh_name,
+                       lowered=lowered, compiled=compiled)

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run process forces a 512-device host platform before any
+jax initialization; tests and benches keep the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod's 256 chips) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests on 1 CPU)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """The mesh axes a global-batch dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,35 @@
+"""The assigned input-shape cells and per-(arch x shape) applicability."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def skip_reason(cfg: ModelConfig, cell: ShapeCell) -> Optional[str]:
+    """None = runnable; else the reason this cell is skipped (documented)."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 500k-token decode needs sub-quadratic "
+                "state (run for ssm/hybrid only, per task spec)")
+    return None
+
+
+def runnable_cells(cfg: ModelConfig):
+    return [c for c in SHAPES.values() if skip_reason(cfg, c) is None]

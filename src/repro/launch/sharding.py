@@ -1,0 +1,196 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter / state tensor carries a tuple of logical axis names
+(`repro.models.common.ParamSpec.axes`); the rules below map each name to a
+mesh axis.  `spec_for` enforces divisibility: a dim whose size does not
+divide the mapped mesh axes is REPLICATED instead (e.g. paligemma's 10
+kv-heads never meet the 16-way model axis — its attention shards on the
+joined head*dim axes instead, which are always multiples of 16 here).
+
+TP scheme (Megatron): column-parallel up/gate + q/k/v projections
+("heads_joined"/"kv_joined"/"mlp" -> model), row-parallel down/out
+projections, vocab-parallel embed/unembed.  MoE experts shard on the
+intra-expert FFN axis ("expert_ff" -> model).  Decode KV caches shard their
+sequence axis over the model axis (context-parallel cache).  DP batch
+shards over ("pod", "data").
+
+ZeRO-1: optimizer moments additionally shard the first replicated,
+divisible dim over "data" (`zero1_axes`).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+BASE_RULES: Dict[str, Any] = {
+    "vocab": "model",
+    "mlp": "model",
+    "expert_ff": "model",
+    "heads_joined": "model",
+    "kv_joined": "model",
+    "cache_seq": "model",
+    "rwkv_k": "model",
+    "ssm_state": "model",
+    "batch": ("pod", "data"),
+    "embed": None,
+    "experts": None,
+    "layers": None,
+    "heads": "model",
+    "kv_heads": "model",   # cache prefers head sharding; falls back to seq
+    "head_dim": None,
+    "seq": None,
+    "groups": None,
+    "rwkv_heads": None,
+    "rwkv_v": None,
+    "ssm_heads": None,
+    "ssm_p": None,
+}
+
+
+def _mesh_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([_mesh_size(mesh, a) for a in axis]))
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def _present(mesh: Mesh, axis):
+    """Restrict a rule to the axes that exist in this mesh."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        return kept if kept else None
+    return axis if axis in mesh.axis_names else None
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh, rules: Optional[Dict] = None) -> P:
+    """PartitionSpec for one tensor, with divisibility fallback."""
+    rules = rules or BASE_RULES
+    assert len(shape) == len(axes), (shape, axes)
+    parts = []
+    used = set()
+    for dim, name in zip(shape, axes):
+        mapped = _present(mesh, rules.get(name)) if name else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        size = _mesh_size(mesh, mapped)
+        flat = mapped if isinstance(mapped, tuple) else (mapped,)
+        if dim % size != 0 or any(a in used for a in flat):
+            parts.append(None)        # replicate: non-divisible or axis reuse
+        else:
+            parts.append(mapped)
+            used.update(flat)
+    return P(*parts)
+
+
+def shardings_for_tree(shapes: PyTree, axes: PyTree, mesh: Mesh,
+                       rules: Optional[Dict] = None) -> PyTree:
+    """NamedSharding tree parallel to a ShapeDtypeStruct tree."""
+
+    def one(sds, ax):
+        return NamedSharding(mesh, spec_for(tuple(sds.shape), ax, mesh, rules))
+
+    return jax.tree.map(one, shapes, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def zero1_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+               mesh: Mesh, rules: Optional[Dict] = None
+               ) -> Tuple[Optional[str], ...]:
+    """Optimizer-moment axes: param axes + 'data' on one replicated dim."""
+    rules = rules or BASE_RULES
+    data = _mesh_size(mesh, "data")
+    out = list(axes)
+    for i, (dim, name) in enumerate(zip(shape, axes)):
+        mapped = _present(mesh, rules.get(name)) if name else None
+        if mapped is None and dim % data == 0 and dim >= data:
+            out[i] = "zero1"
+            break
+    return tuple(out)
+
+
+ZERO1_RULES = dict(BASE_RULES, zero1="data")
+
+# Training rules: FSDP-style 2D weight sharding — the "embed" (d_model) dim
+# of every weight additionally shards over the data axis, so a 47B Mixtral's
+# parameters + moments fit 256 chips (XLA inserts the per-layer all-gather /
+# reduce-scatter pair, the standard TP+FSDP hybrid).  Serving keeps weights
+# TP-only ("embed" replicated) for latency.
+TRAIN_RULES = dict(BASE_RULES, embed=("pod", "data"))
+TRAIN_ZERO1_RULES = dict(TRAIN_RULES, zero1="data")
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# batch / decode-state logical axes
+# ---------------------------------------------------------------------------
+
+def batch_logical_axes(batch_shapes: Dict) -> Dict:
+    out = {}
+    for k, sds in batch_shapes.items():
+        if k in ("tokens", "labels", "mask"):
+            out[k] = ("batch", "seq")
+        elif k == "patch_embeds":
+            out[k] = ("batch", "seq", "embed")
+        elif k == "frames":
+            out[k] = ("batch", "seq", "embed")
+        else:
+            out[k] = tuple([None] * len(sds.shape))
+    return out
+
+
+def decode_state_axes(cfg) -> Dict:
+    """Logical axes for repro.models.lm/encdec decode states."""
+    if cfg.arch_class in ("dense", "moe", "vlm"):
+        kv = ("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+        if getattr(cfg, "kv_cache_dtype", "bf16") == "int8":
+            sc = ("layers", "batch", "kv_heads", "cache_seq", None)
+            return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc,
+                    "length": ()}
+        return {"k": kv, "v": kv, "length": ()}
+    if cfg.arch_class == "rwkv":
+        return {
+            "s": ("layers", "batch", "rwkv_heads", "rwkv_k", "rwkv_v"),
+            "x_att": ("layers", "batch", "embed"),
+            "x_ffn": ("layers", "batch", "embed"),
+            "length": (),
+        }
+    if cfg.arch_class == "hybrid":
+        return {
+            "s": ("layers", "batch", "ssm_heads", "ssm_state", "ssm_p"),
+            "conv": ("layers", "batch", None, "heads_joined"),
+            "attn_k": ("groups", "batch", "kv_heads", "cache_seq", "head_dim"),
+            "attn_v": ("groups", "batch", "kv_heads", "cache_seq", "head_dim"),
+            "length": (),
+        }
+    if cfg.arch_class == "encdec":
+        kv = ("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+        enc = ("layers", "batch", "kv_heads", None, "head_dim")
+        return {"k": kv, "v": kv, "cross_k": enc, "cross_v": enc,
+                "length": ()}
+    raise ValueError(cfg.arch_class)
+
+
+def opt_state_axes(param_axes_tree: PyTree, param_shapes: PyTree,
+                   mesh: Mesh, rules: Optional[Dict] = None) -> Any:
+    """Axes for OptState(m, v) with ZeRO-1 'data' sharding."""
+    def one(ax, sds):
+        return zero1_axes(ax, tuple(sds.shape), mesh, rules)
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(one, param_axes_tree, param_shapes, is_leaf=is_axes)

@@ -1,0 +1,101 @@
+"""Training launcher: end-to-end driver with checkpoint/restart.
+
+On the real cluster each host runs this under `jax.distributed.initialize`
+with the production mesh; on this container it runs the same code on the
+debug mesh (1 device) with reduced configs — the fault-tolerance loop,
+checkpointing, and data sharding are identical code paths.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.batches import TokenStream
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models.registry import get_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "wsd", "constant"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 gradient compression (error feedback)")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if "minicpm" in args.arch and args.schedule == "cosine":
+        args.schedule = "wsd"       # the arch's signature schedule
+    bundle = get_model(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_debug_mesh())
+
+    opt_cfg = AdamWConfig(lr=args.lr, schedule=args.schedule,
+                          warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    step_fn = make_train_step(bundle, opt_cfg,
+                              compress_grads=args.compress_grads,
+                              accum_steps=args.accum)
+    stream = TokenStream(cfg, args.batch, args.seq)
+
+    with mesh:
+        state = init_train_state(bundle, jax.random.PRNGKey(0),
+                                 compress_grads=args.compress_grads)
+        start_step = 0
+        saver = None
+        if args.ckpt_dir:
+            saver = ckpt.AsyncCheckpointer(args.ckpt_dir)
+            restored, step0 = ckpt.restore_latest(args.ckpt_dir, state)
+            if restored is not None:
+                state = restored
+                start_step = step0 + 1
+                print(f"resumed from step {step0}", flush=True)
+
+        jitted = jax.jit(step_fn, donate_argnums=(0,))
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            batch = stream.batch_at(step)
+            state, metrics = jitted(state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                print(f"step {step:5d}  loss {loss:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"({dt:.1f}s)", flush=True)
+                if not np.isfinite(loss):
+                    raise RuntimeError("loss diverged")
+            if saver and step > 0 and step % args.ckpt_every == 0:
+                saver.save(step, state)
+        if saver:
+            saver.save(args.steps - 1, state)
+            saver.wait()
+    print("done")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,286 @@
+"""Attention: GQA/MQA with RoPE, optional qk-norm and sliding window.
+
+Two entry points:
+  * `attend_train`  — full-sequence causal attention (training / prefill)
+  * `attend_decode` — one new token against a KV cache (serve_step)
+
+Layouts: activations (B, S, D); q (B, S, H, hd); kv (B, S, KV, hd);
+cache (B, KV, S_max, hd).  Logical axes: H/KV -> "heads"/"kv_heads",
+hd -> "head_dim", S -> "seq".
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamSpec, dense, rms_norm
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def attn_param_specs(cfg: ModelConfig, stacked: int | None = None) -> Dict:
+    """Projection params for one attention block (optionally layer-stacked)."""
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    L = (stacked,) if stacked else ()
+    Lx = ("layers",) if stacked else ()
+    specs = {
+        "wq": ParamSpec(L + (D, H * hd), Lx + ("embed", "heads_joined")),
+        "wk": ParamSpec(L + (D, KV * hd), Lx + ("embed", "kv_joined")),
+        "wv": ParamSpec(L + (D, KV * hd), Lx + ("embed", "kv_joined")),
+        "wo": ParamSpec(L + (H * hd, D), Lx + ("heads_joined", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec(L + (hd,), Lx + (None,), init="ones")
+        specs["k_norm"] = ParamSpec(L + (hd,), Lx + (None,), init="ones")
+    return specs
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, KV, S_max, hd) — bf16, or int8 codes
+    v: jax.Array        # (B, KV, S_max, hd)
+    length: jax.Array   # () int32 — tokens already cached
+    # int8 cache (paper technique on decode bytes): per-(pos, head) absmax
+    # scales; None for the bf16 cache
+    k_scale: Optional[jax.Array] = None   # (B, KV, S_max, 1) f32
+    v_scale: Optional[jax.Array] = None
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, hd)
+
+
+def _causal_mask(S: int, window: int, prefix: int = 0) -> jax.Array:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = j <= i
+    if window > 0:
+        mask &= (i - j) < window
+    if prefix > 0:
+        # prefix-LM (PaliGemma): the image/prompt prefix attends bidirectionally
+        mask |= j < prefix
+    return mask                                          # (S, S) bool
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _split_heads(dense(x, p["wq"]), H, hd)
+    k = _split_heads(dense(x, p["wk"]), KV, hd)
+    v = _split_heads(dense(x, p["wv"]), KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# above this many tokens, attention runs query-chunked (memory O(Cq * S)
+# per step instead of O(S^2)) — mandatory for the 32k prefill shapes
+QUERY_CHUNK = 1024
+
+
+def _attend_block(q, k, v, q_pos, k_pos, cfg: ModelConfig, causal: bool,
+                  prefix_len: int):
+    """Attention for one query block against full K/V.
+
+    q: (B, KV, G, Cq, hd); k, v: (B, KV, S, hd); *_pos: absolute positions.
+    Exact softmax — each query row sees its whole key range.
+    """
+    scale = cfg.hd ** -0.5
+    logits = jnp.einsum("bkgsh,bkth->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        i = q_pos[:, None]
+        j = k_pos[None, :]
+        mask = j <= i
+        if cfg.sliding_window > 0:
+            mask &= (i - j) < cfg.sliding_window
+        if prefix_len > 0:
+            mask |= j < prefix_len
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,bkth->bkgsh", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out
+
+
+def attend_train(x, p, cfg: ModelConfig, positions=None,
+                 causal: bool = True, prefix_len: int = 0) -> jax.Array:
+    """Full-sequence attention. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    groups = H // KV
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(x, p, cfg, positions)
+
+    # (B, KV, G, S, hd) grouped query layout
+    q = q.reshape(B, S, KV, groups, hd).transpose(0, 2, 3, 1, 4)
+    k = k.transpose(0, 2, 1, 3)                          # (B, KV, S, hd)
+    v = v.transpose(0, 2, 1, 3)
+    pos = jnp.arange(S)
+
+    if S <= QUERY_CHUNK or S % QUERY_CHUNK != 0:
+        out = _attend_block(q, k, v, pos, pos, cfg, causal, prefix_len)
+    else:
+        # scan over query chunks: peak live logits are (.., Cq, S), not (S, S)
+        n_chunks = S // QUERY_CHUNK
+        q_chunks = q.reshape(B, KV, groups, n_chunks, QUERY_CHUNK, hd)
+        q_chunks = jnp.moveaxis(q_chunks, 3, 0)          # (NC, B, KV, G, Cq, hd)
+        pos_chunks = pos.reshape(n_chunks, QUERY_CHUNK)
+
+        @jax.checkpoint
+        def step(_, inp):
+            # checkpointed: backward recomputes this chunk's (Cq, S) probs
+            # instead of stacking them across all chunks (which would be the
+            # full S x S matrix again)
+            qc, pc = inp
+            return None, _attend_block(qc, k, v, pc, pos, cfg, causal,
+                                       prefix_len)
+
+        _, outs = jax.lax.scan(step, None, (q_chunks, pos_chunks))
+        out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, groups, S, hd)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd).astype(x.dtype)
+    return dense(out, p["wo"])
+
+
+def attend_decode(x, p, cfg: ModelConfig, cache: KVCache
+                  ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, D); returns (out (B, 1, D), new cache)."""
+    B, S1, D = x.shape
+    assert S1 == 1
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    groups = H // KV
+    pos = cache.length                                    # scalar
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+
+    k_new = k.transpose(0, 2, 1, 3)                       # (B, KV, 1, hd)
+    v_new = v.transpose(0, 2, 1, 3)
+    quantized = cache.k_scale is not None
+
+    def _qvec(x):
+        sc = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+        sc = jnp.where(sc == 0, 1.0, sc).astype(jnp.float32)
+        q_ = jnp.clip(jnp.rint(x.astype(jnp.float32) / sc),
+                      -128, 127).astype(jnp.int8)
+        return q_, sc
+
+    if quantized:
+        kq, ks = _qvec(k_new)
+        vq, vs = _qvec(v_new)
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, pos, axis=2)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, pos, axis=2)
+        ks_all = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, pos,
+                                                     axis=2)
+        vs_all = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, pos,
+                                                     axis=2)
+        # fused dequant on read: int8 codes * f32 scale -> bf16
+        k_eff = (k_all.astype(jnp.float32) * ks_all).astype(jnp.bfloat16)
+        v_eff = (v_all.astype(jnp.float32) * vs_all).astype(jnp.bfloat16)
+    else:
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), pos, axis=2)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), pos, axis=2)
+        ks_all = vs_all = None
+        k_eff, v_eff = k_all, v_all
+
+    q = q.reshape(B, 1, KV, groups, hd).transpose(0, 2, 3, 1, 4)  # (B,KV,G,1,hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bkgsh,bkth->bkgst", q, k_eff.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    S_max = k_all.shape[2]
+    idx = jnp.arange(S_max)
+    valid = idx <= pos
+    if cfg.sliding_window > 0:
+        valid &= (pos - idx) < cfg.sliding_window
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_eff.dtype)
+    out = jnp.einsum("bkgst,bkth->bkgsh", probs, v_eff,
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd).astype(x.dtype)
+    out = dense(out, p["wo"])
+    return out, KVCache(k=k_all, v=v_all, length=cache.length + 1,
+                        k_scale=ks_all, v_scale=vs_all)
+
+
+def cross_attend(x, p, cfg: ModelConfig, enc_k, enc_v) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder KV (B, KV, T, hd).
+
+    Query-chunked like attend_train: at 32k decoder tokens the full
+    (S, T_enc) probability tensor would be hundreds of GB.
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    groups = H // KV
+    q = _split_heads(dense(x, p["wq"]), H, hd)
+    q = q.reshape(B, S, KV, groups, hd).transpose(0, 2, 3, 1, 4)
+    scale = hd ** -0.5
+    k = enc_k.astype(q.dtype)
+
+    def block(qc):
+        logits = jnp.einsum("bkgsh,bkth->bkgst", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        probs = jax.nn.softmax(logits, axis=-1).astype(enc_v.dtype)
+        return jnp.einsum("bkgst,bkth->bkgsh", probs, enc_v,
+                          preferred_element_type=jnp.float32)
+
+    if S <= QUERY_CHUNK or S % QUERY_CHUNK != 0:
+        out = block(q)
+    else:
+        n_chunks = S // QUERY_CHUNK
+        q_chunks = jnp.moveaxis(
+            q.reshape(B, KV, groups, n_chunks, QUERY_CHUNK, hd), 3, 0)
+
+        @jax.checkpoint
+        def step(_, qc):
+            return None, block(qc)
+
+        _, outs = jax.lax.scan(step, None, q_chunks)
+        out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, groups, S, hd)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd).astype(x.dtype)
+    return dense(out, p["wo"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, KV, max_len, hd), dtype),
+        v=jnp.zeros((batch, KV, max_len, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

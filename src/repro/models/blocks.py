@@ -1,0 +1,263 @@
+"""Per-layer blocks: dense transformer, MoE, RWKV6, Mamba2 (+ shared attn).
+
+Every block type provides
+  * `<kind>_specs(cfg, stacked)` — ParamSpec tree (stacked on the layer axis)
+  * `<kind>_fwd(x, p, cfg, ...)` — full-sequence forward (train / prefill)
+  * `<kind>_step(x, p, cfg, state)` — one-token decode with carried state
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.attention import (KVCache, attend_decode, attend_train,
+                                    attn_param_specs)
+from repro.models.common import (ModelConfig, ParamSpec, dense, rms_norm,
+                                 swiglu)
+from repro.models.moe import moe_ffn, moe_param_specs
+
+# ---------------------------------------------------------------------------
+# dense / MoE transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def transformer_specs(cfg: ModelConfig, stacked: int | None) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    L = (stacked,) if stacked else ()
+    Lx = ("layers",) if stacked else ()
+    specs = {
+        "ln_attn": ParamSpec(L + (D,), Lx + ("embed",), init="ones"),
+        "ln_mlp": ParamSpec(L + (D,), Lx + ("embed",), init="ones"),
+        "attn": attn_param_specs(cfg, stacked),
+    }
+    if cfg.is_moe:
+        specs["moe"] = moe_param_specs(cfg, stacked)
+    else:
+        specs["mlp"] = {
+            "w_gate": ParamSpec(L + (D, F), Lx + ("embed", "mlp")),
+            "w_up": ParamSpec(L + (D, F), Lx + ("embed", "mlp")),
+            "w_down": ParamSpec(L + (F, D), Lx + ("mlp", "embed")),
+        }
+    return specs
+
+
+def transformer_fwd(x, p, cfg: ModelConfig, positions=None,
+                    prefix_len: int = 0):
+    h = attend_train(rms_norm(x, p["ln_attn"], cfg.norm_eps), p["attn"], cfg,
+                     positions=positions, prefix_len=prefix_len)
+    x = x + cfg.residual_scale * h
+    hin = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.is_moe:
+        h = moe_ffn(hin, p["moe"], cfg)
+    else:
+        h = swiglu(hin, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                   p["mlp"]["w_down"])
+    return x + cfg.residual_scale * h
+
+
+def transformer_step(x, p, cfg: ModelConfig, cache: KVCache
+                     ) -> Tuple[jax.Array, KVCache]:
+    h, cache = attend_decode(rms_norm(x, p["ln_attn"], cfg.norm_eps),
+                             p["attn"], cfg, cache)
+    x = x + cfg.residual_scale * h
+    hin = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.is_moe:
+        h = moe_ffn(hin, p["moe"], cfg)
+    else:
+        h = swiglu(hin, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                   p["mlp"]["w_down"])
+    return x + cfg.residual_scale * h, cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) block
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 64
+
+
+def rwkv_specs(cfg: ModelConfig, stacked: int | None) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H = D // cfg.rwkv_head_dim
+    K = cfg.rwkv_head_dim
+    L = (stacked,) if stacked else ()
+    Lx = ("layers",) if stacked else ()
+    return {
+        "ln1": ParamSpec(L + (D,), Lx + ("embed",), init="ones"),
+        "ln2": ParamSpec(L + (D,), Lx + ("embed",), init="ones"),
+        "tmix": {
+            # static token-shift interpolators (data-dependent decay keeps
+            # its LoRA below — the Finch signature feature)
+            "mu_r": ParamSpec(L + (D,), Lx + ("embed",), init="small"),
+            "mu_k": ParamSpec(L + (D,), Lx + ("embed",), init="small"),
+            "mu_v": ParamSpec(L + (D,), Lx + ("embed",), init="small"),
+            "mu_g": ParamSpec(L + (D,), Lx + ("embed",), init="small"),
+            "mu_w": ParamSpec(L + (D,), Lx + ("embed",), init="small"),
+            "w_r": ParamSpec(L + (D, D), Lx + ("embed", "heads_joined")),
+            "w_k": ParamSpec(L + (D, D), Lx + ("embed", "heads_joined")),
+            "w_v": ParamSpec(L + (D, D), Lx + ("embed", "heads_joined")),
+            "w_g": ParamSpec(L + (D, D), Lx + ("embed", "heads_joined")),
+            "w_o": ParamSpec(L + (D, D), Lx + ("heads_joined", "embed")),
+            "w0": ParamSpec(L + (D,), Lx + (None,), init="small"),
+            "w_lora_a": ParamSpec(L + (D, RWKV_LORA), Lx + ("embed", None)),
+            "w_lora_b": ParamSpec(L + (RWKV_LORA, D), Lx + (None, None)),
+            "u": ParamSpec(L + (H, K), Lx + (None, None), init="small"),
+            "ln_x": ParamSpec(L + (D,), Lx + ("embed",), init="ones"),
+        },
+        "cmix": {
+            "mu_k": ParamSpec(L + (D,), Lx + ("embed",), init="small"),
+            "mu_r": ParamSpec(L + (D,), Lx + ("embed",), init="small"),
+            "w_k": ParamSpec(L + (D, F), Lx + ("embed", "mlp")),
+            "w_v": ParamSpec(L + (F, D), Lx + ("mlp", "embed")),
+            "w_r": ParamSpec(L + (D, D), Lx + ("embed", "heads_joined")),
+        },
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """x_{t-1} along seq; position 0 takes the carried last token."""
+    shifted = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def _rwkv_decay(xw, p):
+    """Data-dependent per-channel decay in (0, 1)."""
+    lora = jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32),
+                      p["w_lora_a"].astype(jnp.float32))
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora),
+                      p["w_lora_b"].astype(jnp.float32))
+    return jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + lora))
+
+
+def rwkv_tmix(x, p, cfg: ModelConfig, x_last, s0, chunked: bool):
+    B, T, D = x.shape
+    K = cfg.rwkv_head_dim
+    H = D // K
+    xs = _token_shift(x, x_last)
+    dx = xs - x
+
+    def mix(mu):
+        return x + dx * mu.astype(x.dtype)
+
+    r = dense(mix(p["mu_r"]), p["w_r"]).reshape(B, T, H, K)
+    k = dense(mix(p["mu_k"]), p["w_k"]).reshape(B, T, H, K)
+    v = dense(mix(p["mu_v"]), p["w_v"]).reshape(B, T, H, K)
+    g = dense(mix(p["mu_g"]), p["w_g"])
+    w = _rwkv_decay(mix(p["mu_w"]), p).reshape(B, T, H, K)
+
+    fn = ssm.wkv6_chunked if chunked else ssm.wkv6_scan
+    out, sT = fn(r, k, v, w, p["u"].astype(jnp.float32), s0)
+    out = out.reshape(B, T, D)
+    # per-head group norm (ln_x), then gate
+    out = out.reshape(B, T, H, K)
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, T, D)
+    out = out * p["ln_x"].astype(jnp.float32)
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return dense(out, p["w_o"]), x[:, -1, :], sT
+
+
+def rwkv_cmix(x, p, x_last):
+    xs = _token_shift(x, x_last)
+    dx = xs - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = dense(xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(dense(xr, p["w_r"]).astype(jnp.float32)).astype(x.dtype)
+    return r * dense(k, p["w_v"]), x[:, -1, :]
+
+
+def rwkv_fwd(x, p, cfg: ModelConfig, state=None, chunked: bool = True):
+    """state = dict(s, x_att, x_ffn) or None (zeros). Returns (x, new state)."""
+    B, T, D = x.shape
+    K = cfg.rwkv_head_dim
+    H = D // K
+    if state is None:
+        state = {
+            "s": jnp.zeros((B, H, K, K), jnp.float32),
+            "x_att": jnp.zeros((B, D), x.dtype),
+            "x_ffn": jnp.zeros((B, D), x.dtype),
+        }
+    h, x_att, sT = rwkv_tmix(rms_norm(x, p["ln1"], cfg.norm_eps), p["tmix"],
+                             cfg, state["x_att"], state["s"], chunked)
+    x = x + h
+    h, x_ffn = rwkv_cmix(rms_norm(x, p["ln2"], cfg.norm_eps), p["cmix"],
+                         state["x_ffn"])
+    x = x + h
+    return x, {"s": sT, "x_att": x_att, "x_ffn": x_ffn}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+CONV_W = 4
+
+
+def mamba_dims(cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    d_in_proj = 2 * d_inner + 2 * N + H     # z, xBC, dt
+    return d_inner, H, N, conv_dim, d_in_proj
+
+
+def mamba_specs(cfg: ModelConfig, stacked: int | None) -> Dict:
+    D = cfg.d_model
+    d_inner, H, N, conv_dim, d_in_proj = mamba_dims(cfg)
+    L = (stacked,) if stacked else ()
+    Lx = ("layers",) if stacked else ()
+    return {
+        "ln": ParamSpec(L + (D,), Lx + ("embed",), init="ones"),
+        "in_proj": ParamSpec(L + (D, d_in_proj), Lx + ("embed", "heads_joined")),
+        "conv_w": ParamSpec(L + (CONV_W, conv_dim), Lx + (None, "heads_joined"),
+                            init="small"),
+        "conv_b": ParamSpec(L + (conv_dim,), Lx + ("heads_joined",), init="zeros"),
+        "a_log": ParamSpec(L + (H,), Lx + (None,), init="small"),
+        "d_skip": ParamSpec(L + (H,), Lx + (None,), init="ones"),
+        "dt_bias": ParamSpec(L + (H,), Lx + (None,), init="small"),
+        "ln_y": ParamSpec(L + (d_inner,), Lx + ("heads_joined",), init="ones"),
+        "out_proj": ParamSpec(L + (d_inner, D), Lx + ("heads_joined", "embed")),
+    }
+
+
+def mamba_fwd(x, p, cfg: ModelConfig, state=None, chunked: bool = True):
+    """state = dict(s (B,H,N,P), conv (B,CONV_W-1,conv_dim)) or None."""
+    B, T, D = x.shape
+    d_inner, H, N, conv_dim, _ = mamba_dims(cfg)
+    P = cfg.ssm_head_dim
+    if state is None:
+        state = {
+            "s": jnp.zeros((B, H, N, P), jnp.float32),
+            "conv": jnp.zeros((B, CONV_W - 1, conv_dim), x.dtype),
+        }
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = dense(xin, p["in_proj"])
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+
+    xBC, conv_state = ssm.causal_conv1d(xBC, p["conv_w"], state["conv"])
+    xBC = xBC + p["conv_b"].astype(xBC.dtype)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, T, H, P)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,T,H)
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32))[None, None] * dt)
+
+    fn = ssm.ssd_chunked if chunked else ssm.ssd_scan
+    y, sT = fn(xs, dt, a, Bm, Cm, state["s"])
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2's norm-before-out with z gating)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["ln_y"], cfg.norm_eps)
+    return x + dense(y, p["out_proj"]), {"s": sT, "conv": conv_state}

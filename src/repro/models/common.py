@@ -1,0 +1,224 @@
+"""Model configuration + shared neural-net primitives.
+
+Conventions
+-----------
+* Parameters are nested dicts of jnp arrays.  Per-layer parameters are
+  STACKED on a leading layer axis and consumed with `jax.lax.scan`, so HLO
+  size and compile time are O(1) in depth (mandatory for 40L x 512-device
+  dry-runs).
+* Every parameter has *logical axes* (a tuple of names parallel to its
+  shape).  `repro.launch.sharding` maps logical axes -> mesh axes with a
+  divisibility check (non-divisible dims fall back to replication).
+* Activations are bf16, parameters f32 (cast to bf16 at use), matmuls
+  accumulate f32 — the usual TPU mixed-precision discipline.  The paper's
+  technique then *narrows* selected tensors further via repro.quant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD_MULTIPLE = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_class: str                 # dense | moe | rwkv | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    # attention features
+    qk_norm: bool = False
+    sliding_window: int = 0         # 0 = full causal
+    rope_theta: float = 10_000.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # SSM / RWKV
+    ssm_state: int = 0              # mamba2 N
+    ssm_head_dim: int = 64          # mamba2 P
+    ssm_expand: int = 2
+    rwkv_head_dim: int = 64
+    # hybrid (zamba2): one shared attention block applied every k ssm layers
+    shared_attn_period: int = 0
+    # enc-dec (whisper)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500         # whisper conv-frontend output length
+    # vlm (paligemma)
+    n_image_tokens: int = 0
+    # miniCPM-style mu-parametrization scales
+    emb_scale: float = 1.0
+    residual_scale: float = 1.0
+    logit_scale: float = 1.0
+    # numerics
+    norm_eps: float = 1e-6
+    remat: bool = True
+    # unroll factor for the layer scan: 1 = while-loop (fast compile);
+    # True/n_layers = fully unrolled (exact cost_analysis for roofline)
+    scan_unroll: int = 1
+    # activation sharding constraint for (batch, seq) dims of the residual
+    # stream at layer boundaries, e.g. (("pod","data"), "model") = Megatron
+    # sequence parallelism. () = unconstrained (single-host tests).
+    act_pspec: tuple = ()
+    # cast >=2D params before the forward pass: "bf16" halves the FSDP
+    # all-gather bytes, "int8" quarters them vs f32 (paper technique on the
+    # collective wire: gather codes+scales, dequantize after — QAT-style
+    # straight-through gradients). False/"" = f32 gathers.
+    train_cast_bf16: bool = False
+    train_weight_cast: str = ""    # "" | "bf16" | "int8"
+    # KV cache storage: "bf16" or "int8" (paper technique on decode bytes;
+    # per-vector absmax scales, dequant fused into the attention read)
+    kv_cache_dtype: str = "bf16"
+    # quantization policy hook (repro.quant); None = bf16 everywhere
+    quant_recipe: Optional[str] = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return ((self.vocab_size + VOCAB_PAD_MULTIPLE - 1)
+                // VOCAB_PAD_MULTIPLE) * VOCAB_PAD_MULTIPLE
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_class == "rwkv"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Supports O(1)-state decode (long_500k eligibility)."""
+        return self.arch_class in ("rwkv", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate dense parameter count (reporting/roofline only)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_padded, self.n_layers
+        hd, H, KV = self.hd, self.n_heads, self.n_kv_heads
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+        if self.arch_class == "rwkv":
+            per_layer = 4 * D * D + 3 * D * self.d_ff // 1  # tmix + cmix approx
+        elif self.is_moe:
+            ffn = 3 * D * self.moe_d_ff * self.n_experts + D * self.n_experts
+            if self.shared_expert_d_ff:
+                ffn += 3 * D * self.shared_expert_d_ff
+            per_layer = attn + ffn
+        else:
+            per_layer = attn + 3 * D * F
+        total = L * per_layer + 2 * V * D
+        if self.n_encoder_layers:
+            total += self.n_encoder_layers * (attn + 2 * D * F)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# logical-axis bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == ndim
+    init: str = "normal"              # normal | zeros | ones | small
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_param(key, spec: ParamSpec, dtype=jnp.float32) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    scale = 0.02 if spec.init == "normal" else 0.006
+    # fan-in scaled normal
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = min(scale, 1.0 / math.sqrt(max(fan_in, 1)))
+    return std * jax.random.normal(key, spec.shape, dtype)
+
+
+def init_tree(key, specs: PyTree, dtype=jnp.float32) -> PyTree:
+    leaves, treedef = jax.tree.flatten(specs,
+                                       is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(specs: PyTree) -> PyTree:
+    """The logical-axis tree parallel to the param tree."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def shape_tree(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def constrain_act(x, cfg: "ModelConfig"):
+    """Sequence-parallel sharding constraint on a (B, S, ...) activation."""
+    if not cfg.act_pspec:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = list(cfg.act_pspec)[:x.ndim] + [None] * (x.ndim - len(cfg.act_pspec))
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight + bias
+    return out.astype(x.dtype)
+
+
+def dense(x, w, compute_dtype=jnp.bfloat16):
+    """x @ w with bf16 compute, f32 accumulation."""
+    return jax.lax.dot_general(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(compute_dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    return dense(jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = dense(x, w_up) + b_up.astype(jnp.bfloat16)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(jnp.bfloat16)
+    return dense(h, w_down) + b_down.astype(jnp.bfloat16)

@@ -1,0 +1,203 @@
+"""Encoder-decoder LM (whisper-medium backbone).
+
+Per the assignment the modality frontend is a STUB: `input_specs` feeds
+precomputed conv-frontend frame embeddings (B, T_enc, D) directly to the
+encoder.  The backbone (24L enc + 24L dec, d=1024, 16H, ff=4096) is faithful;
+norm/MLP style follows the modern RMSNorm/SwiGLU discipline used across this
+framework (recorded as a deviation in DESIGN.md — the assignment pins the
+backbone dims, not the 2022 norm flavor).
+
+Encoder: bidirectional self-attention over frames.
+Decoder: causal self-attention + cross-attention over encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.attention import (KVCache, attend_decode, attend_train,
+                                    attn_param_specs, cross_attend)
+from repro.models.common import (ModelConfig, ParamSpec, axes_tree,
+                                 constrain_act, dense, init_tree, rms_norm,
+                                 shape_tree, swiglu)
+
+
+def _mlp_specs(cfg: ModelConfig, stacked: int):
+    D, F = cfg.d_model, cfg.d_ff
+    L, Lx = (stacked,), ("layers",)
+    return {
+        "w_gate": ParamSpec(L + (D, F), Lx + ("embed", "mlp")),
+        "w_up": ParamSpec(L + (D, F), Lx + ("embed", "mlp")),
+        "w_down": ParamSpec(L + (F, D), Lx + ("mlp", "embed")),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+    return {
+        "embed": ParamSpec((Vp, D), ("vocab", "embed")),
+        "enc_blocks": {
+            "ln_attn": ParamSpec((Le, D), ("layers", "embed"), init="ones"),
+            "ln_mlp": ParamSpec((Le, D), ("layers", "embed"), init="ones"),
+            "attn": attn_param_specs(cfg, stacked=Le),
+            "mlp": _mlp_specs(cfg, Le),
+        },
+        "enc_norm": ParamSpec((D,), ("embed",), init="ones"),
+        "dec_blocks": {
+            "ln_attn": ParamSpec((Ld, D), ("layers", "embed"), init="ones"),
+            "ln_cross": ParamSpec((Ld, D), ("layers", "embed"), init="ones"),
+            "ln_mlp": ParamSpec((Ld, D), ("layers", "embed"), init="ones"),
+            "attn": attn_param_specs(cfg, stacked=Ld),
+            "cross": attn_param_specs(cfg, stacked=Ld),
+            "mlp": _mlp_specs(cfg, Ld),
+        },
+        "final_norm": ParamSpec((D,), ("embed",), init="ones"),
+        "unembed": ParamSpec((D, Vp), ("embed", "vocab")),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    return init_tree(key, param_specs(cfg))
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    return axes_tree(param_specs(cfg))
+
+
+def encode(params, frames, cfg: ModelConfig) -> jax.Array:
+    """frames (B, T_enc, D) [conv-frontend stub output] -> (B, T_enc, D)."""
+    x = frames.astype(jnp.bfloat16)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def body(h, lp):
+        a = attend_train(rms_norm(h, lp["ln_attn"], cfg.norm_eps), lp["attn"],
+                         cfg, positions=positions, causal=False)
+        h = h + a
+        m = swiglu(rms_norm(h, lp["ln_mlp"], cfg.norm_eps),
+                   lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return constrain_act(h + m, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        unroll=cfg.scan_unroll)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def cross_kv(params, enc_out, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Precompute per-decoder-layer cross-attention KV: (L, B, KV, T, hd)."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    Bsz, T, D = enc_out.shape
+
+    def body(_, lp):
+        k = dense(enc_out, lp["cross"]["wk"]).reshape(Bsz, T, KV, hd)
+        v = dense(enc_out, lp["cross"]["wv"]).reshape(Bsz, T, KV, hd)
+        return None, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_blocks"])
+    return ks, vs
+
+
+def _decode_backbone(params, tokens, enc_out, cfg: ModelConfig) -> jax.Array:
+    """Decoder blocks on embedded tokens — everything before the unembed."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    Bsz, T, D = enc_out.shape
+
+    def body(h, lp):
+        a = attend_train(rms_norm(h, lp["ln_attn"], cfg.norm_eps), lp["attn"],
+                         cfg, positions=positions, causal=True)
+        h = h + a
+        ek = dense(enc_out, lp["cross"]["wk"]).reshape(Bsz, T, KV, hd)
+        ev = dense(enc_out, lp["cross"]["wv"]).reshape(Bsz, T, KV, hd)
+        c = cross_attend(rms_norm(h, lp["ln_cross"], cfg.norm_eps),
+                         lp["cross"], cfg, ek.transpose(0, 2, 1, 3),
+                         ev.transpose(0, 2, 1, 3))
+        h = h + c
+        m = swiglu(rms_norm(h, lp["ln_mlp"], cfg.norm_eps),
+                   lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return constrain_act(h + m, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x = constrain_act(x, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"],
+                        unroll=cfg.scan_unroll)
+    return x
+
+
+def decode_train(params, tokens, enc_out, cfg: ModelConfig) -> jax.Array:
+    """tokens (B, S), enc_out (B, T, D) -> logits (B, S, Vp)."""
+    x = _decode_backbone(params, tokens, enc_out, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return dense(x, params["unembed"]).astype(jnp.float32)
+
+
+def forward(params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode_train(params, batch["tokens"], enc_out, cfg)
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig):
+    from repro.models.lm import _xent_chunked
+    enc_out = encode(params, batch["frames"], cfg)
+    x = _decode_backbone(params, batch["tokens"], enc_out, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    Bsz, S, D = x.shape
+    nll_sum, z_sum = _xent_chunked(x.reshape(Bsz * S, D), params["unembed"],
+                                   batch["labels"].reshape(-1), 1.0)
+    denom = jnp.asarray(Bsz * S, jnp.float32)
+    loss = nll_sum / denom + 1e-4 * z_sum / denom
+    return loss, {"loss": nll_sum / denom, "zloss": 1e-4 * z_sum / denom,
+                  "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      prefill_len: int = 0) -> Dict:
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    T = cfg.encoder_seq
+    return {
+        "k": jnp.zeros((L, batch, KV, max_len, hd), jnp.bfloat16),
+        "v": jnp.zeros((L, batch, KV, max_len, hd), jnp.bfloat16),
+        "cross_k": jnp.zeros((L, batch, KV, T, hd), jnp.bfloat16),
+        "cross_v": jnp.zeros((L, batch, KV, T, hd), jnp.bfloat16),
+        "length": jnp.asarray(prefill_len, jnp.int32),
+    }
+
+
+def decode_step(params, token, state: Dict, cfg: ModelConfig):
+    """One decoder token against self-KV cache + precomputed cross KV."""
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.bfloat16)
+    length = state["length"]
+
+    def body(h, inp):
+        lp, k_l, v_l, ck_l, cv_l = inp
+        cache = KVCache(k=k_l, v=v_l, length=length)
+        a, nc = attend_decode(rms_norm(h, lp["ln_attn"], cfg.norm_eps),
+                              lp["attn"], cfg, cache)
+        h = h + a
+        c = cross_attend(rms_norm(h, lp["ln_cross"], cfg.norm_eps),
+                         lp["cross"], cfg, ck_l, cv_l)
+        h = h + c
+        m = swiglu(rms_norm(h, lp["ln_mlp"], cfg.norm_eps),
+                   lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return h + m, (nc.k, nc.v)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_blocks"], state["k"], state["v"],
+                  state["cross_k"], state["cross_v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense(x[:, 0, :], params["unembed"]).astype(jnp.float32)
+    new_state = dict(state, k=k_new, v=v_new, length=length + 1)
+    return logits, new_state

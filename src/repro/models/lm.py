@@ -1,0 +1,325 @@
+"""Decoder LM assembly: embed -> scanned blocks -> norm -> unembed.
+
+One implementation covers dense, MoE, VLM (prefix-LM over patch embeddings),
+RWKV6, and the Mamba2+shared-attention hybrid; whisper's encoder-decoder
+lives in `repro.models.encdec`.
+
+Layers are stacked and consumed with `jax.lax.scan` so HLO size / compile
+time are O(1) in depth.  `cfg.remat` wraps the scan body in jax.checkpoint
+(full block rematerialization) for training memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.attention import KVCache, attn_param_specs
+from repro.models.common import (ModelConfig, ParamSpec, axes_tree,
+                                 constrain_act, dense, init_tree, rms_norm,
+                                 shape_tree)
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    D, Vp, L = cfg.d_model, cfg.vocab_padded, cfg.n_layers
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((Vp, D), ("vocab", "embed")),
+        "final_norm": ParamSpec((D,), ("embed",), init="ones"),
+        "unembed": ParamSpec((D, Vp), ("embed", "vocab")),
+    }
+    if cfg.arch_class in ("dense", "moe", "vlm"):
+        specs["blocks"] = B.transformer_specs(cfg, stacked=L)
+    elif cfg.arch_class == "rwkv":
+        specs["blocks"] = B.rwkv_specs(cfg, stacked=L)
+    elif cfg.arch_class == "hybrid":
+        specs["blocks"] = B.mamba_specs(cfg, stacked=L)
+        # ONE shared transformer block reused every shared_attn_period layers
+        specs["shared_attn"] = B.transformer_specs(cfg, stacked=None)
+    else:
+        raise ValueError(cfg.arch_class)
+    return specs
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    return init_tree(key, param_specs(cfg))
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    return axes_tree(param_specs(cfg))
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return shape_tree(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ModelConfig, patch_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = x * jnp.asarray(cfg.emb_scale, jnp.bfloat16)
+    if cfg.arch_class == "vlm" and patch_embeds is not None:
+        n = cfg.n_image_tokens
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, patch_embeds.astype(x.dtype), 0, axis=1)
+    return x
+
+
+def _run_blocks(params, x, cfg: ModelConfig) -> jax.Array:
+    """Scanned layer stack on an embedded stream x (B, S, D)."""
+    Bsz, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    prefix = cfg.n_image_tokens if cfg.arch_class == "vlm" else 0
+
+    if cfg.arch_class in ("dense", "moe", "vlm"):
+        def body(h, layer_p):
+            h = B.transformer_fwd(h, layer_p, cfg, positions=positions,
+                                  prefix_len=prefix)
+            return constrain_act(h, cfg), None
+    elif cfg.arch_class == "rwkv":
+        def body(h, layer_p):
+            h, _ = B.rwkv_fwd(h, layer_p, cfg, state=None, chunked=True)
+            return constrain_act(h, cfg), None
+    elif cfg.arch_class == "hybrid":
+        # grouped scan: each group = 1 shared-attention block application
+        # followed by `period` mamba layers (no lax.cond -> clean cost
+        # analysis and exact shared-weight semantics)
+        period = cfg.shared_attn_period
+        shared = params["shared_attn"]
+
+        def body(h, group_p):
+            h = B.transformer_fwd(h, shared, cfg, positions=positions)
+
+            @jax.checkpoint
+            def inner(h2, layer_p):
+                # nested remat: during the group's backward recompute, only
+                # one mamba layer's internals are live at a time
+                h2, _ = B.mamba_fwd(h2, layer_p, cfg, state=None,
+                                    chunked=True)
+                return constrain_act(h2, cfg), None
+
+            h, _ = jax.lax.scan(inner, h, group_p)
+            return constrain_act(h, cfg), None
+    else:
+        raise ValueError(cfg.arch_class)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    x = constrain_act(x, cfg)
+    if cfg.arch_class == "hybrid":
+        period = cfg.shared_attn_period
+        assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+        G = cfg.n_layers // period
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, period) + a.shape[1:]), params["blocks"])
+        x, _ = jax.lax.scan(body, x, grouped, unroll=cfg.scan_unroll)
+    else:
+        x, _ = jax.lax.scan(body, x, params["blocks"],
+                            unroll=cfg.scan_unroll)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, patch_embeds=None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, vocab_padded)."""
+    x = _embed(params, tokens, cfg, patch_embeds)
+    x = _run_blocks(params, x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense(x, params["unembed"]).astype(jnp.float32)
+    return logits * cfg.logit_scale
+
+
+# token-chunked softmax cross entropy: the (T, vocab) logits are never
+# materialized at once — the unembed matmul + logsumexp run per chunk under
+# jax.checkpoint, so backward recomputes each chunk's logits (the vocab
+# analogue of query-chunked attention)
+XENT_CHUNKS = 16
+
+
+def _xent_chunked(x, unembed, targets, logit_scale: float):
+    T, D = x.shape
+    n = XENT_CHUNKS
+    while T % n != 0:
+        n //= 2
+    xc = x.reshape(n, T // n, D)
+    tc = targets.reshape(n, T // n)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        xb, tb = inp
+        logits = dense(xb, unembed).astype(jnp.float32) * logit_scale
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tb[:, None], axis=-1)[:, 0]
+        nll_sum, z_sum = carry
+        return (nll_sum + jnp.sum(lse - picked),
+                z_sum + jnp.sum(jnp.square(lse))), None
+
+    (nll_sum, z_sum), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, tc))
+    return nll_sum, z_sum
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Next-token cross entropy (+ z-loss stabilizer), vocab-chunked."""
+    x = _embed(params, batch["tokens"], cfg, batch.get("patch_embeds"))
+    x = _run_blocks(params, x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    Bsz, S, D = x.shape
+    targets = batch["labels"].reshape(-1)
+    nll_sum, z_sum = _xent_chunked(x.reshape(Bsz * S, D), params["unembed"],
+                                   targets, cfg.logit_scale)
+    denom = jnp.asarray(Bsz * S, jnp.float32)
+    loss = nll_sum / denom
+    zloss = 1e-4 * z_sum / denom
+    return loss + zloss, {"loss": loss, "zloss": zloss, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): one token against carried state
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      prefill_len: int = 0) -> Dict:
+    """State pytree for one-token decode. `prefill_len` marks the cache as
+    already holding that many tokens (dry-run decodes against a full cache)."""
+    L, D = cfg.n_layers, cfg.d_model
+    length = jnp.asarray(prefill_len, jnp.int32)
+    if cfg.arch_class in ("dense", "moe", "vlm"):
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        if cfg.kv_cache_dtype == "int8":
+            # paper technique on the decode working set: int8 codes +
+            # per-(pos, head) scales => ~2x fewer cache bytes per step
+            return {
+                "k": jnp.zeros((L, batch, KV, max_len, hd), jnp.int8),
+                "v": jnp.zeros((L, batch, KV, max_len, hd), jnp.int8),
+                "k_scale": jnp.zeros((L, batch, KV, max_len, 1), jnp.float32),
+                "v_scale": jnp.zeros((L, batch, KV, max_len, 1), jnp.float32),
+                "length": length,
+            }
+        return {
+            "k": jnp.zeros((L, batch, KV, max_len, hd), jnp.bfloat16),
+            "v": jnp.zeros((L, batch, KV, max_len, hd), jnp.bfloat16),
+            "length": length,
+        }
+    if cfg.arch_class == "rwkv":
+        K = cfg.rwkv_head_dim
+        H = D // K
+        return {
+            "s": jnp.zeros((L, batch, H, K, K), jnp.float32),
+            "x_att": jnp.zeros((L, batch, D), jnp.bfloat16),
+            "x_ffn": jnp.zeros((L, batch, D), jnp.bfloat16),
+            "length": length,
+        }
+    if cfg.arch_class == "hybrid":
+        d_inner, H, N, conv_dim, _ = B.mamba_dims(cfg)
+        P = cfg.ssm_head_dim
+        G = (L + cfg.shared_attn_period - 1) // cfg.shared_attn_period
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        return {
+            "s": jnp.zeros((L, batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((L, batch, B.CONV_W - 1, conv_dim), jnp.bfloat16),
+            "attn_k": jnp.zeros((G, batch, KV, max_len, hd), jnp.bfloat16),
+            "attn_v": jnp.zeros((G, batch, KV, max_len, hd), jnp.bfloat16),
+            "length": length,
+        }
+    raise ValueError(cfg.arch_class)
+
+
+def decode_step(params, token, state: Dict, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Dict]:
+    """token (B,) int32 -> (logits (B, vocab_padded), new state)."""
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.bfloat16)
+    x = x * jnp.asarray(cfg.emb_scale, jnp.bfloat16)
+    length = state["length"]
+
+    if cfg.arch_class in ("dense", "moe", "vlm"):
+        quantized = cfg.kv_cache_dtype == "int8"
+
+        if quantized:
+            def body(h, inp):
+                layer_p, k_l, v_l, ks_l, vs_l = inp
+                cache = KVCache(k=k_l, v=v_l, length=length,
+                                k_scale=ks_l, v_scale=vs_l)
+                h, nc = B.transformer_step(h, layer_p, cfg, cache)
+                return h, (nc.k, nc.v, nc.k_scale, nc.v_scale)
+
+            x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                body, x, (params["blocks"], state["k"], state["v"],
+                          state["k_scale"], state["v_scale"]))
+            new_state = {"k": k_new, "v": v_new, "k_scale": ks_new,
+                         "v_scale": vs_new, "length": length + 1}
+        else:
+            def body(h, inp):
+                layer_p, k_l, v_l = inp
+                cache = KVCache(k=k_l, v=v_l, length=length)
+                h, new_cache = B.transformer_step(h, layer_p, cfg, cache)
+                return h, (new_cache.k, new_cache.v)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["blocks"], state["k"], state["v"]))
+            new_state = {"k": k_new, "v": v_new, "length": length + 1}
+
+    elif cfg.arch_class == "rwkv":
+        def body(h, inp):
+            layer_p, s_l, xa_l, xf_l = inp
+            st = {"s": s_l, "x_att": xa_l, "x_ffn": xf_l}
+            h, st = B.rwkv_fwd(h, layer_p, cfg, state=st, chunked=False)
+            return h, (st["s"], st["x_att"], st["x_ffn"])
+
+        x, (s_new, xa_new, xf_new) = jax.lax.scan(
+            body, x, (params["blocks"], state["s"], state["x_att"],
+                      state["x_ffn"]))
+        new_state = {"s": s_new, "x_att": xa_new, "x_ffn": xf_new,
+                     "length": length + 1}
+
+    elif cfg.arch_class == "hybrid":
+        # grouped scan mirroring forward(): shared attn + `period` mamba
+        # layers per group; per-group KV caches ride along as scan xs
+        period = cfg.shared_attn_period
+        shared = params["shared_attn"]
+        G = cfg.n_layers // period
+        grouped_blocks = jax.tree.map(
+            lambda a: a.reshape((G, period) + a.shape[1:]), params["blocks"])
+        grouped_s = state["s"].reshape((G, period) + state["s"].shape[1:])
+        grouped_conv = state["conv"].reshape(
+            (G, period) + state["conv"].shape[1:])
+
+        def body(h, inp):
+            group_p, s_g, conv_g, k_g, v_g = inp
+            cache = KVCache(k=k_g, v=v_g, length=length)
+            h, nc = B.transformer_step(h, shared, cfg, cache)
+
+            def inner(h2, inp2):
+                layer_p, s_l, conv_l = inp2
+                st = {"s": s_l, "conv": conv_l}
+                h2, st = B.mamba_fwd(h2, layer_p, cfg, state=st,
+                                     chunked=False)
+                return h2, (st["s"], st["conv"])
+
+            h, (s_new_g, conv_new_g) = jax.lax.scan(
+                inner, h, (group_p, s_g, conv_g))
+            return h, (s_new_g, conv_new_g, nc.k, nc.v)
+
+        x, (s_new, conv_new, ak, av) = jax.lax.scan(
+            body, x, (grouped_blocks, grouped_s, grouped_conv,
+                      state["attn_k"], state["attn_v"]))
+        new_state = {
+            "s": s_new.reshape(state["s"].shape),
+            "conv": conv_new.reshape(state["conv"].shape),
+            "attn_k": ak, "attn_v": av, "length": length + 1,
+        }
+    else:
+        raise ValueError(cfg.arch_class)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense(x[:, 0, :], params["unembed"]).astype(jnp.float32)
+    return logits * cfg.logit_scale, new_state

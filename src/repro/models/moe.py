@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN — capacity-based top-k with scatter dispatch.
+
+Supports Mixtral (8 routed, top-2) and Qwen2-MoE (60 routed top-4 + shared
+experts that see every token).
+
+Dispatch uses scatter-add into per-expert capacity buffers and gather for
+the combine, so peak memory is O(T*E) int32 (the position cumsum) plus
+O(E*C*D) buffers — NOT the O(T*E*C) one-hot einsum of textbook GShard,
+which is quadratic in tokens and unrepresentable at 1M-token batches.
+Tokens beyond an expert's capacity are dropped (contribute zero through the
+residual), the standard capacity discipline.  Logical axes: "experts" on
+the buffer dim (EP-shardable), "expert_ff" for TP within experts.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamSpec, dense
+
+
+def moe_param_specs(cfg: ModelConfig, stacked: int | None = None) -> Dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    L = (stacked,) if stacked else ()
+    Lx = ("layers",) if stacked else ()
+    specs = {
+        "router": ParamSpec(L + (D, E), Lx + ("embed", "experts")),
+        "w_gate": ParamSpec(L + (E, D, F), Lx + ("experts", "embed", "expert_ff")),
+        "w_up": ParamSpec(L + (E, D, F), Lx + ("experts", "embed", "expert_ff")),
+        "w_down": ParamSpec(L + (E, F, D), Lx + ("experts", "expert_ff", "embed")),
+    }
+    if cfg.shared_expert_d_ff:
+        Fs = cfg.shared_expert_d_ff
+        specs.update({
+            "shared_gate": ParamSpec(L + (D, Fs), Lx + ("embed", "mlp")),
+            "shared_up": ParamSpec(L + (D, Fs), Lx + ("embed", "mlp")),
+            "shared_down": ParamSpec(L + (Fs, D), Lx + ("mlp", "embed")),
+            # qwen2-moe gates the shared expert per token
+            "shared_gate_proj": ParamSpec(L + (D, 1), Lx + ("embed", None)),
+        })
+    return specs
+
+
+def _constrain(x, spec_dims, cfg: ModelConfig):
+    """Sharding constraint derived from the active act_pspec (if any).
+
+    markers: "tok" = flattened token dim (batch axes + the seq/model axis,
+    fully sharded); "cap" = expert capacity dim (batch axes only, so the
+    FFN dim can still use the model axis); "tp" = model axis.
+    """
+    if not cfg.act_pspec:
+        return x
+    from jax.sharding import PartitionSpec as P
+    dp = cfg.act_pspec[0]
+    dp_t = dp if isinstance(dp, tuple) else (dp,)
+    tok = dp_t + ("model",)
+    spec = [tok if d == "tok" else
+            (dp if d == "cap" else ("model" if d == "tp" else None))
+            for d in spec_dims]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def moe_ffn(x, p, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    E, F, k = cfg.n_experts, cfg.moe_d_ff, cfg.top_k
+    T = B * S
+    cap = max(int(cfg.capacity_factor * T * k / E), 8)
+    cap = (cap + 255) // 256 * 256 if cap >= 256 else (cap + 7) // 8 * 8
+
+    xt = x.reshape(T, D)
+    xt = _constrain(xt, ("cap", None), cfg)
+    logits = dense(xt, p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                        # (T, k)
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+
+    # position of each (token, choice) in its expert's capacity buffer:
+    # cumulative count of earlier assignments to the same expert
+    assign = jax.nn.one_hot(top_e, E, dtype=jnp.int32)           # (T, k, E)
+    assign_flat = assign.reshape(T * k, E)
+    pos_flat = jnp.cumsum(assign_flat, axis=0) - assign_flat     # exclusive
+    pos = jnp.sum(pos_flat * assign_flat, axis=-1).reshape(T, k) # (T, k)
+
+    # scatter tokens into (E, C, D); overflow (pos >= cap) drops.
+    # capacity dim shards over data, FFN dim over model -> per-device expert
+    # buffers stay O(E * C/dp * F/tp)
+    xe = jnp.zeros((E, cap, D), x.dtype)
+    flat_e = top_e.reshape(-1)
+    flat_pos = pos.reshape(-1)
+    tok_rep = jnp.repeat(xt, k, axis=0)                           # (T*k, D)
+    xe = xe.at[flat_e, flat_pos].add(tok_rep, mode="drop")
+    xe = _constrain(xe, (None, "cap", None), cfg)
+
+    # nested remat + bf16 cotangents: without this, the outer block-remat's
+    # backward holds several f32 (E, C, D) buffers live at once (~2.7GB each
+    # at mixtral scale)
+    @jax.checkpoint
+    def expert_ffn(xe_, wg, wu, wd):
+        # bf16 outputs end-to-end: the TPU MXU accumulates in f32 internally
+        # anyway, and f32 output intermediates double the buffer budget
+        g = jnp.einsum("ecd,edf->ecf", xe_, wg.astype(xe_.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xe_, wu.astype(xe_.dtype))
+        g = _constrain(g, (None, "cap", "tp"), cfg)
+        u = _constrain(u, (None, "cap", "tp"), cfg)
+        h = (jax.nn.silu(g.astype(jnp.float32)).astype(xe_.dtype) * u)
+        ye_ = jnp.einsum("ecf,efd->ecd", h, wd.astype(xe_.dtype))
+        return _constrain(ye_, (None, "cap", None), cfg)
+
+    ye = expert_ffn(xe, p["w_gate"], p["w_up"], p["w_down"])
+
+    # combine: gather each (token, choice)'s output, weight, and sum over k;
+    # out-of-capacity choices read as zero ('fill' mode)
+    gathered = ye.at[flat_e, flat_pos].get(
+        mode="fill", fill_value=0).reshape(T, k, D)
+    gathered = _constrain(gathered, ("cap", None, None), cfg)
+    out = jnp.sum(gathered * top_p[..., None].astype(x.dtype), axis=1)
+
+    if cfg.shared_expert_d_ff:
+        gs = dense(xt, p["shared_gate"])
+        us = dense(xt, p["shared_up"])
+        hs = (jax.nn.silu(gs.astype(jnp.float32)) * us.astype(jnp.float32)
+              ).astype(x.dtype)
+        shared = dense(hs, p["shared_down"])
+        gate = jax.nn.sigmoid(dense(xt, p["shared_gate_proj"])
+                              .astype(jnp.float32)).astype(x.dtype)
+        out = out + gate * shared
+
+    return out.reshape(B, S, D)
+
+
+def aux_load_balance_loss(router_probs, top_e, n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean prob x mean dispatch)."""
+    mask = jax.nn.one_hot(top_e, n_experts).sum(axis=1)          # (T, E)
+    density = jnp.mean(jnp.minimum(mask, 1.0), axis=0)
+    prob_mass = jnp.mean(router_probs, axis=0)
+    return n_experts * jnp.sum(density * prob_mass)

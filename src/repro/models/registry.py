@@ -1,0 +1,50 @@
+"""Uniform model interface over decoder-only and encoder-decoder archs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    param_specs: Callable[[], Dict]
+    init_params: Callable[[Any], Dict]
+    param_axes: Callable[[], Dict]
+    loss_fn: Callable  # (params, batch) -> (loss, metrics)
+    forward: Callable
+    init_decode_state: Callable  # (batch, max_len, prefill_len) -> state
+    decode_step: Callable  # (params, token, state) -> (logits, state)
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.arch_class == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            param_specs=lambda: encdec.param_specs(cfg),
+            init_params=lambda key: encdec.init_params(cfg, key),
+            param_axes=lambda: encdec.param_axes(cfg),
+            loss_fn=lambda p, b: encdec.loss_fn(p, b, cfg),
+            forward=lambda p, b: encdec.forward(p, b, cfg),
+            init_decode_state=lambda bs, ml, pl=0: encdec.init_decode_state(
+                cfg, bs, ml, pl),
+            decode_step=lambda p, t, s: encdec.decode_step(p, t, s, cfg),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        param_specs=lambda: lm.param_specs(cfg),
+        init_params=lambda key: lm.init_params(cfg, key),
+        param_axes=lambda: lm.param_axes(cfg),
+        loss_fn=lambda p, b: lm.loss_fn(p, b, cfg),
+        forward=lambda p, b: lm.forward(
+            p, b["tokens"], cfg, patch_embeds=b.get("patch_embeds")),
+        init_decode_state=lambda bs, ml, pl=0: lm.init_decode_state(
+            cfg, bs, ml, pl),
+        decode_step=lambda p, t, s: lm.decode_step(p, t, s, cfg),
+    )

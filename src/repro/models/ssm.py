@@ -1,0 +1,222 @@
+"""State-space / linear-recurrence token mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both recurrences are implemented twice:
+  * `*_scan`    — naive per-token `lax.scan`: the correctness oracle, and the
+                  O(1)-state decode path (`long_500k` eligibility).
+  * `*_chunked` — chunk-parallel form used for training/prefill: intra-chunk
+                  work becomes dense (C x C) matmuls (MXU-friendly), states
+                  propagate across chunks with one scan over T/C steps.
+                  All per-chunk tensors (decays, scores) are computed INSIDE
+                  the chunk-scan body, so peak memory is O(B*H*C^2), not
+                  O(B*H*T*C).  This is the TPU analogue of the CUDA chunked
+                  kernels the papers ship; decay ratios are computed in log
+                  space for stability.
+
+RWKV6 recurrence (per head; K=V=head_dim):
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T          w_t in (0,1)^K data-dependent
+
+Mamba2 SSD (per head; N=d_state, P=head_dim; scalar decay a_t per head):
+    S_t = a_t S_{t-1} + B_t (dt_t x_t)^T
+    y_t = C_t . S_t (+ D x_t skip, applied by the caller)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pick_chunk(T: int, chunk: int) -> int:
+    """Largest divisor of T that is <= requested chunk."""
+    c = min(chunk, T)
+    while T % c != 0:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+def wkv6_scan(r, k, v, w, u, s0=None):
+    """Naive oracle / decode path.
+
+    r,k,w: (B, T, H, K); v: (B, T, H, V); u: (H, K); s0: (B, H, K, V).
+    Returns (out (B, T, H, V), sT).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                     # (B, H, K/V)
+        kv = k_t[..., :, None] * v_t[..., None, :]   # (B, H, K, V)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         s + u[None, :, :, None] * kv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, out
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    sT, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), sT
+
+
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 64, unroll: int = 1):
+    """Chunk-parallel WKV6 (log-space decays). Same signature as wkv6_scan."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    chunk = _pick_chunk(T, chunk)
+    C, NC = chunk, T // chunk
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    f32 = jnp.float32
+    # (NC, B, H, C, dim) chunked layout — pure reshape/transpose, no compute.
+    # r/k/v stage in their input dtype (bf16 in training): the scan's xs are
+    # then half the HBM/ICI bytes; the f32 cast happens per chunk in VMEM.
+    # w stays f32 — decay precision feeds a log/cumsum chain.
+    def to_chunks(x):
+        return x.reshape(B, NC, C, H, -1).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc = map(to_chunks, (r, k, v))
+    wc = to_chunks(w.astype(f32))
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+
+    @jax.checkpoint
+    def chunk_step(s, inp):
+        r_c, k_c, v_c, w_c = inp                       # (B, H, C, K/V)
+        r_c = r_c.astype(f32)
+        k_c = k_c.astype(f32)
+        v_c = v_c.astype(f32)
+        logw = jnp.log(jnp.clip(w_c, 1e-12, 1.0))
+        logA = jnp.cumsum(logw, axis=-2)               # A_t = prod_{s<=t} w_s
+        logA_prev = logA - logw                        # A_{t-1}
+        r_dec = r_c * jnp.exp(logA_prev)               # r~_t = r_t A_{t-1}
+        k_inc = k_c * jnp.exp(-logA)                   # k~_s = k_s / A_s
+        logA_C = logA[..., -1:, :]
+        k_end = k_c * jnp.exp(logA_C - logA)           # k^_s = k_s A_C/A_s
+
+        # intra-chunk: strictly-lower-triangular scores + u-weighted diagonal
+        scores = jnp.einsum("bhck,bhsk->bhcs", r_dec, k_inc)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        diag = jnp.einsum("bhck,bhck->bhc",
+                          r_c * u[None, :, None, :], k_c)
+        intra = (jnp.einsum("bhcs,bhsv->bhcv", scores, v_c)
+                 + diag[..., None] * v_c)
+
+        out = intra + jnp.einsum("bhck,bhkv->bhcv", r_dec, s)
+        s_new = (jnp.exp(logA_C[..., 0, :])[..., None] * s
+                 + jnp.einsum("bhsk,bhsv->bhkv", k_end, v_c))
+        return s_new, out
+
+    sT, outs = jax.lax.scan(chunk_step, s0, (rc, kc, vc, wc), unroll=unroll)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, V)
+    return out, sT
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, a, Bm, Cm, s0=None):
+    """Naive oracle / decode path.
+
+    x: (B, T, H, P); dt, a: (B, T, H); Bm, Cm: (B, T, N) (ngroups=1, shared
+    across heads); s0: (B, H, N, P).  Returns (y (B, T, H, P), sT).
+    """
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(s, inp):
+        x_t, dt_t, a_t, B_t, C_t = inp
+        u = (dt_t[..., None] * x_t)                    # (B, H, P)
+        s_new = (a_t[..., None, None] * s
+                 + B_t[:, None, :, None] * u[..., None, :])
+        y = jnp.einsum("bn,bhnp->bhp", C_t, s_new)
+        return s_new, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          a.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def ssd_chunked(x, dt, a, Bm, Cm, s0=None, chunk: int = 64, unroll: int = 1):
+    """Chunk-parallel SSD; scalar per-head decays in log space."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = _pick_chunk(T, chunk)
+    C, NC = chunk, T // chunk
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    f32 = jnp.float32
+
+    # u = dt*x staged in the input dtype (bf16 in training); decays f32
+    xc = (dt.astype(f32)[..., None] * x.astype(f32)).astype(x.dtype).reshape(
+        B, NC, C, H, P).transpose(1, 0, 3, 2, 4)       # (NC,B,H,C,P)
+    ac = a.astype(f32).reshape(B, NC, C, H).transpose(1, 0, 3, 2)  # (NC,B,H,C)
+    Bc = Bm.reshape(B, NC, C, N).transpose(1, 0, 2, 3)  # (NC,B,C,N)
+    Cc = Cm.reshape(B, NC, C, N).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((C, C), bool))
+
+    @jax.checkpoint
+    def chunk_step(s, inp):
+        x_c, a_c, B_c, C_c = inp
+        x_c = x_c.astype(f32)
+        B_c = B_c.astype(f32)
+        C_c = C_c.astype(f32)
+        loga = jnp.log(jnp.clip(a_c, 1e-12, 1.0))
+        logA = jnp.cumsum(loga, axis=-1)                # (B, H, C)
+        logA_C = logA[..., -1:]
+
+        # M[t,s] = exp(logA_t - logA_s) * (C_t . B_s) for s <= t
+        ratio = logA[..., :, None] - logA[..., None, :]
+        decay = jnp.where(tri[None, None], jnp.exp(ratio), 0.0)
+        cb = jnp.einsum("bcd,bsd->bcs", C_c, B_c)       # (B, C, C)
+        M = decay * cb[:, None]                          # (B, H, C, C)
+        intra = jnp.einsum("bhcs,bhsp->bhcp", M, x_c)
+
+        C_dec = C_c[:, None, :, :] * jnp.exp(logA)[..., None]   # (B,H,C,N)
+        B_end = (B_c[:, None, :, :]
+                 * jnp.exp(logA_C[..., None] - logA[..., None]))
+
+        out = intra + jnp.einsum("bhcn,bhnp->bhcp", C_dec, s)
+        s_new = (jnp.exp(logA_C[..., 0])[..., None, None] * s
+                 + jnp.einsum("bhcn,bhcp->bhnp", B_end, x_c))
+        return s_new, out
+
+    sT, outs = jax.lax.scan(chunk_step, s0, (xc, ac, Bc, Cc), unroll=unroll)
+    y = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, P)
+    return y, sT
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (mamba2 frontend)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, state=None):
+    """x: (B, T, D); w: (W, D) depthwise taps. Returns (y, new_state).
+
+    `state` is the last W-1 inputs from the previous segment (B, W-1, D);
+    used for chunked prefill and one-token decode.
+    """
+    B, T, D = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, D), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, T+W-1, D)
+    y = jnp.zeros((B, T, D), jnp.float32)
+    for i in range(W):
+        y = y + xp[:, i:i + T, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else jnp.zeros((B, 0, D), x.dtype)
+    return y.astype(x.dtype), new_state

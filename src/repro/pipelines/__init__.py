@@ -1,0 +1,11 @@
+"""The paper's four evaluation benchmarks as stage-DAG pipelines."""
+from repro.pipelines import data, dus, hcd, metrics, optical_flow, usm
+
+ALL = {
+    "hcd": hcd.build,
+    "usm": usm.build,
+    "dus": dus.build,
+    "optical_flow": optical_flow.build,
+}
+
+__all__ = ["ALL", "data", "dus", "hcd", "metrics", "optical_flow", "usm"]

@@ -1,0 +1,23 @@
+"""Down-and-Up Sampling — paper §VI-C / Figure 7.
+
+Linear DAG: Dx (decimate x) -> Dy (decimate y) -> Ux (expand x) -> Uy
+(expand y).  All four stages are convex binomial stencils, so every range
+stays [0, 255] and static analysis gives alpha = 8 everywhere (Table VIII).
+"""
+from __future__ import annotations
+
+from repro.core.graph import Pipeline
+from repro.dsl.builder import PipelineBuilder
+
+BIN3 = [1, 2, 1]
+
+
+def build() -> Pipeline:
+    p = PipelineBuilder("dus")
+    img = p.image("img", 0, 255)
+    Dx = p.downsample("Dx", img, [BIN3], scale=1.0 / 4, stride=(1, 2))
+    Dy = p.downsample("Dy", Dx, [[w] for w in BIN3], scale=1.0 / 4, stride=(2, 1))
+    Ux = p.upsample("Ux", Dy, [BIN3], scale=1.0 / 4, factor=(1, 2))
+    Uy = p.upsample("Uy", Ux, [[w] for w in BIN3], scale=1.0 / 4, factor=(2, 1))
+    p.output(Uy)
+    return p.build()

@@ -1,0 +1,67 @@
+"""Application-specific quality metrics — paper §VI.
+
+  HCD : % of pixels whose corner classification matches the wide-type
+        reference (paper: "percentage of mis-classified corners")
+  USM : (a) fraction of pixels mis-classified at the `masked` Select,
+        (b) RMS error of correctly-classified pixels vs float
+  DUS : PSNR against the wide-type reference
+  OF  : Average Angular Error (AAE, degrees) of the flow field
+        [Fleet & Jepson '90 / Otte & Nagel '94 formulation]
+
+All metrics compare a candidate design against a reference produced with
+"sufficiently long" types (we use the f64 float executor), matching the
+paper's methodology.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def hcd_accuracy(ref_harris, test_harris, threshold: float | None = None) -> float:
+    """% pixels with identical corner classification (higher is better)."""
+    ref = np.asarray(ref_harris, dtype=np.float64)
+    test = np.asarray(test_harris, dtype=np.float64)
+    if threshold is None:
+        threshold = 0.01 * float(ref.max())
+    agree = (ref > threshold) == (test > threshold)
+    return 100.0 * float(np.mean(agree))
+
+
+def usm_classification_error(ref_mask_branch, test_mask_branch) -> float:
+    """% pixels whose Select branch flipped under fixed point (lower=better)."""
+    return 100.0 * float(np.mean(np.asarray(ref_mask_branch) != np.asarray(test_mask_branch)))
+
+
+def usm_branch(env, params) -> np.ndarray:
+    """The masked stage's Select predicate: |img - blury| < thresh."""
+    return np.abs(np.asarray(env["img"], dtype=np.float64)
+                  - np.asarray(env["blury"], dtype=np.float64)) < params["thresh"]
+
+
+def rms_correct(ref, test, ref_branch, test_branch) -> float:
+    """RMS over pixels classified the same way in both designs."""
+    ok = np.asarray(ref_branch) == np.asarray(test_branch)
+    if not ok.any():
+        return float("inf")
+    d = (np.asarray(ref, dtype=np.float64) - np.asarray(test, dtype=np.float64))[ok]
+    return float(np.sqrt(np.mean(d * d)))
+
+
+def psnr(ref, test, peak: float = 255.0) -> float:
+    ref = np.asarray(ref, dtype=np.float64)
+    test = np.asarray(test, dtype=np.float64)
+    mse = float(np.mean((ref - test) ** 2))
+    if mse == 0.0:
+        return float("inf")
+    return 10.0 * np.log10(peak * peak / mse)
+
+
+def aae_degrees(u_ref, v_ref, u_test, v_test) -> float:
+    """Average Angular Error between flow fields, in degrees."""
+    u_ref, v_ref = np.asarray(u_ref, np.float64), np.asarray(v_ref, np.float64)
+    u_test, v_test = np.asarray(u_test, np.float64), np.asarray(v_test, np.float64)
+    num = u_ref * u_test + v_ref * v_test + 1.0
+    den = np.sqrt((u_ref ** 2 + v_ref ** 2 + 1.0)
+                  * (u_test ** 2 + v_test ** 2 + 1.0))
+    cosang = np.clip(num / den, -1.0, 1.0)
+    return float(np.degrees(np.mean(np.arccos(cosang))))

@@ -1,0 +1,75 @@
+"""Horn–Schunck Optical Flow — paper §VI-D, 30 stages.
+
+10 pre-processing stages + 4 repetitions of a 5-stage set, exactly the
+paper's structure (Table IX):
+
+  pre:  It = Img2 - Img1
+        Ix, Iy = 1/12-Sobel derivatives of Img1
+        Ixx = Ix^2 ; Iyy = Iy^2
+        Denom = alpha^2 + Ixx + Iyy
+        commonX = Ix / Denom ; commonY = Iy / Denom
+        Vx0 = -commonX * It  ; Vy0 = -commonY * It       (k=0 update, u_bar=0)
+  iter k=1..4 (5 stages each):
+        Avgx_k, Avgy_k = HS 3x3 average of Vx_{k-1}, Vy_{k-1}
+        Common_k = (Ix*Avgx_k + Iy*Avgy_k + It) / Denom   (shared numerator/denominator)
+        Vx_k = Avgx_k - Ix * Common_k
+        Vy_k = Avgy_k - Iy * Common_k
+
+The paper does not state its regularization constant; we use the standard
+Horn–Schunck alpha^2 = 100 (alpha = 10) and record it.  The qualitative
+claims of Table IX reproduce: static alpha estimates for Common/Vx/Vy grow
+by several bits per iteration (interval blow-up through the recurrence),
+while profile estimates stay flat — the deep-pipeline gap that motivates
+profile-driven refinement.
+"""
+from __future__ import annotations
+
+from repro.core.graph import Pipeline, Pow
+from repro.dsl.builder import PipelineBuilder
+from repro.pipelines.hcd import SOBEL_X, SOBEL_Y
+
+ALPHA2 = 100.0
+HS_AVG = [[1, 2, 1], [2, 0, 2], [1, 2, 1]]   # classic HS neighborhood average
+N_ITERS = 4
+
+
+def build(n_iters: int = N_ITERS) -> Pipeline:
+    p = PipelineBuilder("optical_flow")
+    img1 = p.image("img1", 0, 255)
+    img2 = p.image("img2", 0, 255)
+
+    It = p.define("It", img2 - img1)
+    Ix = p.stencil("Ix", img1, SOBEL_X, scale=1.0 / 12)
+    Iy = p.stencil("Iy", img1, SOBEL_Y, scale=1.0 / 12)
+    Ixx = p.define("Ixx", Pow(Ix, 2))
+    Iyy = p.define("Iyy", Pow(Iy, 2))
+    denom = p.define("Denom", ALPHA2 + Ixx + Iyy)
+    commonX = p.define("commonX", Ix / denom)
+    commonY = p.define("commonY", Iy / denom)
+    vx = p.define("Vx0", (0 - commonX) * It)
+    vy = p.define("Vy0", (0 - commonY) * It)
+
+    for k in range(1, n_iters + 1):
+        avgx = p.stencil(f"Avgx{k}", vx, HS_AVG, scale=1.0 / 12)
+        avgy = p.stencil(f"Avgy{k}", vy, HS_AVG, scale=1.0 / 12)
+        common = p.define(f"Common{k}", (Ix * avgx + Iy * avgy + It) / denom)
+        vx = p.define(f"Vx{k}", avgx - Ix * common)
+        vy = p.define(f"Vy{k}", avgy - Iy * common)
+
+    p.output(vx)
+    p.output(vy)
+    return p.build()
+
+
+def stage_families(n_iters: int = N_ITERS):
+    """Grouping used by the benchmark table (paper groups by family)."""
+    fams = {
+        "Img1,Img2": ["img1", "img2"], "It": ["It"], "Ix,Iy": ["Ix", "Iy"],
+        "Ixx,Iyy": ["Ixx", "Iyy"], "Denom": ["Denom"],
+        "commonX,commonY": ["commonX", "commonY"], "Vx0,Vy0": ["Vx0", "Vy0"],
+    }
+    for k in range(1, n_iters + 1):
+        fams[f"Avg(iter{k})"] = [f"Avgx{k}", f"Avgy{k}"]
+        fams[f"Common(iter{k})"] = [f"Common{k}"]
+        fams[f"V(iter{k})"] = [f"Vx{k}", f"Vy{k}"]
+    return fams

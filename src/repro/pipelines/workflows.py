@@ -1,0 +1,172 @@
+"""End-to-end bit-width synthesis workflows — Figure 4 of the paper.
+
+For each benchmark this wires together:  static alpha-analysis -> profile
+alpha refinement -> beta search against the application quality metric ->
+fixed-point design + cost comparison vs the float reference.
+
+Used by tests, benchmarks/, and examples/ so the methodology lives in one
+place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import beta_search, cost_model, policy
+from repro.core.fixedpoint import FixedPointType
+from repro.core.graph import Pipeline
+from repro.core.profile import ProfileResult, profile_pipeline
+from repro.core.range_analysis import analyze
+from repro.dsl.exec import run_fixed, run_float
+from repro.pipelines import data as pdata
+from repro.pipelines import dus, hcd, metrics, optical_flow, usm
+
+TypeMap = Dict[str, Optional[FixedPointType]]
+
+
+def types_from_alpha(pipeline: Pipeline, alphas: Dict[str, int],
+                     signed: Dict[str, bool], betas: Dict[str, int]) -> TypeMap:
+    return {
+        n: FixedPointType(alpha=max(alphas[n], 1), beta=betas.get(n, 0),
+                          signed=signed[n])
+        for n in pipeline.stages
+    }
+
+
+def static_alphas(pipeline: Pipeline):
+    res = analyze(pipeline)
+    return ({n: r.alpha for n, r in res.items()},
+            {n: r.signed for n, r in res.items()})
+
+
+@dataclasses.dataclass
+class BenchmarkSetup:
+    """One paper benchmark bound to data, params, and its quality metric."""
+    name: str
+    pipeline: Pipeline
+    params: Dict[str, float]
+    train_images: List
+    test_images: List
+    # quality_fn(ref_env, fixed_env, params) -> float, higher = better
+    quality_of: Callable
+    quality_target: float
+    two_input: bool = False
+
+    def ref_envs(self, images=None):
+        imgs = self.test_images if images is None else images
+        return [run_float(self.pipeline, im, self.params) for im in imgs]
+
+    def fixed_envs(self, types: TypeMap, images=None):
+        imgs = self.test_images if images is None else images
+        return [run_fixed(self.pipeline, im, types, self.params) for im in imgs]
+
+    def mean_quality(self, types: TypeMap, images=None, refs=None) -> float:
+        imgs = self.test_images if images is None else images
+        refs = self.ref_envs(imgs) if refs is None else refs
+        qs = [self.quality_of(r, f, self.params)
+              for r, f in zip(refs, self.fixed_envs(types, imgs))]
+        return float(np.mean(qs))
+
+    def profile(self) -> ProfileResult:
+        def runner(image, params):
+            return run_float(self.pipeline, image, params)
+        return profile_pipeline(self.pipeline, self.train_images, runner,
+                                self.params)
+
+    def beta_quality_fn(self, alphas, signed, images=None, refs=None):
+        imgs = self.train_images if images is None else images
+        refs = self.ref_envs(imgs) if refs is None else refs
+
+        def qf(beta_map: Dict[str, int]) -> float:
+            types = types_from_alpha(self.pipeline, alphas, signed, beta_map)
+            return self.mean_quality(types, imgs, refs)
+
+        return qf
+
+    def run_beta_search(self, alphas, signed, beta_hi: int = 12):
+        qf = self.beta_quality_fn(alphas, signed)
+        return beta_search.search(self.pipeline, qf, self.quality_target,
+                                  beta_hi=beta_hi)
+
+
+# ---------------------------------------------------------------------------
+# benchmark constructors (paper §VI) — image sizes kept small for CPU speed;
+# sizes only affect profiling statistics, not the static analysis.
+# ---------------------------------------------------------------------------
+
+def make_hcd(n_train: int = 6, n_test: int = 6, shape=(48, 48)) -> BenchmarkSetup:
+    train, test = pdata.train_test_split(n_train + n_test, shape, seed=11)
+
+    def quality(ref_env, fix_env, params):
+        thr = hcd.corner_threshold(ref_env["harris"])
+        return metrics.hcd_accuracy(ref_env["harris"], fix_env["harris"], thr)
+
+    return BenchmarkSetup("hcd", hcd.build(), {}, train[:n_train],
+                          test[:n_test], quality, quality_target=99.0)
+
+
+def make_usm(n_train: int = 6, n_test: int = 6, shape=(48, 48)) -> BenchmarkSetup:
+    train, test = pdata.train_test_split(n_train + n_test, shape, seed=23)
+    params = dict(usm.DEFAULT_PARAMS)
+
+    def quality(ref_env, fix_env, params_):
+        rb = metrics.usm_branch(ref_env, params_)
+        fb = metrics.usm_branch(fix_env, params_)
+        err = metrics.usm_classification_error(rb, fb)
+        return 100.0 - err     # % correctly classified
+
+    return BenchmarkSetup("usm", usm.build(), params, train[:n_train],
+                          test[:n_test], quality, quality_target=99.5)
+
+
+def make_dus(n_train: int = 6, n_test: int = 6, shape=(48, 48)) -> BenchmarkSetup:
+    train, test = pdata.train_test_split(n_train + n_test, shape, seed=37)
+
+    def quality(ref_env, fix_env, params_):
+        out = "Uy"
+        return metrics.psnr(ref_env[out], fix_env[out])
+
+    # paper sets required PSNR to infinity; numerically we use a high bar
+    return BenchmarkSetup("dus", dus.build(), {}, train[:n_train],
+                          test[:n_test], quality, quality_target=50.0)
+
+
+def make_of(n_pairs: int = 4, shape=(40, 40)) -> BenchmarkSetup:
+    pairs = [pdata.shifted_pair(shape, seed=100 + i, shift=(1, 1))
+             for i in range(2 * n_pairs)]
+    train = pairs[:n_pairs]
+    test = pairs[n_pairs:]
+
+    def quality(ref_env, fix_env, params_):
+        k = optical_flow.N_ITERS
+        aae = metrics.aae_degrees(ref_env[f"Vx{k}"], ref_env[f"Vy{k}"],
+                                  fix_env[f"Vx{k}"], fix_env[f"Vy{k}"])
+        return -aae            # higher is better
+
+    return BenchmarkSetup("optical_flow", optical_flow.build(), {}, train,
+                          test, quality, quality_target=-2.0, two_input=True)
+
+
+ALL_BENCHMARKS = {"hcd": make_hcd, "usm": make_usm, "dus": make_dus,
+                  "optical_flow": make_of}
+
+
+# ---------------------------------------------------------------------------
+# cost comparison — the paper's Tables III/VI/VII/X axis
+# ---------------------------------------------------------------------------
+
+def design_report(pipeline: Pipeline, types: TypeMap,
+                  image_width: int = 1920) -> Dict:
+    fixed = cost_model.design_cost(pipeline, types, image_width)
+    flt = cost_model.design_cost(pipeline, cost_model.float_design(pipeline),
+                                 image_width)
+    legal = policy.legalize_design(types)
+    return {
+        "fixed": fixed,
+        "float": flt,
+        "improvement": fixed.ratios_vs(flt),
+        "containers": {k: v.container for k, v in legal.items()},
+        "total_bits": sum(t.width if t else 32 for t in types.values()),
+    }

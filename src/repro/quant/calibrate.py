@@ -1,0 +1,90 @@
+"""Profile-driven calibration — the paper's §V-A on LM tensor classes.
+
+Runs forward passes over calibration batches and collects per-class absmax
+(activations) and per-tensor absmax (weights).  Like the Oxford-Buildings
+profiling run, the calibrated ranges are usually FAR tighter than the
+static interval analysis, especially for the deep residual stream
+(`repro.quant.range_lm` mirrors Table IX's blow-up).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interval import Interval
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelBundle
+
+# tree-path substrings defining the weight classes (the paper's "stages")
+WEIGHT_CLASSES = {
+    "embed": ("embed",),
+    "attn": ("attn", "tmix", "cross", "in_proj", "out_proj", "shared_attn"),
+    "mlp": ("mlp", "cmix", "moe", "shared_gate", "shared_up", "shared_down"),
+    "unembed": ("unembed",),
+}
+
+# classes eligible for quantization, in reverse-topological order
+# (output -> input), the order the paper's refinement pass visits stages
+REVERSE_TOPO_CLASSES = ["unembed", "mlp", "attn", "embed"]
+
+
+def classify_path(path: str) -> str | None:
+    segs = path.split("/")
+    # exact segment match first ("unembed" must not hit the "embed" pattern)
+    for cls, pats in WEIGHT_CLASSES.items():
+        if any(p in segs for p in pats):
+            return cls
+    for cls, pats in WEIGHT_CLASSES.items():
+        if any(p in path for p in pats):
+            return cls
+    return None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def weight_stats(params) -> Dict[str, Dict[str, float]]:
+    """Per-class weight absmax + rms (profile analysis of the weights)."""
+    stats: Dict[str, Dict[str, float]] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        cls = classify_path(_path_str(path))
+        if cls is None or leaf.ndim < 2:
+            continue
+        s = stats.setdefault(cls, {"absmax": 0.0, "rms": 0.0, "n": 0})
+        s["absmax"] = max(s["absmax"], float(jnp.max(jnp.abs(leaf))))
+        s["rms"] += float(jnp.sqrt(jnp.mean(jnp.square(leaf))))
+        s["n"] += 1
+    for s in stats.values():
+        s["rms"] /= max(s["n"], 1)
+    return stats
+
+
+def activation_stats(bundle: ModelBundle, params,
+                     batches: Sequence[Dict]) -> Dict[str, Interval]:
+    """Calibrated activation ranges: logits + residual stream absmax."""
+    lo: Dict[str, float] = {}
+    hi: Dict[str, float] = {}
+
+    def upd(name, arr):
+        a = np.asarray(arr, np.float32)
+        lo[name] = min(lo.get(name, np.inf), float(a.min()))
+        hi[name] = max(hi.get(name, -np.inf), float(a.max()))
+
+    for b in batches:
+        logits = bundle.forward(params, b)
+        upd("logits", logits)
+    return {k: Interval(lo[k], hi[k]) for k in lo}
+
+
+def calibrated_ranges(bundle: ModelBundle, params,
+                      batches: Sequence[Dict]) -> Dict[str, Interval]:
+    """Static weight-based ranges refined by activation probes."""
+    from repro.quant.range_lm import static_ranges
+    ranges = dict(static_ranges(params, bundle.cfg))
+    ranges.update(activation_stats(bundle, params, batches))
+    return ranges

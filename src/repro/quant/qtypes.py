@@ -1,0 +1,87 @@
+"""Quantized tensor container + per-tensor precision assignment.
+
+The LM realization of the paper's (alpha, beta) stage types: each named
+tensor class ("attn_in", "mlp_w", ...) gets a *TensorPrecision* — either a
+float format or a fixed-point/integer container with a static scale derived
+from range analysis + calibration, mirroring how each pipeline stage's
+buffer is typed in the FPGA design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import FixedPointType
+from repro.core.interval import Interval
+from repro.core.policy import LegalizedType, legalize
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPrecision:
+    """Precision assignment for one tensor class."""
+    name: str
+    range: Interval                   # analyzed/calibrated value range
+    fp: Optional[FixedPointType]      # None = keep bf16/f32
+    legal: LegalizedType              # TPU container after legalization
+
+    @property
+    def container(self) -> str:
+        return self.legal.container
+
+    @property
+    def bits(self) -> int:
+        return self.legal.bits if self.fp is not None else 16
+
+    @staticmethod
+    def from_range(name: str, rng: Interval, beta: int) -> "TensorPrecision":
+        from repro.core.fixedpoint import alpha_for_range
+        alpha = max(alpha_for_range(rng.lo, rng.hi), 1)
+        fp = FixedPointType(alpha=alpha, beta=beta, signed=rng.lo < 0)
+        return TensorPrecision(name=name, range=rng, fp=fp, legal=legalize(fp))
+
+    @staticmethod
+    def float_ref(name: str, rng: Interval) -> "TensorPrecision":
+        return TensorPrecision(name=name, range=rng, fp=None,
+                               legal=legalize(None))
+
+
+def quantize_symmetric(x: jax.Array, bits: int = 8, axis=None):
+    """Symmetric absmax quantization -> (codes, scale)."""
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        s = jnp.max(jnp.abs(x))
+    else:
+        s = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    s = jnp.where(s == 0, 1.0, s) / qmax
+    dt = jnp.int8 if bits <= 8 else jnp.int16
+    q = jnp.clip(jnp.rint(x / s), -qmax - 1, qmax).astype(dt)
+    return q, s.astype(jnp.float32)
+
+
+def dequantize_symmetric(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s
+
+
+def fake_quant_ste(x: jax.Array, bits: int = 8, axis=None) -> jax.Array:
+    """Quantize-dequantize with straight-through gradients (training path)."""
+
+    @jax.custom_vjp
+    def _fq(v):
+        q, s = quantize_symmetric(v, bits, axis)
+        return dequantize_symmetric(q, s).astype(v.dtype)
+
+    def _fwd(v):
+        return _fq(v), None
+
+    def _bwd(_, g):
+        return (g,)              # straight-through estimator
+
+    _fq.defvjp(_fwd, _bwd)
+    return _fq(x)
+
+
+def bytes_per_element(p: TensorPrecision) -> float:
+    return p.legal.bytes if p.fp is not None else 2.0   # bf16 reference

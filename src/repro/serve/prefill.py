@@ -1,0 +1,85 @@
+"""Fused prefill: populate a decode state from a whole prompt in one pass.
+
+The continuous batcher's slot-local fallback feeds prompts token-by-token
+(correct, O(prompt) decode steps); production serving prefills the KV cache
+with one full-sequence forward — this module provides that path for the
+attention-cache archs and the recurrent-state archs, validated against
+step-by-step decode in tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import lm
+from repro.models.attention import _project_qkv
+from repro.models.common import ModelConfig, rms_norm
+
+
+def prefill_dense(params, tokens, cfg: ModelConfig, max_len: int
+                  ) -> Tuple[jax.Array, Dict]:
+    """tokens (B, S) -> (next-token logits (B, Vp), decode state at S).
+
+    Runs the train-style forward but also captures each layer's K/V for the
+    cache.  bf16 cache only (int8 prefill would quantize at the end).
+    """
+    assert cfg.arch_class in ("dense", "moe", "vlm")
+    assert cfg.kv_cache_dtype == "bf16", "int8 prefill: quantize post-hoc"
+    Bsz, S = tokens.shape
+    x = lm._embed(params, tokens, cfg)
+    positions = jnp.arange(S)[None, :]
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    def body(h, layer_p):
+        # capture K/V exactly as attend_train computes them
+        hin = rms_norm(h, layer_p["ln_attn"], cfg.norm_eps)
+        _, k, v = _project_qkv(hin, layer_p["attn"], cfg, positions)
+        h = B.transformer_fwd(h, layer_p, cfg, positions=positions)
+        return h, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (jnp.einsum("bd,dv->bv", x[:, -1, :].astype(jnp.bfloat16),
+                         params["unembed"].astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+              * cfg.logit_scale)
+
+    pad = max_len - S
+    state = {
+        "k": jnp.pad(ks.astype(jnp.bfloat16), ((0, 0),) * 3 + ((0, pad), (0, 0))),
+        "v": jnp.pad(vs.astype(jnp.bfloat16), ((0, 0),) * 3 + ((0, pad), (0, 0))),
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, state
+
+
+def prefill_recurrent(params, tokens, cfg: ModelConfig, max_len: int
+                      ) -> Tuple[jax.Array, Dict]:
+    """Prefill for rwkv: run the chunked forward carrying per-layer states."""
+    assert cfg.arch_class == "rwkv"
+    Bsz, S = tokens.shape
+    x = lm._embed(params, tokens, cfg)
+
+    def body(h, layer_p):
+        h, st = B.rwkv_fwd(h, layer_p, cfg, state=None, chunked=True)
+        return h, (st["s"], st["x_att"], st["x_ffn"])
+
+    x, (s_all, xa_all, xf_all) = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (jnp.einsum("bd,dv->bv", x[:, -1, :].astype(jnp.bfloat16),
+                         params["unembed"].astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+              * cfg.logit_scale)
+    state = {"s": s_all, "x_att": xa_all.astype(jnp.bfloat16),
+             "x_ffn": xf_all.astype(jnp.bfloat16),
+             "length": jnp.asarray(S, jnp.int32)}
+    return logits, state
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int):
+    if cfg.arch_class == "rwkv":
+        return prefill_recurrent(params, tokens, cfg, max_len)
+    return prefill_dense(params, tokens, cfg, max_len)

@@ -1,0 +1,145 @@
+"""Checkpointing + fault tolerance.
+
+Design (DESIGN.md §6):
+  * step-numbered directories, each written to a temp name and atomically
+    renamed — a crash mid-write never corrupts the latest checkpoint
+  * a `manifest.json` records the tree structure; arrays go in one .npz
+  * `AsyncCheckpointer` runs saves on a writer thread so the train loop
+    does not stall (device->host copy happens synchronously, the disk write
+    asynchronously) — the standard TPU checkpointing overlap
+  * `restore_latest` scans for the newest complete checkpoint (incomplete
+    temp dirs are ignored and garbage-collected) -> crash/preemption restart
+  * elastic re-scaling: checkpoints are host numpy, so a restore may target
+    a *different* mesh — pass `sharding_tree` and arrays are placed per the
+    new topology (`jax.device_put`).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save. Returns the final directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):      # re-save of the same step: replace
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic publish
+    return final
+
+
+def _complete_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, name)
+        if name.endswith(".tmp"):
+            shutil.rmtree(full, ignore_errors=True)   # gc partial writes
+            continue
+        if name.startswith("step_") and \
+                os.path.exists(os.path.join(full, "manifest.json")):
+            steps.append(int(name[5:]))
+    return sorted(steps)
+
+
+def restore(path: str, like: PyTree,
+            sharding_tree: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of `like`; optionally re-shard elastically."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shards = (jax.tree.leaves(sharding_tree)
+              if sharding_tree is not None else [None] * len(flat_like))
+    leaves = []
+    for (p, leaf), sh in zip(flat_like, shards):
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in p)
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def restore_latest(ckpt_dir: str, like: PyTree,
+                   sharding_tree: Optional[PyTree] = None):
+    """-> (tree, step) of the newest complete checkpoint, or (None, -1)."""
+    steps = _complete_steps(ckpt_dir)
+    if not steps:
+        return None, -1
+    step = steps[-1]
+    return restore(os.path.join(ckpt_dir, f"step_{step:08d}"), like,
+                   sharding_tree), step
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    steps = _complete_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlap disk writes with training; at most one save in flight."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved_step = -1
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
+        self.wait()                                   # one in flight max
+        host_tree = jax.tree.map(np.asarray, tree)    # sync device->host
+
+        def _write():
+            save(self.ckpt_dir, step, host_tree, extra)
+            prune(self.ckpt_dir, self.keep)
+            self.last_saved_step = step
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,99 @@
+"""AdamW + learning-rate schedules (cosine and MiniCPM's WSD), pure JAX.
+
+Optimizer state is a pytree parallel to params (m, v); ZeRO-1 sharding of
+(m, v) over the data axis is applied by `repro.launch.sharding`
+(`zero1_axes`), not here — the math is sharding-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1         # WSD: fraction of steps in final decay
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        sched = 1.0
+    elif cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        sched = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # MiniCPM warmup-stable-decay: flat until the last decay_frac of
+        # training, then an exponential-ish linear drop
+        decay_start = cfg.total_steps * (1.0 - cfg.decay_frac)
+        t = jnp.clip((step - decay_start)
+                     / max(cfg.total_steps - decay_start, 1), 0.0, 1.0)
+        sched = 1.0 - 0.9 * t
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * sched
+
+
+def init_opt_state(params: PyTree) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.zeros_like, params))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params: PyTree, grads: PyTree,
+                 state: OptState) -> Tuple[PyTree, OptState, Dict]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v), \
+        {"lr": lr, "grad_norm": gnorm}

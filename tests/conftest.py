@@ -1,0 +1,16 @@
+"""Shared test config.
+
+NOTE: do NOT set XLA_FLAGS / device-count env vars here — smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py forces
+the 512-device placeholder topology (and only in its own process).
+"""
+from hypothesis import HealthCheck, settings
+
+# jax dispatch inside property bodies easily exceeds hypothesis' 200 ms
+# deadline on a 1-core container; disable deadlines globally.
+settings.register_profile(
+    "repro",
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("repro")

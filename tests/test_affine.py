@@ -1,0 +1,77 @@
+"""Unit + property tests for the affine-arithmetic domain."""
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.affine import AffineForm
+from repro.core.interval import Interval
+
+finite = st.floats(min_value=-1e3, max_value=1e3, allow_nan=False,
+                   allow_infinity=False)
+
+
+def test_cancellation_x_minus_x():
+    # the paper's headline affine win: x - x == 0 exactly
+    x = AffineForm.from_interval(5, 10)
+    r = (x - x).to_interval()
+    assert r.lo == 0.0 and r.hi == 0.0
+
+
+def test_interval_no_cancellation_affine_does():
+    x = AffineForm.from_interval(0, 255)
+    # 2x - x = x exactly under affine
+    r = (x * 2 - x).to_interval()
+    assert math.isclose(r.lo, 0.0, abs_tol=1e-9)
+    assert math.isclose(r.hi, 255.0, rel_tol=1e-9)
+
+
+@given(st.tuples(finite, finite).map(sorted), st.tuples(finite, finite).map(sorted),
+       st.floats(0, 1), st.floats(0, 1))
+@settings(max_examples=200)
+def test_mul_sound(ab, cd, t1, t2):
+    (a, b), (c, d) = ab, cd
+    x = AffineForm.from_interval(a, b)
+    y = AffineForm.from_interval(c, d)
+    vx = a + t1 * (b - a)
+    vy = c + t2 * (d - c)
+    iv = (x * y).to_interval()
+    assert iv.lo - 1e-6 * (1 + abs(vx * vy)) <= vx * vy <= iv.hi + 1e-6 * (1 + abs(vx * vy))
+
+
+@given(st.tuples(finite, finite).map(sorted), st.floats(0, 1))
+@settings(max_examples=200)
+def test_square_sound(ab, t):
+    a, b = ab
+    x = AffineForm.from_interval(a, b)
+    v = a + t * (b - a)
+    iv = (x ** 2).to_interval()
+    # soundness only: the affine parabola bound may dip below 0 by r^2/2
+    # (affine forms cannot represent the x^2 >= 0 constraint exactly)
+    assert iv.lo <= v * v + 1e-6 * (1 + v * v)
+    assert v * v <= iv.hi + 1e-6 * (1 + v * v)
+
+
+@given(st.tuples(st.floats(1, 1e3), st.floats(1, 1e3)).map(sorted), st.floats(0, 1))
+@settings(max_examples=200)
+def test_reciprocal_sound(ab, t):
+    a, b = ab
+    x = AffineForm.from_interval(a, b)
+    v = a + t * (b - a)
+    iv = x.reciprocal().to_interval()
+    assert iv.lo - 1e-9 <= 1.0 / v <= iv.hi + 1e-9
+
+
+def test_div_by_interval_containing_zero_is_top():
+    x = AffineForm.from_interval(1, 2)
+    y = AffineForm.from_interval(-1, 1)
+    iv = (x / y).to_interval()
+    assert math.isinf(iv.lo) and math.isinf(iv.hi)
+
+
+def test_shared_vs_fresh_symbols():
+    # shared symbols correlate; fresh ones do not
+    x = AffineForm.from_interval(0, 10)
+    y = AffineForm.from_interval(0, 10)
+    assert (x - x).to_interval().width == 0.0
+    assert (x - y).to_interval().width == 20.0

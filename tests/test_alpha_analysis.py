@@ -1,0 +1,99 @@
+"""alpha-analysis reproduces the paper's static tables exactly."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.range_analysis import analyze, alpha_table
+from repro.dsl.exec import run_abstract, run_float
+from repro.pipelines import dus, hcd, optical_flow, usm
+
+# ---------------------------------------------------------------------------
+# Table II — HCD ranges and alphas
+# ---------------------------------------------------------------------------
+
+TABLE_II = {
+    "img": ((0, 255), 8),
+    "Ix": ((-85, 85), 8),
+    "Iy": ((-85, 85), 8),
+    "Ixy": ((-85 ** 2, 85 ** 2), 14),
+    "Ixx": ((0, 85 ** 2), 13),
+    "Iyy": ((0, 85 ** 2), 13),
+    "Sxy": ((-9 * 85 ** 2, 9 * 85 ** 2), 17),
+    "Sxx": ((0, 9 * 85 ** 2), 16),
+    "Syy": ((0, 9 * 85 ** 2), 16),
+    "det": ((-(9 * 85 ** 2) ** 2, (9 * 85 ** 2) ** 2), 33),
+    "trace": ((0, 2 * 9 * 85 ** 2), 17),
+    "harris": ((-1.16 * (9 * 85 ** 2) ** 2, (9 * 85 ** 2) ** 2), 34),
+}
+
+
+def test_hcd_matches_table_2():
+    res = analyze(hcd.build())
+    for stage, ((lo, hi), alpha) in TABLE_II.items():
+        r = res[stage]
+        assert math.isclose(r.range.lo, lo, rel_tol=1e-9), (stage, r.range)
+        assert math.isclose(r.range.hi, hi, rel_tol=1e-9), (stage, r.range)
+        assert r.alpha == alpha, (stage, r.alpha, alpha)
+
+
+def test_usm_matches_table_5_alpha():
+    alphas = alpha_table(usm.build())
+    assert alphas == {"img": 8, "blurx": 8, "blury": 8, "sharpen": 10,
+                      "masked": 9}
+
+
+def test_dus_matches_table_8_alpha():
+    alphas = alpha_table(dus.build())
+    assert all(a == 8 for a in alphas.values())
+
+
+def test_of_static_alpha_blowup_profile_flat():
+    """Table IX's qualitative claim: V-stage static alphas grow with depth."""
+    p = optical_flow.build()
+    res = analyze(p)
+    vs = [res[f"Vx{k}"].alpha for k in range(1, 5)]
+    assert vs == sorted(vs) and vs[-1] - vs[0] >= 12   # strong growth
+    assert res["It"].alpha == 9
+    assert res["Ix"].alpha == 8
+
+
+# ---------------------------------------------------------------------------
+# framework (§IV-C): per-pixel abstract execution agrees with combined analysis
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("builder", [hcd.build, usm.build, dus.build])
+def test_perpixel_interval_within_combined(builder):
+    p = builder()
+    comb = analyze(p)
+    per = run_abstract(p, (10, 10), "interval")
+    for k in p.topo_order():
+        assert comb[k].range.encloses(per[k]["range"]), k
+
+
+@pytest.mark.parametrize("builder,shape", [(hcd.build, (10, 10)),
+                                           (usm.build, (10, 10))])
+def test_concrete_run_within_perpixel_analysis(builder, shape):
+    """Soundness end-to-end: float exec results live inside analyzed ranges."""
+    p = builder()
+    rng = np.random.default_rng(0)
+    img = rng.integers(0, 256, size=shape).astype(np.float64)
+    env = run_float(p, img, {"weight": 1.0, "thresh": 10.0})
+    comb = analyze(p)
+    for k in p.topo_order():
+        arr = np.asarray(env[k])
+        assert comb[k].range.lo - 1e-6 <= arr.min(), k
+        assert arr.max() <= comb[k].range.hi + 1e-6, k
+
+
+def test_affine_domain_pluggable():
+    """§IV-C: swapping the domain string is the whole integration effort."""
+    p = hcd.build()
+    ia = analyze(p, domain="interval")
+    aa = analyze(p, domain="affine")
+    # both sound: affine's interval hull must contain... no — both must
+    # contain the true range; neither must be malformed.  For linear stages
+    # they agree exactly.
+    for stage in ("img", "Ix", "Iy", "trace"):
+        assert math.isclose(aa[stage].range.lo, ia[stage].range.lo, rel_tol=1e-6)
+        assert math.isclose(aa[stage].range.hi, ia[stage].range.hi, rel_tol=1e-6)

@@ -1,0 +1,107 @@
+"""Profile analysis (§V-A) + beta search (§V-B) + end-to-end workflows."""
+import numpy as np
+import pytest
+
+from repro.core import beta_search
+from repro.core.profile import np_alpha_bits
+from repro.pipelines import workflows as W
+
+
+def test_np_alpha_bits_matches_scalar_formula():
+    from repro.core.fixedpoint import alpha_for_range
+    vals = np.array([0.0, 0.4, 1.0, 255.0, 256.0, -1.0, -85.0, -0.2, 7224.9])
+    got = np_alpha_bits(vals)
+    want = [alpha_for_range(min(v, 0.0), max(v, 0.0)) if v != 0 else 1
+            for v in vals]
+    # for single values the formula reduces to alpha_for_range([min(v,0), max(v,0)])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.fixture(scope="module")
+def hcd_setup():
+    return W.make_hcd(n_train=3, n_test=3, shape=(32, 32))
+
+
+@pytest.fixture(scope="module")
+def of_setup():
+    return W.make_of(n_pairs=2, shape=(24, 24))
+
+
+def test_profile_never_exceeds_static(hcd_setup):
+    """Profile ranges are realizable -> always within static analysis."""
+    alphas, _ = W.static_alphas(hcd_setup.pipeline)
+    prof = hcd_setup.profile()
+    for stage in hcd_setup.pipeline.stages:
+        assert prof.alpha_max[stage] <= alphas[stage], stage
+        assert prof.alpha_avg[stage] <= prof.alpha_max[stage], stage
+
+
+def test_profile_refines_deep_stages(of_setup):
+    """Paper Table IX: the static/profile gap grows with pipeline depth."""
+    alphas, _ = W.static_alphas(of_setup.pipeline)
+    prof = of_setup.profile()
+    # last-iteration velocity: static blows up, profile stays small
+    assert alphas["Vx4"] - prof.alpha_max["Vx4"] >= 20
+    # shallow stages: no gap
+    assert alphas["It"] == prof.alpha_max["It"] or \
+        alphas["It"] - prof.alpha_max["It"] <= 1
+
+
+def test_uniform_beta_search_monotone_quality():
+    calls = []
+
+    def qf(m):
+        b = next(iter(m.values()))
+        calls.append(b)
+        return 90.0 + b          # quality rises with beta
+
+    beta, passes = beta_search.uniform_beta_search(["a", "b"], qf, target=95.0,
+                                                   beta_hi=16)
+    assert beta == 5             # 90 + 5 = 95
+    assert passes <= 7           # binary search, few passes (paper's point)
+
+
+def test_reverse_topo_refine_drops_unneeded_bits(hcd_setup):
+    p = hcd_setup.pipeline
+
+    def qf(m):
+        # only 'Ix' actually needs 3 fractional bits
+        return 100.0 if m.get("Ix", 0) >= 3 else 0.0
+
+    start = {n: 8 for n in p.topo_order()}
+    refined, _ = beta_search.reverse_topo_refine(p, start, qf, target=99.0)
+    assert refined["Ix"] == 3
+    assert all(v == 0 for k, v in refined.items() if k != "Ix")
+
+
+def test_hcd_full_flow_quality_and_cost(hcd_setup):
+    """Paper Table III/IV regime: >=99% accuracy, large power/area wins."""
+    alphas, signed = W.static_alphas(hcd_setup.pipeline)
+    res = hcd_setup.run_beta_search(alphas, signed, beta_hi=8)
+    assert res.quality >= 99.0
+    assert res.profile_passes < 60          # few passes (vs simulated annealing)
+    types = W.types_from_alpha(hcd_setup.pipeline, alphas, signed, res.betas)
+    rep = W.design_report(hcd_setup.pipeline, types)
+    assert rep["improvement"]["power"] > 2.0
+    assert rep["improvement"]["area_lut"] > 2.0
+
+
+def test_of_profile_types_meet_aae_target(of_setup):
+    alphas, signed = W.static_alphas(of_setup.pipeline)
+    prof = of_setup.profile()
+    res = of_setup.run_beta_search(prof.alpha_max, signed, beta_hi=12)
+    assert -res.quality <= 2.0              # AAE within 2 degrees
+    types = W.types_from_alpha(of_setup.pipeline, prof.alpha_max, signed,
+                               res.betas)
+    rep = W.design_report(of_setup.pipeline, types)
+    assert rep["improvement"]["power"] > 1.3   # paper: 1.6x
+
+
+def test_dus_psnr_inf_with_enough_beta():
+    b = W.make_dus(n_train=2, n_test=2, shape=(32, 32))
+    alphas, signed = W.static_alphas(b.pipeline)
+    # paper: PSNR -> inf achievable; beta=10 on all stages reaches exactness
+    types = W.types_from_alpha(b.pipeline, alphas, signed,
+                               {n: 10 for n in b.pipeline.stages})
+    q = b.mean_quality(types)
+    assert q > 55.0 or q == float("inf")

@@ -1,0 +1,219 @@
+"""Distribution substrate tests on the 1-device debug mesh.
+
+The full 512-device lowering is exercised by launch/dryrun.py (and its
+results asserted in test_dryrun_results); here we test the mesh-size-
+agnostic machinery: sharding rules, lowering, checkpointing, fault
+tolerance, gradient compression, and the train loop.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.data.batches import TokenStream, make_batch
+from repro.launch import sharding as shd
+from repro.launch.lowering import lower_cell
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.shapes import ShapeCell
+from repro.models.registry import get_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+def test_spec_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # divisible -> sharded
+    assert shd.spec_for((256, 4096), ("batch", "mlp"), mesh) == \
+        P(("data",), "model")
+    # non-divisible head count -> replicated
+    assert shd.spec_for((10, 128), ("kv_heads", "head_dim"), mesh) == \
+        P(None, None)
+    # axis reuse -> second dim replicated
+    assert shd.spec_for((64, 64), ("mlp", "vocab"), mesh) == P("model", None)
+
+
+def test_spec_multipod_batch():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert shd.spec_for((256, 4096), ("batch", "seq"), mesh) == \
+        P(("pod", "data"), None)
+    # batch=1 (long_500k) cannot shard -> replicated
+    assert shd.spec_for((1, 8), ("batch", "seq"), mesh) == P(None, None)
+
+
+def test_zero1_axes_picks_replicated_dim():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # first replicated, divisible dim gets the ZeRO axis (layers: 32 % 16 == 0)
+    axes = shd.zero1_axes(("layers", "embed", "mlp"), (32, 2560, 9728), mesh)
+    assert axes == ("zero1", "embed", "mlp")
+    # non-divisible leading dim -> falls through to the next candidate
+    axes = shd.zero1_axes(("layers", "embed", "mlp"), (30, 2560, 9728), mesh)
+    assert axes == ("layers", "zero1", "mlp")
+
+
+def test_train_rules_fsdp():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = shd.spec_for((2560, 9728), ("embed", "mlp"), mesh,
+                        rules=shd.TRAIN_RULES)
+    assert spec == P(("data",), "model")        # 2D weight sharding
+
+
+# ---------------------------------------------------------------------------
+# lowering on the debug mesh (1 device) — same code path as the dry-run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,arch", [("train", "qwen3-4b"),
+                                       ("decode", "rwkv6-3b"),
+                                       ("prefill", "mixtral-8x7b")])
+def test_lower_cell_debug_mesh(kind, arch):
+    cfg = get_smoke_config(arch)
+    cell = ShapeCell(f"tiny_{kind}", kind, seq=32, global_batch=2)
+    mesh = make_debug_mesh()
+    lc = lower_cell(arch, cfg, cell, mesh, "debug")
+    a = lc.analyses()
+    assert a["flops"] > 0
+    assert a["hbm_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    ckpt.save(str(tmp_path), 3, tree)
+    restored, step = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_ignores_partial_writes(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    ckpt.save(str(tmp_path), 1, tree)
+    # simulate a crash mid-write at step 2
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    restored, step = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 1                      # partial write invisible
+    assert not (tmp_path / "step_00000002.tmp").exists()  # gc'd
+
+
+def test_checkpoint_prune(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, tree)
+    ckpt.prune(str(tmp_path), keep=2)
+    _, step = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 4
+    assert len(ckpt._complete_steps(str(tmp_path))) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    tree = {"x": jnp.arange(10)}
+    saver = ckpt.AsyncCheckpointer(str(tmp_path))
+    saver.save(7, tree)
+    saver.wait()
+    assert saver.last_saved_step == 7
+    restored, step = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 7
+
+
+def test_deterministic_data_sharding():
+    """Straggler/elastic story: shard batches are step-deterministic."""
+    cfg = get_smoke_config("qwen3-4b")
+    s1 = TokenStream(cfg, 8, 16, n_shards=4, shard_id=2)
+    s2 = TokenStream(cfg, 8, 16, n_shards=4, shard_id=2)
+    b1, b2 = s1.batch_at(5), s2.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = s1.batch_at(6)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# train loop integration
+# ---------------------------------------------------------------------------
+
+def test_train_step_reduces_loss():
+    cfg = get_smoke_config("minicpm-2b")
+    bundle = get_model(cfg)
+    opt = AdamWConfig(lr=3e-3, schedule="constant", warmup_steps=1,
+                      total_steps=50)
+    step_fn = jax.jit(make_train_step(bundle, opt), donate_argnums=(0,))
+    state = init_train_state(bundle, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 32, seed=0)     # overfit one batch
+    losses = []
+    for _ in range(30):
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::10]
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_smoke_config("qwen3-4b")
+    bundle = get_model(cfg)
+    opt = AdamWConfig(lr=1e-3, schedule="constant", grad_clip=1e9)
+    state0 = init_train_state(bundle, jax.random.PRNGKey(1))
+    batch = make_batch(cfg, 4, 16, seed=2)
+    s_full, m_full = jax.jit(make_train_step(bundle, opt))(state0, batch)
+    state0b = init_train_state(bundle, jax.random.PRNGKey(1))
+    s_acc, m_acc = jax.jit(make_train_step(bundle, opt, accum_steps=2))(
+        state0b, batch)
+    # same data, same math up to accumulation-order rounding
+    assert abs(float(m_full["loss"]) - float(m_acc["loss"])) < 1e-2
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     s_full.params, s_acc.params)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_compressed_grads_still_train():
+    cfg = get_smoke_config("qwen3-4b")
+    bundle = get_model(cfg)
+    opt = AdamWConfig(lr=3e-3, schedule="constant")
+    step_fn = jax.jit(make_train_step(bundle, opt, compress_grads=True),
+                      donate_argnums=(0,))
+    state = init_train_state(bundle, jax.random.PRNGKey(0),
+                             compress_grads=True)
+    batch = make_batch(cfg, 4, 32, seed=0)
+    losses = []
+    for _ in range(25):
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+    # error-feedback buffers are live
+    assert state.ef is not None
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Checkpoint written under one topology restores under another."""
+    cfg = get_smoke_config("qwen3-4b")
+    bundle = get_model(cfg)
+    state = init_train_state(bundle, jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 0, state.params)
+    # restore with explicit shardings for a (1,1) debug mesh ("new" topology)
+    mesh = make_debug_mesh()
+    shards = shd.shardings_for_tree(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     state.params),
+        bundle.param_axes(), mesh)
+    restored = ckpt.restore(str(tmp_path / "step_00000000"), state.params,
+                            sharding_tree=shards)
+    np.testing.assert_array_equal(np.asarray(restored["embed"]),
+                                  np.asarray(state.params["embed"]))

@@ -1,0 +1,74 @@
+"""Assert the recorded multi-pod dry-run covered every cell successfully.
+
+The dry-run itself runs out-of-process (it needs the 512-device placeholder
+topology, which must not leak into this test process); this test validates
+its committed results file — re-generate with:
+
+    PYTHONPATH=src python -m repro.launch.dryrun
+"""
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.shapes import SHAPES, skip_reason
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                       "results", "dryrun.json")
+
+
+@pytest.fixture(scope="module")
+def records():
+    if not os.path.exists(RESULTS):
+        pytest.skip("dry-run results not generated yet")
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def test_all_cells_present(records):
+    seen = {(r["arch"], r["shape"], r["mesh"]) for r in records}
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                assert (arch, shape, mesh) in seen, (arch, shape, mesh)
+    # 10 archs x 4 shapes x 2 meshes
+    assert len(seen) == 80
+
+
+def test_no_failures(records):
+    fails = [r for r in records if r["status"] == "fail"]
+    assert not fails, fails
+
+
+def test_skips_match_policy(records):
+    for r in records:
+        cfg = get_config(r["arch"])
+        cell = SHAPES[r["shape"]]
+        expected_skip = skip_reason(cfg, cell) is not None
+        assert (r["status"] == "skip") == expected_skip, r
+
+
+def test_ok_cells_have_analyses(records):
+    for r in records:
+        if r["status"] != "ok":
+            continue
+        assert r["flops"] > 0, r["arch"]
+        assert r["hbm_bytes"] > 0
+        assert r["memory"]["temp_size"] >= 0
+        # train cells must communicate (DP grads at minimum)
+        if r["shape"] == "train_4k":
+            assert r["collective_bytes"].get("total", 0) > 0
+
+
+def test_multi_pod_pod_axis_shards(records):
+    """Multi-pod train runs shard the batch over the pod axis: per-device
+    work (flops) must not exceed the single-pod figure."""
+    for arch in ARCH_IDS:
+        one = [r for r in records if r["arch"] == arch
+               and r["shape"] == "train_4k" and r["status"] == "ok"]
+        if len(one) != 2:
+            continue
+        single = next(r for r in one if r["mesh"] == "pod16x16")
+        multi = next(r for r in one if r["mesh"] == "pod2x16x16")
+        assert multi["flops"] <= single["flops"] * 1.1, arch

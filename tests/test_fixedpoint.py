@@ -1,0 +1,80 @@
+"""Fixed-point type + bit-accurate op tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fixedpoint import (FixedPointType, alpha_for_range, fix_round,
+                                   np_quantize, quantize, dequantize)
+
+
+def test_alpha_formula_paper_values():
+    # Table II anchors
+    assert alpha_for_range(0, 255) == 8
+    assert alpha_for_range(-85, 85) == 8
+    assert alpha_for_range(0, 85 ** 2) == 13
+    assert alpha_for_range(-85 ** 2, 85 ** 2) == 14
+    assert alpha_for_range(0, 9 * 85 ** 2) == 16
+    assert alpha_for_range(-9 * 85 ** 2, 9 * 85 ** 2) == 17
+    assert alpha_for_range(-(9 * 85 ** 2) ** 2, (9 * 85 ** 2) ** 2) == 33
+    assert alpha_for_range(0, 2 * 9 * 85 ** 2) == 17
+    assert alpha_for_range(-1.16 * (9 * 85 ** 2) ** 2, (9 * 85 ** 2) ** 2) == 34
+
+
+def test_type_ranges():
+    t = FixedPointType(8, 0, signed=False)
+    assert t.min_value == 0 and t.max_value == 255
+    t = FixedPointType(8, 4, signed=True)
+    assert t.min_value == -128 and abs(t.max_value - (128 - 2 ** -4)) < 1e-12
+
+
+@given(st.integers(1, 12), st.integers(0, 10),
+       st.floats(-1e4, 1e4, allow_nan=False))
+@settings(max_examples=300)
+def test_fix_round_properties(alpha, beta, x):
+    t = FixedPointType(alpha, beta, signed=True)
+    y = float(fix_round(np.float64(x), t))
+    # in-range, on-grid, and within half a step of the clipped input
+    assert t.min_value - 1e-9 <= y <= t.max_value + 1e-9
+    assert abs(y * 2 ** beta - round(y * 2 ** beta)) < 1e-6
+    clipped = min(max(x, t.min_value), t.max_value)
+    assert abs(y - clipped) <= 0.5 * t.resolution + 1e-9
+
+
+@given(st.integers(1, 12), st.integers(0, 10),
+       st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=16))
+@settings(max_examples=100)
+def test_quantize_matches_numpy_oracle(alpha, beta, xs):
+    t = FixedPointType(alpha, beta, signed=True)
+    x = np.asarray(xs, dtype=np.float64)
+    q_jax = np.asarray(quantize(x, t))
+    q_np = np_quantize(x, t)
+    np.testing.assert_array_equal(q_jax, q_np)
+
+
+def test_quantize_dequantize_roundtrip_on_grid():
+    t = FixedPointType(6, 3, signed=True)
+    grid = np.arange(t.int_min, t.int_max + 1) * t.resolution
+    q = quantize(grid, t)
+    back = np.asarray(dequantize(q, t))
+    np.testing.assert_allclose(back, grid, atol=1e-12)
+
+
+def test_saturation_mode():
+    t = FixedPointType(4, 2, signed=True)   # range [-8, 7.75]
+    assert float(fix_round(np.float64(100.0), t)) == t.max_value
+    assert float(fix_round(np.float64(-100.0), t)) == t.min_value
+
+
+def test_for_range():
+    t = FixedPointType.for_range(0, 255)
+    assert t.alpha == 8 and not t.signed
+    t = FixedPointType.for_range(-85, 85, beta=5)
+    assert t.alpha == 8 and t.signed and t.beta == 5
+
+
+def test_invalid_types():
+    with pytest.raises(ValueError):
+        FixedPointType(0, 0)
+    with pytest.raises(ValueError):
+        FixedPointType(-1, 2)

@@ -1,0 +1,98 @@
+"""Unit + property tests for the interval domain (Algorithm 1 transfer fns)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.interval import Interval, stencil_range
+
+finite = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                   allow_infinity=False)
+
+
+def ivs():
+    return st.tuples(finite, finite).map(lambda t: Interval(min(t), max(t)))
+
+
+def pick(iv, t):
+    """A sample inside iv (clamped against float rounding)."""
+    return min(max(iv.lo + t * (iv.hi - iv.lo), iv.lo), iv.hi)
+
+
+# -- soundness: concrete results always inside abstract results -----------------
+
+@given(ivs(), ivs(), st.floats(0, 1), st.floats(0, 1))
+@settings(max_examples=200)
+def test_add_sub_mul_sound(a, b, ta, tb):
+    x = pick(a, ta)
+    y = pick(b, tb)
+    assert (a + b).contains(x + y)
+    assert (a - b).contains(x - y)
+    # mul can overflow float precision slightly; widen tolerance via contains
+    assert (a * b).contains(x * y) or abs(x * y) > 1e11
+
+
+@given(ivs(), ivs(), st.floats(0, 1), st.floats(0, 1))
+@settings(max_examples=200)
+def test_div_sound(a, b, ta, tb):
+    x = pick(a, ta)
+    y = pick(b, tb)
+    r = a / b
+    if b.lo <= 0.0 <= b.hi:
+        assert math.isinf(r.lo) and math.isinf(r.hi)
+    else:
+        q = x / y
+        if not math.isfinite(q):
+            return                       # float overflow, not an interval issue
+        tol = 1e-9 * (1.0 + abs(q))     # last-ulp slack for large quotients
+        assert r.lo - tol <= q <= r.hi + tol
+
+
+@given(ivs(), st.integers(0, 6), st.floats(0, 1))
+@settings(max_examples=200)
+def test_pow_sound(a, n, t):
+    x = pick(a, t)
+    got = a ** n
+    want = x ** n
+    if abs(want) < 1e30:
+        assert got.contains(want)
+
+
+@given(ivs(), st.floats(0, 1))
+@settings(max_examples=100)
+def test_abs_sqrt_sound(a, t):
+    x = pick(a, t)
+    assert a.abs().contains(abs(x))
+    if x >= 0:
+        assert a.sqrt().contains(math.sqrt(x))
+
+
+def test_even_pow_tighter_than_mul():
+    # the paper's x*x vs x**2 example (§IV-B)
+    x = Interval(-2, 2)
+    assert (x * x).lo == -4 and (x * x).hi == 4
+    assert (x ** 2).lo == 0 and (x ** 2).hi == 4
+
+
+def test_div_by_zero_interval_is_top():
+    assert (Interval(1, 2) / Interval(-1, 1)).lo == -math.inf
+
+
+def test_paper_overestimation_example():
+    # §III-C: x in [5,10] -> interval says x - x = [-5, 5]
+    x = Interval(5, 10)
+    r = x - x
+    assert (r.lo, r.hi) == (-5, 5)
+
+
+def test_sobel_range_is_85():
+    # Table II: 1/12 Sobel on [0,255] -> [-85, 85]
+    r = stencil_range(Interval(0, 255),
+                      [[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], scale=1 / 12)
+    assert (r.lo, r.hi) == (-85, 85)
+
+
+def test_join_and_contains():
+    assert Interval(0, 1).join(Interval(5, 6)).encloses(Interval(2, 3))
+    assert Interval(0, 2).contains(1.5)

@@ -1,0 +1,182 @@
+"""Per-kernel tests: Pallas (interpret mode) vs pure-jnp oracles.
+
+Integer paths assert exact equality; float epilogues use allclose.
+Shapes/dtypes swept per the deliverable spec.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fixedpoint import FixedPointType
+from repro.kernels.qdq import ops as qdq_ops
+from repro.kernels.qdq.kernel import block_dequantize, block_quantize
+from repro.kernels.qdq.ref import block_dequantize_ref, block_quantize_ref
+from repro.kernels.qmatmul.kernel import qmatmul_dequant, qmatmul_i32
+from repro.kernels.qmatmul.ops import matmul_quantized
+from repro.kernels.qmatmul.ref import qmatmul_dequant_ref, qmatmul_i32_ref
+from repro.kernels.stencil.kernel import fixedpoint_stencil
+from repro.kernels.stencil.ops import quantize_weights, stencil_fixed
+from repro.kernels.stencil.ref import fixedpoint_stencil_ref
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# stencil
+# ---------------------------------------------------------------------------
+
+SOBEL = [[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]]
+BLUR = [[1, 4, 6, 4, 1]]
+BOX = [[1, 1, 1], [1, 1, 1], [1, 1, 1]]
+
+
+@pytest.mark.parametrize("H,W,tile_h", [(16, 16, 8), (24, 20, 8), (32, 8, 4),
+                                        (8, 64, 8)])
+@pytest.mark.parametrize("weights,scale", [(SOBEL, 1 / 12), (BLUR, 1 / 16),
+                                           (BOX, 1.0)])
+def test_stencil_kernel_exact_vs_ref(H, W, tile_h, weights, scale):
+    img = RNG.integers(0, 256, (H, W)).astype(np.float32)
+    taps, w_beta = quantize_weights(weights, scale)
+    halo = max(max(abs(dy), abs(dx)) for dy, dx, _ in taps)
+    t_in = FixedPointType(8, 0, signed=False)
+    q = np.pad(img.astype(np.int32), halo, mode="edge")
+    shift = w_beta
+    got = fixedpoint_stencil(jnp.asarray(q), taps, halo, shift,
+                             -(2 ** 15), 2 ** 15 - 1,
+                             tile_h=min(tile_h, H), interpret=True)
+    want = fixedpoint_stencil_ref(jnp.asarray(q), taps, halo, shift,
+                                  -(2 ** 15), 2 ** 15 - 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("beta_in,beta_out", [(0, 0), (0, 4), (4, 4), (2, 6)])
+def test_stencil_ops_close_to_float(beta_in, beta_out):
+    img = RNG.integers(0, 256, (16, 16)).astype(np.float32)
+    t_in = FixedPointType(8, beta_in, signed=False)
+    t_out = FixedPointType(8, beta_out, signed=True)
+    got = np.asarray(stencil_fixed(jnp.asarray(img), SOBEL, 1 / 12, t_in, t_out))
+    # float reference stencil
+    ref = np.zeros_like(img)
+    pad = np.pad(img, 1, mode="edge")
+    for dy in range(3):
+        for dx in range(3):
+            ref += SOBEL[dy][dx] * pad[dy:dy + 16, dx:dx + 16]
+    ref /= 12
+    ref = np.clip(ref, t_out.min_value, t_out.max_value)
+    # error budget: output rounding + weight quantization (Sobel/12 is not
+    # dyadic, so w_beta caps at 12 with |dw| <= 2^-13 per tap)
+    taps, w_beta = quantize_weights(SOBEL, 1 / 12)
+    werr = sum(abs(wq / 2 ** w_beta - w / 12)
+               for (dy, dx, wq), w in zip(
+                   taps, [w for row in SOBEL for w in row if w != 0]))
+    bound = 2 ** -t_out.beta + 255.0 * werr + 1e-5
+    assert np.max(np.abs(got - ref)) <= bound
+
+
+def test_stencil_kernel_vs_ops_pallas_equals_ref_path():
+    img = RNG.integers(0, 256, (24, 24)).astype(np.float32)
+    t_in = FixedPointType(8, 2, signed=False)
+    t_out = FixedPointType(9, 3, signed=True)
+    a = np.asarray(stencil_fixed(jnp.asarray(img), BLUR, 1 / 16, t_in, t_out,
+                                 use_ref=False))
+    b = np.asarray(stencil_fixed(jnp.asarray(img), BLUR, 1 / 16, t_in, t_out,
+                                 use_ref=True))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_stencil_width_budget_guard():
+    t_in = FixedPointType(30, 0, signed=True)
+    with pytest.raises(ValueError, match="int32"):
+        stencil_fixed(jnp.zeros((8, 8), jnp.float32), BOX, 1.0, t_in,
+                      FixedPointType(31, 0))
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,block", [(128, 128, 128, 128),
+                                         (256, 384, 128, 128),
+                                         (64, 64, 64, 32),
+                                         (32, 96, 64, 32)])
+def test_qmatmul_i32_exact(M, K, N, block):
+    a = RNG.integers(-128, 128, (M, K)).astype(np.int8)
+    b = RNG.integers(-128, 128, (K, N)).astype(np.int8)
+    got = qmatmul_i32(jnp.asarray(a), jnp.asarray(b), block, block, block)
+    want = qmatmul_i32_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qmatmul_fused_dequant_matches_ref():
+    M = K = N = 128
+    a = RNG.integers(-128, 128, (M, K)).astype(np.int8)
+    b = RNG.integers(-128, 128, (K, N)).astype(np.int8)
+    sa = RNG.uniform(0.001, 0.1, (M, 1)).astype(np.float32)
+    sb = RNG.uniform(0.001, 0.1, (1, N)).astype(np.float32)
+    got = qmatmul_dequant(*map(jnp.asarray, (a, b, sa, sb)), block_m=64,
+                          block_n=64, block_k=64)
+    want = qmatmul_dequant_ref(*map(jnp.asarray, (a, b, sa, sb)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("M,K,N", [(64, 64, 64), (100, 72, 36), (16, 300, 48)])
+def test_matmul_quantized_accuracy(M, K, N):
+    """Quantized matmul approximates f32 within per-channel int8 error."""
+    a = RNG.normal(size=(M, K)).astype(np.float32)
+    b = RNG.normal(size=(K, N)).astype(np.float32)
+    got = np.asarray(matmul_quantized(jnp.asarray(a), jnp.asarray(b), block=32))
+    want = a @ b
+    # int8 symmetric error bound: ~ (|a| |b| K) / 127 per element, loose 3x
+    bound = 3 * np.abs(a).max() * np.abs(b).max() * K / 127
+    assert np.max(np.abs(got - want)) < bound
+    # and the pallas path equals the ref path bit-for-bit
+    ref = np.asarray(matmul_quantized(jnp.asarray(a), jnp.asarray(b),
+                                      use_ref=True))
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# qdq
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("NB,BS", [(8, 256), (5, 64), (16, 128), (1, 32)])
+def test_block_quantize_matches_ref(NB, BS):
+    x = RNG.normal(size=(NB, BS)).astype(np.float32) * 10
+    q, s = block_quantize(jnp.asarray(x))
+    qr, sr = block_quantize_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    # interpret-mode reductions may differ from jnp by one ulp
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # identical inputs -> bit-identical dequant between kernel and oracle
+    out = block_dequantize(q, s)
+    outr = block_dequantize_ref(q, s)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(outr))
+
+
+@given(st.integers(1, 4).map(lambda k: 2 ** k * 17),
+       st.integers(0, 3))
+@settings(max_examples=20)
+def test_fake_quant_error_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    y = np.asarray(qdq_ops.fake_quant(jnp.asarray(x), block_size=64))
+    # error per element <= scale/2 = absmax/254 per block of 64
+    assert np.max(np.abs(x - y)) <= np.abs(x).max() / 127 + 1e-7
+    assert y.shape == x.shape
+
+
+def test_zero_block_no_nan():
+    x = jnp.zeros((4, 64), jnp.float32)
+    q, s = block_quantize(x)
+    out = np.asarray(block_dequantize(q, s))
+    assert np.all(out == 0) and not np.any(np.isnan(out))
+
+
+def test_compress_decompress_roundtrip_shape():
+    x = RNG.normal(size=(3, 7, 11)).astype(np.float32)
+    q, s, pad = qdq_ops.compress(jnp.asarray(x), block_size=32)
+    y = qdq_ops.decompress(q, s, pad, x.shape)
+    assert y.shape == x.shape
+    assert np.max(np.abs(np.asarray(y) - x)) <= np.abs(x).max() / 127 + 1e-7

