@@ -142,6 +142,42 @@ def table10_of_power() -> Tuple[List, str]:
     return _power_area_table(lambda: W.make_of(3, (32, 32)), "OF", 1.6, 2.5)
 
 
+def table11_smt_alphas() -> Tuple[List, str]:
+    """Paper §V-B/§VI: interval vs SMT vs profile alpha per stage.
+
+    The SMT column is the whole-DAG branch-and-prune analysis (`repro.smt`)
+    emulating the paper's solver-based bounds; sound analyses must nest as
+    profile <= smt <= interval per stage.  The derived line reports how much
+    of the interval->profile gap the solver closes (paper: its Optical Flow
+    bounds nearly match the profile-driven ones)."""
+    from repro.smt import SMTConfig
+
+    makers = {
+        "usm": (lambda: W.make_usm(3, 3, (32, 32)), SMTConfig()),
+        "dus": (lambda: W.make_dus(3, 3, (32, 32)), SMTConfig()),
+        "hcd": (lambda: W.make_hcd(3, 3, (32, 32)), SMTConfig()),
+        "optical_flow": (lambda: W.make_of(2, (24, 24)),
+                         SMTConfig(time_budget_s=90.0)),
+    }
+    rows: List = []
+    closed_bits = 0
+    gap_bits = 0
+    nested = True
+    for name, (make, cfg) in makers.items():
+        b = make()
+        cols = W.alpha_columns(b, smt_config=cfg)
+        for s in b.pipeline.topo_order():
+            c = cols[s]
+            rows.append((name, s, c["interval"], c["smt"], c["profile_max"]))
+            closed_bits += c["interval"] - c["smt"]
+            gap_bits += c["interval"] - c["profile_max"]
+            nested &= (c["profile_max"] <= c["smt"] <= c["interval"])
+    pct = 100.0 * closed_bits / max(gap_bits, 1)
+    return rows, (f"profile<=smt<=interval nesting holds: {nested}; SMT "
+                  f"recovers {closed_bits}/{gap_bits} interval-vs-profile "
+                  f"alpha bits ({pct:.0f}%) across USM/DUS/HCD/OF")
+
+
 def fig5_cdf() -> Tuple[List, str]:
     """Fig 5: per-pixel integral-bit CDFs for HCD stages."""
     b = W.make_hcd(4, 4, (40, 40))

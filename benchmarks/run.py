@@ -118,6 +118,7 @@ def _register():
         "table8_dus_bitwidths": T.table8_dus_bitwidths,
         "table9_of_bitwidths": T.table9_of_bitwidths,
         "table10_of_power": T.table10_of_power,
+        "table11_smt_alphas": T.table11_smt_alphas,
         "fig5_cdf": T.fig5_cdf,
         "fig6_beta_sweep": T.fig6_beta_sweep,
         "kernels": _kernel_bench,

@@ -19,14 +19,20 @@ from repro.pipelines.metrics import psnr
 
 
 def build_edge_enhance():
-    """A custom pipeline: Laplacian edge boost with a noise gate."""
+    """A custom pipeline: Laplacian edge boost with a noise gate.
+
+    `resid` re-reads `img` alongside `boost` — the per-stage interval walk
+    treats the two as independent signals, while the whole-DAG SMT analysis
+    (`domain="smt"`) sees that `boost - img == 0.5*lap` exactly."""
     p = PipelineBuilder("edge_enhance")
     img = p.image("img", 0, 255)
     lap = p.stencil("lap", img, [[0, -1, 0], [-1, 4, -1], [0, -1, 0]])
     mag = p.define("mag", absv(lap))
     boost = p.define("boost", img + 0.5 * lap)
     out = p.define("out", ite(mag < 8.0, img, boost))
+    resid = p.define("resid", boost - img)   # how much boosting happened
     p.output(out)
+    p.output(resid)
     return p.build()
 
 
@@ -35,12 +41,24 @@ def main():
     print(f"pipeline: {pipe.topo_order()}")
 
     print("\n== pluggable domains (paper SS IV-C) ==")
-    for domain in ("interval", "affine"):
-        res = analyze(pipe, domain=domain)
-        alphas = {k: v.alpha for k, v in res.items()}
+    results = {}
+    for domain in ("interval", "affine", "smt"):
+        # "smt" dispatches to the whole-DAG solver analysis (repro.smt):
+        # same one-string integration, solver-tightened bounds
+        results[domain] = analyze(pipe, domain=domain)
+        alphas = {k: v.alpha for k, v in results[domain].items()}
         print(f"   {domain:9s}: {alphas}")
     per_pix = run_abstract(pipe, (12, 12), "interval")
     print(f"   per-pixel : out range {per_pix['out']['range']}")
+
+    print("\n== whole-DAG SMT analysis vs interval (paper SS V-B) ==")
+    ia = results["interval"]
+    sm = results["smt"]
+    for k in pipe.topo_order():
+        note = "  <- tightened" if (sm[k].range.lo, sm[k].range.hi) != \
+            (ia[k].range.lo, ia[k].range.hi) else ""
+        print(f"   {k:6s} interval {ia[k].range!s:>18s}   "
+              f"smt {sm[k].range!s:>22s}{note}")
 
     print("\n== profile + synthesize ==")
     from repro.core.profile import profile_pipeline

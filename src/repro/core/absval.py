@@ -63,14 +63,26 @@ _REGISTRY: Dict[str, Callable[[], Domain]] = {
     "affine": AffineDomain,
 }
 
+# Domains living in modules that register themselves on import; resolved on
+# first use so core stays import-light and cycle-free (repro.smt imports
+# range_analysis, which imports this module).
+_LAZY_MODULES: Dict[str, str] = {
+    "intersect": "repro.core.intersect",
+    "smt": "repro.smt",
+}
+
 
 def register_domain(name: str, factory: Callable[[], Domain]) -> None:
     _REGISTRY[name] = factory
 
 
 def get_domain(name: str) -> Domain:
+    if name not in _REGISTRY and name in _LAZY_MODULES:
+        import importlib
+        importlib.import_module(_LAZY_MODULES[name])
     try:
         return _REGISTRY[name]()
     except KeyError:
-        raise KeyError(f"unknown analysis domain {name!r}; "
-                       f"registered: {sorted(_REGISTRY)}") from None
+        raise KeyError(
+            f"unknown analysis domain {name!r}; registered: "
+            f"{sorted(set(_REGISTRY) | set(_LAZY_MODULES))}") from None

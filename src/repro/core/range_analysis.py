@@ -101,8 +101,15 @@ def analyze(pipeline: Pipeline, domain: str | Domain = "interval",
 
     `input_ranges` overrides the declared ranges of input stages (used by the
     profile-refined re-analysis).
+
+    Domains flagged `whole_dag` (e.g. "smt", see `repro.smt`) cannot run as
+    a per-stage expression walk — the whole pipeline is analyzed at once via
+    the domain's `analyze_pipeline` hook, which returns the same per-stage
+    `StageRange` mapping.
     """
     dom = get_domain(domain) if isinstance(domain, str) else domain
+    if getattr(dom, "whole_dag", False):
+        return dom.analyze_pipeline(pipeline, input_ranges=input_ranges)
     ranges: Dict[str, Interval] = {}
     out: Dict[str, StageRange] = {}
     param_cache: Dict[str, Any] = {}   # shared across stages: one signal/param

@@ -35,10 +35,47 @@ def types_from_alpha(pipeline: Pipeline, alphas: Dict[str, int],
     }
 
 
-def static_alphas(pipeline: Pipeline):
-    res = analyze(pipeline)
+def static_alphas(pipeline: Pipeline, domain: str = "interval"):
+    """Per-stage (alpha, signed) columns of the synthesis flow.
+
+    `domain` selects the static analysis: "interval" (Algorithm 1),
+    "affine", "intersect", or "smt" (whole-DAG solver-style analysis,
+    `repro.smt` — lazily imported by the registry)."""
+    res = analyze(pipeline, domain=domain)
     return ({n: r.alpha for n, r in res.items()},
             {n: r.signed for n, r in res.items()})
+
+
+def smt_alphas(pipeline: Pipeline, config=None):
+    """SMT-column twin of `static_alphas` with explicit budget control."""
+    from repro.smt import analyze_smt
+    res = analyze_smt(pipeline, config=config)
+    return ({n: r.alpha for n, r in res.items()},
+            {n: r.signed for n, r in res.items()})
+
+
+def alpha_columns(setup: "BenchmarkSetup", smt_config=None,
+                  profile: Optional[ProfileResult] = None) -> Dict[str, Dict]:
+    """interval vs smt vs profile alpha columns for one benchmark.
+
+    This is the paper's §VI comparison axis: static interval bounds,
+    solver-tightened static bounds, and profile-driven lower bounds —
+    sound analyses must nest as profile ⊆ smt ⊆ interval per stage."""
+    from repro.smt import analyze_smt
+    ia = analyze(setup.pipeline)
+    sm = analyze_smt(setup.pipeline, config=smt_config)
+    prof = setup.profile() if profile is None else profile
+    return {
+        n: {
+            "interval": ia[n].alpha,
+            "smt": sm[n].alpha,
+            "profile_max": prof.alpha_max[n],
+            "interval_range": ia[n].range,
+            "smt_range": sm[n].range,
+            "profile_range": prof.observed_range[n],
+        }
+        for n in setup.pipeline.topo_order()
+    }
 
 
 @dataclasses.dataclass

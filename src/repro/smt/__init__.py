@@ -1,0 +1,22 @@
+"""`repro.smt` — SMT-style whole-DAG range analysis (paper §V-B).
+
+Emulates the paper's SMT-solver-based alpha analysis without external
+dependencies: the stage DAG is flattened into one constraint system over
+shared input-pixel/parameter variables (`encoder`), satisfiability queries
+"can stage s exceed T?" are answered by HC4 interval contraction + affine
+relaxation + branch-and-prune (`solver`, optionally delegated to z3 via
+`z3backend`), and per-stage bounds are tightened by the paper's dichotomic
+threshold search (`optimize`).
+
+Importing this package registers the `"smt"` analysis domain, so
+
+    from repro.core.range_analysis import analyze
+    analyze(pipeline, domain="smt")          # whole-DAG dispatch
+
+is the complete integration surface (§IV-C).  The registry lazy-loads this
+package on first use of the name, so the import is rarely explicit.
+"""
+from repro.smt import domain as _domain            # registers "smt"
+from repro.smt.optimize import SMTConfig, alpha_table_smt, analyze_smt
+
+__all__ = ["SMTConfig", "analyze_smt", "alpha_table_smt"]

@@ -1,0 +1,48 @@
+"""Registry glue: the "smt" entry in the pluggable-domain registry.
+
+The paper's §IV-C framework treats an analysis as a type parameter swap;
+`analyze(pipe, domain="smt")` should therefore be the whole integration
+effort.  Unlike interval/affine, the SMT analysis is *whole-DAG* — it
+cannot run as a per-stage expression walk — so the domain carries a
+`whole_dag` marker plus an `analyze_pipeline` hook that
+`core.range_analysis.analyze` dispatches to.
+
+The per-expression protocol methods still behave like the interval domain,
+so code that feeds this domain to `eval_expr_abstract` directly (e.g. the
+per-pixel abstract executor) degrades gracefully to interval semantics.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.absval import register_domain
+from repro.core.interval import Interval
+
+from repro.smt.optimize import SMTConfig, analyze_smt
+
+
+class SMTDomain:
+    name = "smt"
+    whole_dag = True     # range_analysis.analyze dispatches to analyze_pipeline
+
+    def __init__(self, config: Optional[SMTConfig] = None):
+        self.config = config
+
+    # -- whole-DAG entry point ----------------------------------------------
+    def analyze_pipeline(self, pipeline,
+                         input_ranges: Optional[Dict[str, Interval]] = None):
+        return analyze_smt(pipeline, input_ranges=input_ranges,
+                           config=self.config)
+
+    # -- per-expression protocol (interval fallback) ------------------------
+    def const(self, v: float) -> Interval:
+        return Interval.point(v)
+
+    def fresh_signal(self, rng: Interval) -> Interval:
+        return rng
+
+    def to_interval(self, v: Interval) -> Interval:
+        return v
+
+
+register_domain("smt", SMTDomain)

@@ -1,0 +1,253 @@
+"""Whole-DAG constraint encoding — the front half of `repro.smt`.
+
+The per-stage interval walk (`core.range_analysis`) deliberately discards
+cross-stage correlations: every `Ref` leaf materializes the producer's
+*combined* range as a fresh signal.  The paper's SMT analysis (§V-B) instead
+encodes the whole stage DAG as one constraint system over shared input-pixel
+and parameter variables, so `img - blur(img)` knows both operands read the
+same pixels.
+
+`encode_stage` flattens the transitive expression DAG feeding one stage into
+a flat CSP:
+
+  * each distinct input pixel ``(stage, dy, dx)`` is ONE variable — taps at
+    the same offset share it (correlation recovered), taps at different
+    offsets stay independent (the §IV-B homogeneity model);
+  * each scalar parameter is one shared variable;
+  * every operator application becomes an auxiliary variable with a
+    defining constraint ``v = op(args)``;
+  * flattening is *budgeted*: past ``max_vars``, and across re/up-sampling
+    stages (where tap alignment is data-layout dependent and sharing would
+    be unsound), a producer instance becomes a free "cut" variable bounded
+    by the best already-known sound range for that stage.  Cuts are what
+    make the analysis compositional on deep pipelines: `analyze_smt`
+    tightens stages in topological order, so cut bounds inherit earlier
+    SMT results rather than raw interval ones.
+
+Everything downstream (HC4 contraction, branch-and-prune, dichotomic
+tightening) operates on this CSP; see `repro.smt.solver` / `.optimize`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.graph import (BinOp, Call, Cmp, Const, Expr, ParamRef,
+                              Pipeline, Pow, Ref, Select)
+from repro.core.interval import Interval
+
+# operand encoding: ("v", var_id) or ("c", float)
+Operand = Tuple[str, float]
+
+VAR, CONST = "v", "c"
+
+
+def var(i: int) -> Operand:
+    return (VAR, i)
+
+
+def const(x: float) -> Operand:
+    return (CONST, float(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class Def:
+    """Defining constraint of one auxiliary variable: ``v = op(args)``.
+
+    ops: ``+ - * / pow abs sqrt min max select``.  For ``pow`` the exponent
+    is in `n`; for ``select`` args are ``(cond_l, cond_r, then, other)`` and
+    `cmp` holds the comparison operator of the condition.
+    """
+    op: str
+    args: Tuple[Operand, ...]
+    n: int = 0
+    cmp: str = ""
+
+
+class CSP:
+    """Flat constraint system over interval-boxed real variables."""
+
+    def __init__(self):
+        self.names: List[str] = []
+        self.kinds: List[str] = []          # input | param | cut | aux
+        self.init: List[Interval] = []      # initial box
+        self.defs: List[Optional[Def]] = [] # aux vars only; operands < var id
+
+    # -- construction -------------------------------------------------------
+    def new_var(self, name: str, iv: Interval, kind: str,
+                d: Optional[Def] = None) -> int:
+        self.names.append(name)
+        self.kinds.append(kind)
+        self.init.append(iv)
+        self.defs.append(d)
+        return len(self.names) - 1
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def nvars(self) -> int:
+        return len(self.names)
+
+    def base_vars(self) -> List[int]:
+        """Free variables of the system (everything without a definition)."""
+        return [i for i, d in enumerate(self.defs) if d is None]
+
+    def is_linear(self) -> bool:
+        """True when every def is affine in the base vars (then one affine
+        sweep computes the exact range hull — no search needed)."""
+        for d in self.defs:
+            if d is None:
+                continue
+            if d.op in ("+", "-"):
+                continue
+            if d.op == "*" and (d.args[0][0] == CONST or d.args[1][0] == CONST):
+                continue
+            if d.op == "/" and d.args[1][0] == CONST:
+                continue
+            return False
+        return True
+
+    def cond_dependent_vars(self) -> set:
+        """Base vars some Select condition depends on (transitively).
+
+        The objective has jump discontinuities in these, so monotonicity
+        fixing must exclude them (see solver._monotone_fix).
+        """
+        # deps[v] = set of base vars feeding v
+        deps: List[set] = [set() for _ in range(self.nvars)]
+        for i, d in enumerate(self.defs):
+            if d is None:
+                deps[i].add(i)
+            else:
+                for (tag, val) in d.args:
+                    if tag == VAR:
+                        deps[i] |= deps[int(val)]
+        out: set = set()
+        for d in self.defs:
+            if d is not None and d.op == "select":
+                for (tag, val) in d.args[:2]:
+                    if tag == VAR:
+                        out |= deps[int(val)]
+        return out
+
+
+_CMP_OPS = {"<", "<=", ">", ">="}
+
+
+def _is_sampled(pipeline: Pipeline, name: str) -> bool:
+    st = pipeline.stages[name]
+    return st.stride != (1, 1) or st.upsample != (1, 1)
+
+
+def encode_stage(pipeline: Pipeline, stage: str,
+                 stage_bounds: Dict[str, Interval],
+                 input_ranges: Optional[Dict[str, Interval]] = None,
+                 max_vars: int = 400) -> Tuple[CSP, int]:
+    """Flatten the DAG feeding `stage` into a CSP; returns (csp, root_var).
+
+    `stage_bounds` must hold a *sound* range for every stage (interval seed,
+    progressively replaced by SMT-tightened ones) — used to bound cut vars.
+    """
+    csp = CSP()
+    inst: Dict[Tuple[str, int, int], Operand] = {}
+    params: Dict[str, int] = {}
+
+    def cut(name: str, dy: int, dx: int, tag: str = "") -> Operand:
+        return var(csp.new_var(f"{name}[{dy},{dx}]{tag}", stage_bounds[name],
+                               "cut"))
+
+    def instantiate(name: str, dy: int, dx: int) -> Operand:
+        key = (name, dy, dx)
+        if key in inst:
+            return inst[key]
+        st = pipeline.stages[name]
+        if st.is_input:
+            iv = (input_ranges or {}).get(name, st.input_range)
+            if iv is None:
+                raise ValueError(f"input stage {name!r} has no declared range")
+            op = var(csp.new_var(f"{name}[{dy},{dx}]", iv, "input"))
+        elif name != stage and _is_sampled(pipeline, name):
+            # sampled producer: tap alignment is not uniform across output
+            # pixels, so sharing its expansion would be unsound — cut.
+            op = cut(name, dy, dx)
+        elif csp.nvars >= max_vars:
+            op = cut(name, dy, dx)
+        else:
+            # nearest-expand upsampling makes the *reading* stage's tap->
+            # source mapping alignment-dependent: cut each tap individually.
+            cut_taps = st.upsample != (1, 1)
+            op = encode_expr(st.expr, dy, dx, cut_taps)
+            # the expansion defines the value, but the producer's best known
+            # sound range is extra information the flattened expression may
+            # not imply (it can come from earlier SMT tightening): meet it
+            # into the instance's initial box.
+            if op[0] == VAR:
+                i = int(op[1])
+                b = stage_bounds.get(name)
+                if b is not None:
+                    lo = max(csp.init[i].lo, b.lo)
+                    hi = min(csp.init[i].hi, b.hi)
+                    if lo <= hi:
+                        csp.init[i] = Interval(lo, hi)
+        inst[key] = op
+        return op
+
+    def aux(name: str, d: Def) -> Operand:
+        return var(csp.new_var(name, Interval.top(), "aux", d))
+
+    def encode_expr(e: Expr, Y: int, X: int, cut_taps: bool = False) -> Operand:
+        if isinstance(e, Const):
+            return const(e.value)
+        if isinstance(e, Ref):
+            if cut_taps:
+                key = (e.stage, Y + e.dy, X + e.dx)
+                if key not in inst:
+                    inst[key] = cut(e.stage, Y + e.dy, X + e.dx, "~up")
+                return inst[key]
+            return instantiate(e.stage, Y + e.dy, X + e.dx)
+        if isinstance(e, ParamRef):
+            if e.name not in params:
+                params[e.name] = csp.new_var(
+                    e.name, pipeline.params[e.name], "param")
+            return var(params[e.name])
+        if isinstance(e, BinOp):
+            l = encode_expr(e.left, Y, X, cut_taps)
+            r = encode_expr(e.right, Y, X, cut_taps)
+            if l[0] == CONST and r[0] == CONST:
+                return const(_fold(e.op, l[1], r[1]))
+            return aux(e.op, Def(e.op, (l, r)))
+        if isinstance(e, Pow):
+            b = encode_expr(e.base, Y, X, cut_taps)
+            if b[0] == CONST:
+                return const(b[1] ** e.n)
+            return aux(f"pow{e.n}", Def("pow", (b,), n=e.n))
+        if isinstance(e, Call):
+            args = tuple(encode_expr(a, Y, X, cut_taps) for a in e.args)
+            return aux(e.fn, Def(e.fn, args))
+        if isinstance(e, Select):
+            c = e.cond
+            if not isinstance(c, Cmp) or c.op not in _CMP_OPS:
+                raise ValueError(f"unsupported select condition {c!r}")
+            cl = encode_expr(c.left, Y, X, cut_taps)
+            cr = encode_expr(c.right, Y, X, cut_taps)
+            t = encode_expr(e.then, Y, X, cut_taps)
+            o = encode_expr(e.other, Y, X, cut_taps)
+            return aux("select", Def("select", (cl, cr, t, o), cmp=c.op))
+        raise TypeError(f"unknown expr node {type(e)}")
+
+    root = instantiate(stage, 0, 0)
+    if root[0] == CONST:
+        root = var(csp.new_var("root", Interval.point(root[1]), "aux",
+                               Def("+", (const(root[1]), const(0.0)))))
+    return csp, int(root[1])
+
+
+def _fold(op: str, a: float, b: float) -> float:
+    if op == "+":
+        return a + b
+    if op == "-":
+        return a - b
+    if op == "*":
+        return a * b
+    if op == "/":
+        return a / b if b != 0 else float("inf")
+    raise ValueError(op)

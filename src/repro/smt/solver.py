@@ -1,0 +1,694 @@
+"""Branch-and-prune satisfiability core — the back half of `repro.smt`.
+
+Answers the paper's §V-B queries — "can stage `s` exceed threshold T?" —
+over the CSP produced by `repro.smt.encoder`, without any external solver:
+
+  * **HC4 contraction**: forward interval evaluation of every defining
+    constraint, then backward projection (inverse transfer functions) from
+    the queried bound onto the free variables, iterated to a fixpoint;
+  * **affine relaxation**: one affine-arithmetic sweep with a noise symbol
+    per free variable, so linear cancellation (``img - blur(img)``) is
+    exact; products of *colinear* deviations keep the signed quadratic
+    term, which is what certifies e.g. HCD's ``Ix*Iy <= (3*255/12)^2``;
+  * **monotonicity fixing**: interval-gradient (reverse-mode AD over the
+    DAG) pins free variables whose derivative sign is constant to the
+    bound that maximizes the query — equi-satisfiable, collapses most
+    dimensions;
+  * **branch-and-prune**: when contraction stalls, split a variable
+    (sign-splits of zero-straddling multiplication operands first, then
+    largest smear) and recurse under a node budget.
+
+Verdicts are three-valued: UNSAT is a *certificate* (every box refuted),
+SAT carries a concrete witness value, UNKNOWN means budget exhausted —
+`optimize.dichotomic_tighten` only tightens bounds on UNSAT, so the
+analysis stays sound whatever the budget.
+
+When `z3-solver` is importable (optional extra, see requirements-dev.txt)
+queries can be delegated to it first — `repro.smt.z3backend`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.affine import AffineForm
+from repro.core.interval import Interval
+
+from repro.smt.encoder import CONST, CSP, Def, VAR
+
+UNSAT, SAT, UNKNOWN = "unsat", "sat", "unknown"
+
+_INF = math.inf
+_WIDTH_EPS = 1e-7      # below this a variable is no longer split
+_MEET_SLACK = 1e-9     # relative slack absorbing float round-off in meets
+
+Box = List[Interval]
+
+
+@dataclasses.dataclass
+class Verdict:
+    status: str                      # UNSAT | SAT | UNKNOWN
+    witness: Optional[float] = None  # concrete objective value (SAT / best)
+
+
+# ---------------------------------------------------------------------------
+# interval plumbing
+# ---------------------------------------------------------------------------
+
+def _meet(a: Interval, b: Interval) -> Optional[Interval]:
+    """Intersection; None = empty.  Near-misses within float slack collapse
+    to the touching point instead of reporting empty."""
+    lo = max(a.lo, b.lo)
+    hi = min(a.hi, b.hi)
+    if lo > hi:
+        if lo - hi <= _MEET_SLACK * max(1.0, abs(lo), abs(hi)):
+            mid = 0.5 * (lo + hi)
+            return Interval(mid, mid)
+        return None
+    return Interval(lo, hi)
+
+
+def _val(box: Box, o) -> Interval:
+    return box[int(o[1])] if o[0] == VAR else Interval.point(o[1])
+
+
+def _cmp_decide(op: str, l: Interval, r: Interval) -> Optional[bool]:
+    """Decide `l op r` under the box, or None when undetermined."""
+    if op == "<":
+        if l.hi < r.lo:
+            return True
+        if l.lo >= r.hi:
+            return False
+    elif op == "<=":
+        if l.hi <= r.lo:
+            return True
+        if l.lo > r.hi:
+            return False
+    elif op == ">":
+        if l.lo > r.hi:
+            return True
+        if l.hi <= r.lo:
+            return False
+    elif op == ">=":
+        if l.lo >= r.hi:
+            return True
+        if l.hi < r.lo:
+            return False
+    return None
+
+
+def _forward_op(d: Def, box: Box) -> Interval:
+    a = _val(box, d.args[0])
+    if d.op == "pow":
+        return a ** d.n
+    if d.op == "abs":
+        return a.abs()
+    if d.op == "sqrt":
+        return a.sqrt()
+    b = _val(box, d.args[1])
+    if d.op == "+":
+        return a + b
+    if d.op == "-":
+        return a - b
+    if d.op == "*":
+        return a * b
+    if d.op == "/":
+        return a / b
+    if d.op == "min":
+        return a.min_(b)
+    if d.op == "max":
+        return a.max_(b)
+    if d.op == "select":
+        t = _val(box, d.args[2])
+        o = _val(box, d.args[3])
+        dec = _cmp_decide(d.cmp, a, b)
+        if dec is True:
+            return t
+        if dec is False:
+            return o
+        return t.join(o)
+    raise ValueError(f"unknown op {d.op}")
+
+
+def _ext_div(v: Interval, b: Interval) -> Interval:
+    """Hull of the Kahan extended division v / b (for backward mul)."""
+    if b.lo > 0 or b.hi < 0:
+        return v / b
+    if b.lo == 0.0 and b.hi > 0:
+        if v.lo > 0:
+            return Interval(v.lo / b.hi, _INF)
+        if v.hi < 0:
+            return Interval(-_INF, v.hi / b.hi)
+    elif b.hi == 0.0 and b.lo < 0:
+        if v.lo > 0:
+            return Interval(-_INF, v.lo / b.lo)
+        if v.hi < 0:
+            return Interval(v.hi / b.lo, _INF)
+    return Interval.top()
+
+
+def _root_n(x: float, n: int) -> float:
+    if x <= 0:
+        return 0.0
+    return x ** (1.0 / n)
+
+
+_INFEASIBLE = object()   # backward projection proved the box empty
+
+
+def _backward_op(d: Def, v: Interval, box: Box) -> List:
+    """Inverse projections: contracted intervals for each *var* operand
+    (None = no contraction, _INFEASIBLE = box refuted).  Caller meets
+    Interval results into the box."""
+    out: List = [None] * len(d.args)
+    a = _val(box, d.args[0])
+    if d.op == "pow":
+        n = d.n
+        if n % 2 == 1:
+            lo = math.copysign(_root_n(abs(v.lo), n), v.lo)
+            hi = math.copysign(_root_n(abs(v.hi), n), v.hi)
+            out[0] = Interval(min(lo, hi), max(lo, hi))
+        elif n > 0:
+            r = _root_n(max(v.hi, 0.0), n)
+            if a.lo >= 0:
+                out[0] = Interval(_root_n(max(v.lo, 0.0), n), r)
+            elif a.hi <= 0:
+                out[0] = Interval(-r, -_root_n(max(v.lo, 0.0), n))
+            else:
+                out[0] = Interval(-r, r)
+        return out
+    if d.op == "abs":
+        if a.lo >= 0:
+            out[0] = Interval(max(v.lo, 0.0), v.hi)
+        elif a.hi <= 0:
+            out[0] = Interval(-v.hi, -max(v.lo, 0.0))
+        else:
+            out[0] = Interval(-v.hi, v.hi)
+        return out
+    if d.op == "sqrt":
+        # v = sqrt(max(a, 0)): a <= v.hi^2 always; a >= v.lo^2 only if v.lo>0
+        hi2 = v.hi * v.hi
+        lo2 = v.lo * v.lo if v.lo > 0 else -_INF
+        out[0] = Interval(lo2, hi2)
+        return out
+    b = _val(box, d.args[1])
+    if d.op == "+":
+        out[0] = v - b
+        out[1] = v - a
+    elif d.op == "-":
+        out[0] = v + b
+        out[1] = a - v
+    elif d.op == "*":
+        out[0] = _ext_div(v, b)
+        out[1] = _ext_div(v, a)
+    elif d.op == "/":
+        out[0] = v * b
+        out[1] = _ext_div(a, v)
+    elif d.op == "min":
+        # both operands >= v.lo; an operand must also be <= v.hi when the
+        # other provably cannot supply the minimum
+        for slot, (x, y) in enumerate(((a, b), (b, a))):
+            lo = v.lo
+            hi = x.hi if y.lo <= v.hi else min(x.hi, v.hi)
+            out[slot] = _INFEASIBLE if lo > hi else Interval(lo, hi)
+    elif d.op == "max":
+        for slot, (x, y) in enumerate(((a, b), (b, a))):
+            hi = v.hi
+            lo = x.lo if y.hi >= v.lo else max(x.lo, v.lo)
+            out[slot] = _INFEASIBLE if lo > hi else Interval(lo, hi)
+    elif d.op == "select":
+        dec = _cmp_decide(d.cmp, a, b)
+        if dec is True:
+            out[2] = v
+        elif dec is False:
+            out[3] = v
+    return out
+
+
+def hc4(csp: CSP, box: Box, rounds: int = 6) -> bool:
+    """Forward/backward contraction to (approximate) fixpoint.
+
+    Returns False when the box is proven empty (constraint refuted)."""
+    n = csp.nvars
+    for _ in range(rounds):
+        changed = False
+        for i in range(n):           # forward (operand ids < def id)
+            d = csp.defs[i]
+            if d is None:
+                continue
+            m = _meet(box[i], _forward_op(d, box))
+            if m is None:
+                return False
+            if m is not box[i] and (m.lo != box[i].lo or m.hi != box[i].hi):
+                box[i] = m
+                changed = True
+        for i in range(n - 1, -1, -1):  # backward
+            d = csp.defs[i]
+            if d is None:
+                continue
+            for slot, niv in enumerate(_backward_op(d, box[i], box)):
+                if niv is None:
+                    continue
+                if niv is _INFEASIBLE:
+                    return False     # holds even when the slot is a const
+                tag, val = d.args[slot]
+                if tag != VAR:
+                    continue
+                j = int(val)
+                m = _meet(box[j], niv)
+                if m is None:
+                    return False
+                if m.lo != box[j].lo or m.hi != box[j].hi:
+                    box[j] = m
+                    changed = True
+        if not changed:
+            break
+    return True
+
+
+# ---------------------------------------------------------------------------
+# affine relaxation sweep
+# ---------------------------------------------------------------------------
+
+def _colinear_ratio(a: Dict[int, float], b: Dict[int, float]) -> Optional[float]:
+    """r with b == r*a (same symbol support), else None."""
+    if not a or len(a) != len(b):
+        return None
+    r = None
+    for k, av in a.items():
+        bv = b.get(k)
+        if bv is None or av == 0.0:
+            return None
+        rk = bv / av
+        if r is None:
+            r = rk
+        elif not math.isclose(rk, r, rel_tol=1e-12, abs_tol=1e-300):
+            return None
+    return r
+
+
+def _aff_mul(x: AffineForm, y: AffineForm) -> AffineForm:
+    """Affine product keeping the signed quadratic term when the deviation
+    vectors are colinear: dev_y = r*dev_x  =>  dev_x*dev_y = r*dev_x^2 in
+    r*[0, rad_x^2] — exact, instead of the symmetric ±rad_x*rad_y blob.
+
+    This single refinement is what proves Cauchy–Schwarz-flavored facts like
+    HCD's `Ix*Iy` bound, where interval and plain affine both give ±85²."""
+    r = _colinear_ratio(x.terms, y.terms)
+    if r is None or not x.terms:
+        return x * y
+    rad2 = x.radius ** 2
+    qlo, qhi = (r * 0.0, r * rad2) if r >= 0 else (r * rad2, 0.0)
+    # x*y = x0*y0 + x0*dev_y + y0*dev_x + r*dev_x^2
+    out = AffineForm(x.x0 * y.x0 + 0.5 * (qlo + qhi))
+    terms: Dict[int, float] = {}
+    for k, c in x.terms.items():
+        terms[k] = y.x0 * c + x.x0 * y.terms[k]
+    out.terms.update({k: c for k, c in terms.items() if c != 0.0})
+    err = 0.5 * (qhi - qlo)
+    if err > 0.0:
+        from repro.core.affine import _fresh
+        out.terms[_fresh()] = err
+    return out
+
+
+def affine_sweep(csp: CSP, box: Box) -> bool:
+    """One affine evaluation of the DAG, meeting each var's affine hull into
+    the box.  Returns False on empty.
+
+    Base var `i` gets noise symbol `-(i+1)`: negative ids cannot collide
+    with the non-negative ids AffineForm's `_fresh()` mints for
+    linearization-error terms (aliasing them would fabricate correlations)."""
+    forms: List[Optional[AffineForm]] = [None] * csp.nvars
+
+    def form_of(o) -> AffineForm:
+        if o[0] == CONST:
+            return AffineForm.point(o[1])
+        return forms[int(o[1])]
+
+    for i in range(csp.nvars):
+        d = csp.defs[i]
+        if d is None:
+            iv = box[i]
+            if math.isinf(iv.lo) or math.isinf(iv.hi):
+                forms[i] = AffineForm.from_interval(iv.lo, iv.hi)
+            else:
+                mid, rad = 0.5 * (iv.lo + iv.hi), 0.5 * (iv.hi - iv.lo)
+                forms[i] = AffineForm(mid, {-(i + 1): rad} if rad else {})
+            continue
+        a = form_of(d.args[0])
+        if d.op == "pow":
+            f = a ** d.n
+        elif d.op == "abs":
+            f = a.abs()
+        elif d.op == "sqrt":
+            f = a.sqrt()
+        else:
+            b = form_of(d.args[1])
+            if d.op == "+":
+                f = a + b
+            elif d.op == "-":
+                f = a - b
+            elif d.op == "*":
+                f = _aff_mul(a, b)
+            elif d.op == "/":
+                f = a / b
+            elif d.op == "min":
+                f = a.min_(b)
+            elif d.op == "max":
+                f = a.max_(b)
+            elif d.op == "select":
+                dec = _cmp_decide(d.cmp, a.to_interval(), b.to_interval())
+                t, o = form_of(d.args[2]), form_of(d.args[3])
+                if dec is True:
+                    f = t
+                elif dec is False:
+                    f = o
+                else:
+                    iv = t.to_interval().join(o.to_interval())
+                    f = AffineForm.from_interval(iv.lo, iv.hi)
+            else:
+                raise ValueError(d.op)
+        # meet the hull into the box, but keep the *form* intact: its
+        # correlations are its value (rebuilding from the clamped box would
+        # destroy exactly the colinearity the refined product exploits)
+        m = _meet(box[i], f.to_interval())
+        if m is None:
+            return False
+        box[i] = m
+        forms[i] = f
+    return True
+
+
+# ---------------------------------------------------------------------------
+# interval gradients (reverse mode) + monotonicity fixing
+# ---------------------------------------------------------------------------
+
+_ZERO = Interval.point(0.0)
+_UNIT = Interval(0.0, 1.0)
+
+
+def gradients(csp: CSP, box: Box, root: int) -> List[Interval]:
+    """adjoint[i] ⊇ d(root)/d(var i) over the box (reverse-mode interval AD).
+
+    Select conditions contribute TOP to their operands (jump discontinuity);
+    callers must not monotonicity-fix variables feeding a condition."""
+    adj: List[Interval] = [_ZERO] * csp.nvars
+    adj[root] = Interval.point(1.0)
+    for i in range(csp.nvars - 1, -1, -1):
+        d = csp.defs[i]
+        g = adj[i]
+        if d is None or (g.lo == 0.0 and g.hi == 0.0):
+            continue
+        a = _val(box, d.args[0])
+        if d.op == "pow":
+            if d.n == 0:
+                parts = [_ZERO]      # d(x^0)/dx = 0 (x**-1 would raise)
+            else:
+                parts = [Interval.point(float(d.n)) * a ** (d.n - 1)]
+        elif d.op == "abs":
+            if a.lo >= 0:
+                parts = [Interval.point(1.0)]
+            elif a.hi <= 0:
+                parts = [Interval.point(-1.0)]
+            else:
+                parts = [Interval(-1.0, 1.0)]
+        elif d.op == "sqrt":
+            if a.lo > 0:
+                parts = [Interval(0.5 / math.sqrt(a.hi), 0.5 / math.sqrt(a.lo))]
+            else:
+                parts = [Interval(0.0, _INF)]
+        else:
+            b = _val(box, d.args[1])
+            if d.op == "+":
+                parts = [Interval.point(1.0), Interval.point(1.0)]
+            elif d.op == "-":
+                parts = [Interval.point(1.0), Interval.point(-1.0)]
+            elif d.op == "*":
+                parts = [b, a]
+            elif d.op == "/":
+                if b.lo > 0 or b.hi < 0:
+                    inv = Interval(1.0, 1.0) / b
+                    parts = [inv, -a * (inv ** 2)]
+                else:
+                    parts = [Interval.top(), Interval.top()]
+            elif d.op in ("min", "max"):
+                parts = [_UNIT, _UNIT]
+            elif d.op == "select":
+                dec = _cmp_decide(d.cmp, a, b)
+                if dec is True:
+                    parts = [_ZERO, _ZERO, Interval.point(1.0), _ZERO]
+                elif dec is False:
+                    parts = [_ZERO, _ZERO, _ZERO, Interval.point(1.0)]
+                else:
+                    parts = [Interval.top(), Interval.top(), _UNIT, _UNIT]
+            else:
+                raise ValueError(d.op)
+        for slot, p in enumerate(parts):
+            tag, val = d.args[slot]
+            if tag == VAR:
+                j = int(val)
+                adj[j] = adj[j] + g * p
+    return adj
+
+
+def _monotone_fix(csp: CSP, box: Box, root: int, maximize: bool,
+                  frozen: set) -> bool:
+    """Pin base vars with constant derivative sign to the objective-optimal
+    bound.  Equi-satisfiable for a `root >= T` (maximize) / `root <= T`
+    (minimize) query, since the only non-box constraint is on the root.
+    Returns True when anything was fixed."""
+    adj = gradients(csp, box, root)
+    fixed = False
+    for i in csp.base_vars():
+        if i in frozen or box[i].width <= 0:
+            continue
+        g = adj[i]
+        if g.lo >= 0:
+            v = box[i].hi if maximize else box[i].lo
+        elif g.hi <= 0:
+            v = box[i].lo if maximize else box[i].hi
+        else:
+            continue
+        if math.isinf(v):
+            continue
+        box[i] = Interval.point(v)
+        fixed = True
+    return fixed
+
+
+# ---------------------------------------------------------------------------
+# concrete evaluation (witness extraction)
+# ---------------------------------------------------------------------------
+
+def concrete_eval(csp: CSP, point: Dict[int, float]) -> List[float]:
+    vals = [0.0] * csp.nvars
+
+    def v(o) -> float:
+        return vals[int(o[1])] if o[0] == VAR else float(o[1])
+
+    for i in range(csp.nvars):
+        d = csp.defs[i]
+        if d is None:
+            vals[i] = point[i]
+            continue
+        a = v(d.args[0])
+        if d.op == "pow":
+            vals[i] = a ** d.n
+        elif d.op == "abs":
+            vals[i] = abs(a)
+        elif d.op == "sqrt":
+            vals[i] = math.sqrt(max(a, 0.0))
+        else:
+            b = v(d.args[1])
+            if d.op == "+":
+                vals[i] = a + b
+            elif d.op == "-":
+                vals[i] = a - b
+            elif d.op == "*":
+                vals[i] = a * b
+            elif d.op == "/":
+                vals[i] = a / b if b != 0 else math.copysign(_INF, a)
+            elif d.op == "min":
+                vals[i] = min(a, b)
+            elif d.op == "max":
+                vals[i] = max(a, b)
+            elif d.op == "select":
+                ok = {"<": a < b, "<=": a <= b, ">": a > b, ">=": a >= b}[d.cmp]
+                vals[i] = v(d.args[2]) if ok else v(d.args[3])
+    return vals
+
+
+def _mid(iv: Interval) -> float:
+    if math.isinf(iv.lo) and math.isinf(iv.hi):
+        return 0.0
+    if math.isinf(iv.lo):
+        return iv.hi
+    if math.isinf(iv.hi):
+        return iv.lo
+    return 0.5 * (iv.lo + iv.hi)
+
+
+def _witness_points(csp: CSP, box: Box, root: int,
+                    maximize: bool) -> List[Dict[int, float]]:
+    base = csp.base_vars()
+    mid = {i: _mid(box[i]) for i in base}
+    pts = [mid]
+    adj = gradients(csp, box, root)
+    corner = {}
+    for i in base:
+        g = adj[i]
+        if g.lo >= 0:
+            corner[i] = box[i].hi if maximize else box[i].lo
+        elif g.hi <= 0:
+            corner[i] = box[i].lo if maximize else box[i].hi
+        else:
+            corner[i] = mid[i]
+        if math.isinf(corner[i]):
+            corner[i] = mid[i]
+    pts.append(corner)
+    for pick in (lambda iv: iv.lo, lambda iv: iv.hi):
+        p = {i: pick(box[i]) for i in base}
+        if all(not math.isinf(v) for v in p.values()):
+            pts.append(p)
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# branch and prune
+# ---------------------------------------------------------------------------
+
+def _split_candidates(csp: CSP, box: Box, adj: List[Interval]
+                      ) -> List[Tuple[int, float]]:
+    """(var, split_point) candidates, best first.
+
+    Sign-splits of zero-straddling `*` / `/` / even-`pow` operands come
+    first (closest to the root first): they unlock both the extended-
+    division backward rule and the colinear affine product.  Select
+    conditions against a constant split at the threshold.  Base vars use
+    the smear heuristic (width x |gradient|)."""
+    out: List[Tuple[int, float]] = []
+    seen = set()
+    for i in range(csp.nvars - 1, -1, -1):
+        d = csp.defs[i]
+        if d is None:
+            continue
+        cand = []
+        if d.op in ("*", "/"):
+            cand = [d.args[0], d.args[1]]
+        elif d.op == "pow" and d.n % 2 == 0:
+            cand = [d.args[0]]
+        elif d.op == "select":
+            for a, b in ((d.args[0], d.args[1]), (d.args[1], d.args[0])):
+                if a[0] == VAR and b[0] == CONST:
+                    j = int(a[1])
+                    iv = box[j]
+                    if (j not in seen and iv.lo < b[1] < iv.hi
+                            and iv.width > _WIDTH_EPS):
+                        seen.add(j)
+                        out.append((j, float(b[1])))
+        for o in cand:
+            if o[0] != VAR:
+                continue
+            j = int(o[1])
+            iv = box[j]
+            if j in seen or not (iv.lo < 0.0 < iv.hi):
+                continue
+            if iv.width <= _WIDTH_EPS:
+                continue
+            seen.add(j)
+            out.append((j, 0.0))
+    scored = []
+    for i in csp.base_vars():
+        iv = box[i]
+        w = iv.width
+        if i in seen or w <= _WIDTH_EPS or math.isinf(w):
+            continue
+        g = adj[i]
+        mag = max(abs(g.lo), abs(g.hi))
+        if math.isinf(mag):
+            mag = 1e18
+        scored.append((w * max(mag, 1e-18), i, _mid(iv)))
+    scored.sort(reverse=True)
+    out.extend((i, m) for _, i, m in scored)
+    return out
+
+
+@dataclasses.dataclass
+class BPBudget:
+    max_nodes: int = 48
+    hc4_rounds: int = 6
+
+
+def decide(csp: CSP, root: int, sense: str, threshold: float,
+           budget: Optional[BPBudget] = None) -> Verdict:
+    """Decide satisfiability of `root >= T` (sense "ge") or `root <= T`
+    ("le") subject to the CSP's defining constraints and box.
+
+    UNSAT is certified (all boxes refuted by contraction / relaxation);
+    SAT carries a concrete witness objective value; UNKNOWN = budget out.
+    """
+    bud = budget or BPBudget()
+    maximize = sense == "ge"
+    query = (Interval(threshold, _INF) if maximize
+             else Interval(-_INF, threshold))
+    box0 = list(csp.init)
+    m = _meet(box0[root], query)
+    if m is None:
+        return Verdict(UNSAT)
+    box0[root] = m
+    frozen = csp.cond_dependent_vars()
+
+    best: Optional[float] = None
+    stack: List[Box] = [box0]
+    nodes = 0
+    while stack:
+        nodes += 1
+        if nodes > bud.max_nodes:
+            return Verdict(UNKNOWN, best)
+        box = stack.pop()
+        if not hc4(csp, box, bud.hc4_rounds):
+            continue
+        if not affine_sweep(csp, box):
+            continue
+        if not hc4(csp, box, 2):
+            continue
+        sat_v, best = _check_witness(csp, box, root, maximize, threshold, best)
+        if sat_v is not None:
+            return Verdict(SAT, sat_v)
+        if _monotone_fix(csp, box, root, maximize, frozen):
+            if not (hc4(csp, box, bud.hc4_rounds) and affine_sweep(csp, box)):
+                continue
+            sat_v, best = _check_witness(csp, box, root, maximize, threshold,
+                                         best)
+            if sat_v is not None:
+                return Verdict(SAT, sat_v)
+        adj = gradients(csp, box, root)
+        cands = _split_candidates(csp, box, adj)
+        if not cands:
+            return Verdict(UNKNOWN, best)   # box irreducible yet not refuted
+        j, at = cands[0]
+        iv = box[j]
+        if not (iv.lo < at < iv.hi):
+            at = _mid(iv)
+            if not (iv.lo < at < iv.hi):
+                return Verdict(UNKNOWN, best)
+        left, right = list(box), list(box)
+        left[j] = Interval(iv.lo, at)
+        right[j] = Interval(at, iv.hi)
+        stack.append(left)
+        stack.append(right)
+    return Verdict(UNSAT, best)
+
+
+def _check_witness(csp, box, root, maximize, threshold, best):
+    for pt in _witness_points(csp, box, root, maximize):
+        val = concrete_eval(csp, pt)[root]
+        if math.isnan(val) or math.isinf(val):
+            continue
+        if best is None or (val > best if maximize else val < best):
+            best = val
+        if (val >= threshold) if maximize else (val <= threshold):
+            return val, best
+    return None, best

@@ -1,0 +1,103 @@
+"""Optional z3 delegation for `repro.smt` satisfiability queries.
+
+The subsystem is dependency-free by design: the branch-and-prune core in
+`solver.py` answers every query on its own.  When the `z3-solver` extra is
+importable (see requirements-dev.txt), `decide` here encodes the CSP into
+nonlinear real arithmetic and lets z3 answer first — exactly the paper's
+setup (§V-B) — with the branch-and-prune core as fallback on UNKNOWN /
+timeout.  Nothing in this module may be imported unconditionally elsewhere;
+gate on `HAVE_Z3`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.smt.encoder import CONST, CSP, VAR
+from repro.smt.solver import SAT, UNKNOWN, UNSAT, Verdict
+
+try:
+    import z3  # type: ignore
+
+    HAVE_Z3 = True
+except ImportError:           # pragma: no cover - exercised when extra present
+    z3 = None
+    HAVE_Z3 = False
+
+_CMP = {
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def _encode(csp: CSP, slv) -> list:      # pragma: no cover - needs z3
+    xs = [z3.Real(f"v{i}") for i in range(csp.nvars)]
+
+    def term(o):
+        return xs[int(o[1])] if o[0] == VAR else z3.RealVal(o[1])
+
+    for i, iv in enumerate(csp.init):
+        if not math.isinf(iv.lo):
+            slv.add(xs[i] >= iv.lo)
+        if not math.isinf(iv.hi):
+            slv.add(xs[i] <= iv.hi)
+    for i, d in enumerate(csp.defs):
+        if d is None:
+            continue
+        a = term(d.args[0])
+        if d.op == "pow":
+            e = a
+            for _ in range(d.n - 1):
+                e = e * a
+            slv.add(xs[i] == (z3.RealVal(1) if d.n == 0 else e))
+        elif d.op == "abs":
+            slv.add(xs[i] == z3.If(a >= 0, a, -a))
+        elif d.op == "sqrt":
+            slv.add(xs[i] >= 0, xs[i] * xs[i] == z3.If(a >= 0, a, 0))
+        else:
+            b = term(d.args[1])
+            if d.op == "+":
+                slv.add(xs[i] == a + b)
+            elif d.op == "-":
+                slv.add(xs[i] == a - b)
+            elif d.op == "*":
+                slv.add(xs[i] == a * b)
+            elif d.op == "/":
+                # guarded: when the divisor box straddles zero the interval
+                # seed is [-inf, inf] anyway; only the bound constraints apply
+                slv.add(z3.Implies(b != 0, xs[i] * b == a))
+            elif d.op == "min":
+                slv.add(xs[i] == z3.If(a <= b, a, b))
+            elif d.op == "max":
+                slv.add(xs[i] == z3.If(a >= b, a, b))
+            elif d.op == "select":
+                t, o = term(d.args[2]), term(d.args[3])
+                slv.add(xs[i] == z3.If(_CMP[d.cmp](a, b), t, o))
+    return xs
+
+
+def decide(csp: CSP, root: int, sense: str, threshold: float,
+           timeout_ms: int = 2000) -> Verdict:
+    """z3 verdict for `root >= T` ("ge") / `root <= T` ("le"), UNKNOWN when
+    z3 is unavailable or times out (callers then fall back to B&P)."""
+    if not HAVE_Z3:
+        return Verdict(UNKNOWN)
+    slv = z3.Solver()                        # pragma: no cover - needs z3
+    slv.set("timeout", timeout_ms)
+    xs = _encode(csp, slv)
+    q = (xs[root] >= threshold) if sense == "ge" else (xs[root] <= threshold)
+    slv.add(q)
+    res = slv.check()
+    if res == z3.unsat:
+        return Verdict(UNSAT)
+    if res == z3.sat:
+        w: Optional[float] = None
+        try:
+            mv = slv.model()[xs[root]]
+            w = float(mv.as_fraction()) if mv is not None else None
+        except Exception:
+            w = None
+        return Verdict(SAT, w)
+    return Verdict(UNKNOWN)

@@ -3,14 +3,23 @@
 NOTE: do NOT set XLA_FLAGS / device-count env vars here — smoke tests and
 benches must see the single real CPU device; only launch/dryrun.py forces
 the 512-device placeholder topology (and only in its own process).
-"""
-from hypothesis import HealthCheck, settings
 
-# jax dispatch inside property bodies easily exceeds hypothesis' 200 ms
-# deadline on a 1-core container; disable deadlines globally.
-settings.register_profile(
-    "repro",
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow],
-)
-settings.load_profile("repro")
+`hypothesis` is an optional dev dependency (see requirements-dev.txt): when
+it is absent the tier-1 suite must still collect and run — only the
+property-fuzz module is skipped (mixed modules import via _hyp_compat and
+degrade their property tests to runtime skips).
+"""
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    # skip only the hypothesis-only module; everything else runs without it
+    collect_ignore = ["test_property_fuzz.py"]
+else:
+    # jax dispatch inside property bodies easily exceeds hypothesis' 200 ms
+    # deadline on a 1-core container; disable deadlines globally.
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("repro")

@@ -1,8 +1,7 @@
 """Unit + property tests for the affine-arithmetic domain."""
 import math
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.affine import AffineForm
 from repro.core.interval import Interval

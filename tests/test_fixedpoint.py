@@ -1,8 +1,7 @@
 """Fixed-point type + bit-accurate op tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.fixedpoint import (FixedPointType, alpha_for_range, fix_round,
                                    np_quantize, quantize, dequantize)

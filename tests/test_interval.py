@@ -2,8 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.interval import Interval, stencil_range
 

@@ -6,8 +6,7 @@ Shapes/dtypes swept per the deliverable spec.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.fixedpoint import FixedPointType
 from repro.kernels.qdq import ops as qdq_ops

@@ -1,0 +1,298 @@
+"""`repro.smt` — whole-DAG SMT-style range analysis (paper §V-B).
+
+Covers the encoder's correlation model, the branch-and-prune solver's
+three-valued verdicts, the dichotomic tightener's soundness ordering
+(profile ⊆ smt ⊆ interval on USM and HCD), and the acceptance-level claims:
+alphas never exceed the interval domain's, and HCD's `Ixy` drops a bit
+(the correlated max of `Ix*Iy` is 9*(255/12)^2 < 2^12, which interval
+arithmetic cannot see).
+
+Also hosts the `IntersectDomain._meet` round-off-fallback coverage.
+"""
+import math
+
+import pytest
+
+from repro.core import intersect
+from repro.core.absval import get_domain
+from repro.core.interval import Interval
+from repro.core.range_analysis import analyze
+from repro.dsl.builder import PipelineBuilder
+from repro.pipelines import dus, hcd, usm, workflows as W
+from repro.smt import SMTConfig, analyze_smt
+from repro.smt import solver as S
+from repro.smt.encoder import encode_stage
+
+# analyses shared across tests (HCD SMT is the expensive one: ~10 s)
+_TEST_CFG = SMTConfig(time_budget_s=60.0)
+
+
+@pytest.fixture(scope="module")
+def usm_res():
+    p = usm.build()
+    return p, analyze(p), analyze_smt(p, config=_TEST_CFG)
+
+
+@pytest.fixture(scope="module")
+def hcd_res():
+    p = hcd.build()
+    return p, analyze(p), analyze_smt(p, config=_TEST_CFG)
+
+
+def _diff_pipeline():
+    """d = img - img: per-stage interval walk sees two independent signals;
+    the whole-DAG encoder must share the pixel variable."""
+    p = PipelineBuilder("diff")
+    img = p.image("img", 0, 255)
+    p.define("d", img - img)
+    return p.build()
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def test_encoder_shares_same_pixel():
+    p = _diff_pipeline()
+    csp, root = encode_stage(p, "d", {n: r.range for n, r in
+                                      analyze(p).items()})
+    assert sum(1 for k in csp.kinds if k == "input") == 1
+
+
+def test_encoder_distinct_taps_stay_independent():
+    # blurx taps 5 distinct pixels -> 5 input vars (homogeneity model)
+    p = usm.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, _ = encode_stage(p, "blurx", bounds)
+    assert sum(1 for k in csp.kinds if k == "input") == 5
+
+
+def test_encoder_budget_cut_is_bounded():
+    p = hcd.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, _ = encode_stage(p, "harris", bounds, max_vars=40)
+    cuts = [i for i, k in enumerate(csp.kinds) if k == "cut"]
+    assert cuts, "tiny budget must force cut variables"
+    for i in cuts:
+        assert not math.isinf(csp.init[i].lo) and not math.isinf(csp.init[i].hi)
+
+
+def test_encoder_cuts_sampled_producers():
+    p = dus.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, _ = encode_stage(p, "Uy", bounds)
+    # Ux is up-sampled: its instances must be cuts, not expansions
+    assert any(k == "cut" for k in csp.kinds)
+    assert not any(k == "input" for k in csp.kinds)
+
+
+# ---------------------------------------------------------------------------
+# solver verdicts
+# ---------------------------------------------------------------------------
+
+def test_decide_refutes_and_witnesses_cancellation():
+    p = _diff_pipeline()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, root = encode_stage(p, "d", bounds)
+    assert S.decide(csp, root, "ge", 1.0).status == S.UNSAT
+    v = S.decide(csp, root, "ge", 0.0)
+    assert v.status == S.SAT and v.witness == 0.0
+    assert S.decide(csp, root, "le", -1.0).status == S.UNSAT
+
+
+def test_decide_finds_usm_sharpen_witness():
+    p = usm.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, root = encode_stage(p, "sharpen", bounds)
+    v = S.decide(csp, root, "ge", 400.0, S.BPBudget(64, 6))
+    assert v.status == S.SAT
+    assert v.witness >= 400.0
+    # the true max is 474.140625 (weight=1, center=255, neighborhood=0)
+    assert v.witness <= 474.140625 + 1e-9
+
+
+def test_minmax_backward_projection_refutes_instead_of_raising():
+    # regression: min/max inverse projections used to construct malformed
+    # Intervals (ValueError) when contraction proved the box empty
+    p = PipelineBuilder("clampdiff")
+    img = p.image("img", 0, 255)
+    from repro.dsl.builder import maxv, minv
+    from repro.core.graph import Const
+    m = p.define("m", minv(img, Const(16.0)))
+    p.define("r", m - 2.0 * img)
+    pipe = p.build()
+    ia = analyze(pipe)
+    sm = analyze_smt(pipe, config=_TEST_CFG)
+    for s in pipe.topo_order():
+        assert ia[s].range.encloses(sm[s].range), s
+
+
+def test_pow_zero_exponent_gradient():
+    # regression: d(x^0)/dx used Interval**-1 and raised
+    from repro.core.graph import Pow
+    p = PipelineBuilder("pow0")
+    img = p.image("img", 0, 255)
+    p.define("k", Pow(img - 3.0, 0) + img)
+    pipe = p.build()
+    sm = analyze_smt(pipe, config=_TEST_CFG)
+    assert sm["k"].range.lo == 1.0 and sm["k"].range.hi == 256.0
+
+
+def test_meet_slack_absorbs_roundoff():
+    a = Interval(0.0, 1.0)
+    assert S._meet(a, Interval(1.0 + 1e-12, 2.0)) is not None
+    assert S._meet(a, Interval(1.1, 2.0)) is None
+
+
+# ---------------------------------------------------------------------------
+# analyze_smt: acceptance-level properties
+# ---------------------------------------------------------------------------
+
+def test_usm_smt_subset_of_interval_and_strictly_tighter(usm_res):
+    p, ia, sm = usm_res
+    for s in p.topo_order():
+        assert sm[s].alpha <= ia[s].alpha, s
+        assert ia[s].range.encloses(sm[s].range), s
+    # USM's interval alphas are already alpha-exact (true worst-case ranges
+    # round to the same bit counts), so the win here is strictly tighter
+    # *ranges*: sharpen's true range is [-219.14, 474.14], not [-255, 510].
+    assert sm["sharpen"].range.hi < 510.0 - 1.0
+    assert sm["sharpen"].range.lo > -255.0 + 1.0
+    # ...and it still contains the true extreme (weight=1 corner case)
+    assert sm["sharpen"].range.contains(474.140625)
+    assert sm["sharpen"].range.contains(-219.140625)
+
+
+def test_hcd_smt_subset_and_ixy_alpha_improves(hcd_res):
+    p, ia, sm = hcd_res
+    for s in p.topo_order():
+        assert sm[s].alpha <= ia[s].alpha, s
+        assert ia[s].range.encloses(sm[s].range), s
+    # correlated max of Ix*Iy is 9*(255/12)^2 = 4064.0625 < 2^12: one
+    # full bit below the interval domain's +-85^2 (paper Table II: 14)
+    assert ia["Ixy"].alpha == 14
+    assert sm["Ixy"].alpha == 13
+    assert sm["Ixy"].range.contains(4064.0625)
+
+
+def test_dus_smt_matches_interval_exactly():
+    p = dus.build()
+    ia = analyze(p)
+    sm = analyze_smt(p, config=_TEST_CFG)
+    for s in p.topo_order():
+        assert sm[s].alpha == ia[s].alpha == 8, s
+        assert ia[s].range.encloses(sm[s].range), s
+
+
+def test_smt_alpha_never_worse_than_interval_on_deep_pipeline():
+    from repro.pipelines import optical_flow
+    p = optical_flow.build(n_iters=1)
+    ia = analyze(p)
+    sm = analyze_smt(p, config=SMTConfig(time_budget_s=30.0))
+    for s in p.topo_order():
+        assert sm[s].alpha <= ia[s].alpha, s
+        assert ia[s].range.encloses(sm[s].range), s
+    # the paper's headline: correlation through Denom = alpha^2 + Ix^2 + Iy^2
+    # caps |Vx0| near 0.05*255, far below interval's 0.85*255
+    assert sm["Vx0"].alpha < ia["Vx0"].alpha
+
+
+# ---------------------------------------------------------------------------
+# soundness ordering: profile ⊆ smt ⊆ interval (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [lambda: W.make_usm(3, 3, (32, 32)),
+                                  lambda: W.make_hcd(3, 3, (32, 32))],
+                         ids=["usm", "hcd"])
+def test_soundness_ordering_profile_smt_interval(make):
+    b = make()
+    ia = analyze(b.pipeline)
+    sm = analyze_smt(b.pipeline, config=_TEST_CFG)
+    prof = b.profile()
+    for s in b.pipeline.topo_order():
+        assert sm[s].range.encloses(prof.observed_range[s]), s
+        assert ia[s].range.encloses(sm[s].range), s
+        assert prof.alpha_max[s] <= sm[s].alpha <= ia[s].alpha, s
+
+
+# ---------------------------------------------------------------------------
+# registry / dispatch / config plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_lazy_loads_and_dispatches_whole_dag(usm_res):
+    p, _, sm = usm_res
+    dom = get_domain("smt")
+    assert getattr(dom, "whole_dag", False)
+    via_analyze = analyze(p, domain="smt")
+    assert {k: v.alpha for k, v in via_analyze.items()} == \
+        {k: v.alpha for k, v in sm.items()}
+
+
+def test_smt_alphas_workflow_column(usm_res):
+    p, _, sm = usm_res
+    alphas, signed = W.smt_alphas(p, config=_TEST_CFG)
+    assert alphas == {k: v.alpha for k, v in sm.items()}
+    assert signed["sharpen"] is True and signed["masked"] is False
+
+
+def test_input_range_override_propagates():
+    p = _diff_pipeline()
+    res = analyze_smt(p, input_ranges={"img": Interval(0.0, 16.0)})
+    assert res["img"].range.hi == 16.0
+    assert res["d"].range.lo == res["d"].range.hi == 0.0
+
+
+def test_z3_backend_gated():
+    from repro.smt import z3backend
+    if z3backend.HAVE_Z3:
+        pytest.skip("z3 installed: gating path not reachable")
+    p = _diff_pipeline()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, root = encode_stage(p, "d", bounds)
+    # without z3 the backend must politely return UNKNOWN...
+    assert z3backend.decide(csp, root, "ge", 1.0).status == S.UNKNOWN
+    # ...and analyze_smt must give identical results with z3 disabled
+    a = analyze_smt(p, config=SMTConfig(use_z3="never"))
+    b = analyze_smt(p, config=SMTConfig(use_z3="auto"))
+    assert {k: (v.range.lo, v.range.hi) for k, v in a.items()} == \
+        {k: (v.range.lo, v.range.hi) for k, v in b.items()}
+
+
+def test_z3_backend_answers_when_available():
+    pytest.importorskip("z3")
+    from repro.smt import z3backend
+    p = _diff_pipeline()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, root = encode_stage(p, "d", bounds)
+    assert z3backend.decide(csp, root, "ge", 1.0).status == S.UNSAT
+    assert z3backend.decide(csp, root, "ge", 0.0).status == S.SAT
+
+
+# ---------------------------------------------------------------------------
+# IntersectDomain._meet round-off fallback (satellite)
+# ---------------------------------------------------------------------------
+
+def test_intersect_meet_overlap():
+    m = intersect._meet(Interval(0.0, 2.0), Interval(1.0, 3.0))
+    assert (m.lo, m.hi) == (1.0, 2.0)
+
+
+def test_intersect_meet_roundoff_fallback_prefers_narrower():
+    # both operands are sound over-approximations; when round-off makes them
+    # "disjoint", the fallback must keep the narrower one (still sound)
+    a = Interval(0.0, 1.0)            # width 1
+    b = Interval(1.0 + 1e-9, 2.5)     # width ~1.5
+    assert intersect._meet(a, b) is a
+    assert intersect._meet(b, a) is a
+    # symmetric case: second operand narrower
+    c = Interval(2.0, 2.25)
+    assert intersect._meet(Interval(0.0, 1.0), c) is c
+
+
+def test_intersect_domain_end_to_end_sound():
+    p = hcd.build()
+    ia = analyze(p, domain="interval")
+    ii = analyze(p, domain="intersect")
+    for s in p.topo_order():
+        assert ia[s].range.encloses(ii[s].range), s
+        assert ii[s].alpha <= ia[s].alpha, s
