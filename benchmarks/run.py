@@ -103,6 +103,40 @@ def _lm_beta_sweep():
                   f"(paper Fig.6: HCD accuracy flat until beta floor)")
 
 
+def _smt_throughput():
+    """Solver-throughput smoke: boxes/sec on a fixed HCD decide workload.
+
+    Runs the batched engine and the scalar reference oracle on the same
+    query — "can HCD's det exceed 2^30?" — at their production node budgets
+    and reports boxes/sec for each plus the speedup.  CI prints this line
+    so hot-loop regressions in the branch-and-prune core are visible.
+    """
+    import time as _t
+    from repro.core.range_analysis import analyze
+    from repro.pipelines import hcd
+    from repro.smt import solver as S
+    from repro.smt.encoder import encode_stage
+
+    p = hcd.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, root = encode_stage(p, "det", bounds)
+    threshold = 2.0 ** 30        # deep in UNKNOWN territory: forces search
+    rows = []
+    rates = {}
+    for name, fn, nodes in (("batched", S.decide, 4096),
+                            ("scalar", S.decide_scalar, 256)):
+        t0 = _t.perf_counter()
+        v = fn(csp, root, "ge", threshold, S.BPBudget(nodes, 6))
+        dt = _t.perf_counter() - t0
+        rates[name] = v.nodes / dt
+        rows.append((name, v.status, v.nodes, round(dt, 3),
+                     round(rates[name], 1)))
+    speedup = rates["batched"] / max(rates["scalar"], 1e-9)
+    return rows, (f"HCD det decide: batched {rates['batched']:.0f} boxes/s "
+                  f"vs scalar {rates['scalar']:.0f} boxes/s "
+                  f"({speedup:.1f}x)")
+
+
 BENCHES = {}
 
 
@@ -124,6 +158,7 @@ def _register():
         "kernels": _kernel_bench,
         "lm_quant": _lm_quant_bench,
         "lm_beta_sweep": _lm_beta_sweep,
+        "smt_throughput": _smt_throughput,
     })
 
 

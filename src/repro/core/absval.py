@@ -69,6 +69,7 @@ _REGISTRY: Dict[str, Callable[[], Domain]] = {
 _LAZY_MODULES: Dict[str, str] = {
     "intersect": "repro.core.intersect",
     "smt": "repro.smt",
+    "smt-scalar": "repro.smt",       # reference-oracle solver engine
 }
 
 

@@ -86,6 +86,29 @@ def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
         {"token": tok_shard, "state": state_shard}
 
 
+def normalize_cost_analysis(raw: Any) -> Dict[str, float]:
+    """Flatten `Compiled.cost_analysis()` across JAX versions.
+
+    Older releases return one flat ``{metric: value}`` dict; newer ones
+    return a *list* of per-computation dicts (the entry computation first),
+    and either may be None/empty for trivial programs.  Every consumer in
+    this repo (`LoweredCell.analyses`, and through it dryrun.py,
+    benchmarks/roofline.py) wants the entry computation's flat dict, so
+    normalize here — one helper, not one patch per call site.
+    """
+    if raw is None:
+        return {}
+    if isinstance(raw, dict):
+        return raw
+    # list of per-computation dicts: the entry computation's totals already
+    # include called computations, so merging would double-count — take the
+    # first non-empty entry.
+    for entry in raw:
+        if entry:
+            return entry
+    return {}
+
+
 @dataclasses.dataclass
 class LoweredCell:
     arch: str
@@ -95,7 +118,7 @@ class LoweredCell:
     compiled: Any
 
     def analyses(self) -> Dict:
-        cost = self.compiled.cost_analysis() or {}
+        cost = normalize_cost_analysis(self.compiled.cost_analysis())
         mem = self.compiled.memory_analysis()
         coll = collective_bytes(self.compiled.as_text())
         out = {

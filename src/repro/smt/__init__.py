@@ -8,6 +8,12 @@ relaxation + branch-and-prune (`solver`, optionally delegated to z3 via
 `z3backend`), and per-stage bounds are tightened by the paper's dichotomic
 threshold search (`optimize`).
 
+Queries run on the *batched-box* engine by default: the CSP is compiled
+once into a flat numpy op table (`encoder.compile_csp`) and the whole
+branch-and-prune frontier is contracted/split as (N, nvars) lo/hi arrays —
+`SMTConfig(engine="scalar")` (or `analyze(pipe, domain="smt-scalar")`)
+selects the original box-at-a-time reference oracle.
+
 Importing this package registers the `"smt"` analysis domain, so
 
     from repro.core.range_analysis import analyze
@@ -16,7 +22,7 @@ Importing this package registers the `"smt"` analysis domain, so
 is the complete integration surface (§IV-C).  The registry lazy-loads this
 package on first use of the name, so the import is rarely explicit.
 """
-from repro.smt import domain as _domain            # registers "smt"
+from repro.smt import domain as _domain   # registers "smt" + "smt-scalar"
 from repro.smt.optimize import SMTConfig, alpha_table_smt, analyze_smt
 
 __all__ = ["SMTConfig", "analyze_smt", "alpha_table_smt"]

@@ -10,9 +10,16 @@ cannot run as a per-stage expression walk — so the domain carries a
 The per-expression protocol methods still behave like the interval domain,
 so code that feeds this domain to `eval_expr_abstract` directly (e.g. the
 per-pixel abstract executor) degrades gracefully to interval semantics.
+
+Two registry entries share this adapter: `"smt"` answers queries with the
+batched-box engine (vectorized numpy frontier, the default), and
+`"smt-scalar"` pins the original box-at-a-time reference oracle — useful
+for differential testing and for debugging solver regressions through the
+same `analyze(pipe, domain=...)` surface.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional
 
 from repro.core.absval import register_domain
@@ -24,8 +31,13 @@ from repro.smt.optimize import SMTConfig, analyze_smt
 class SMTDomain:
     name = "smt"
     whole_dag = True     # range_analysis.analyze dispatches to analyze_pipeline
+    engine = "batched"
 
     def __init__(self, config: Optional[SMTConfig] = None):
+        if config is None:
+            config = SMTConfig(engine=self.engine)
+        elif config.engine != self.engine:
+            config = dataclasses.replace(config, engine=self.engine)
         self.config = config
 
     # -- whole-DAG entry point ----------------------------------------------
@@ -45,4 +57,11 @@ class SMTDomain:
         return v
 
 
+class SMTScalarDomain(SMTDomain):
+    """Reference-oracle twin: same analysis, scalar branch-and-prune."""
+    name = "smt-scalar"
+    engine = "scalar"
+
+
 register_domain("smt", SMTDomain)
+register_domain("smt-scalar", SMTScalarDomain)

@@ -32,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.graph import (BinOp, Call, Cmp, Const, Expr, ParamRef,
                               Pipeline, Pow, Ref, Select)
 from repro.core.interval import Interval
@@ -239,6 +241,136 @@ def encode_stage(pipeline: Pipeline, stage: str,
         root = var(csp.new_var("root", Interval.point(root[1]), "aux",
                                Def("+", (const(root[1]), const(0.0)))))
     return csp, int(root[1])
+
+
+# ---------------------------------------------------------------------------
+# program compilation — the batched-box evaluator's input format
+# ---------------------------------------------------------------------------
+#
+# The scalar solver walks `csp.defs` box-by-box through Python dicts/lists.
+# The batched evaluator (solver.hc4_batch & friends) instead runs a whole
+# (N, nvars) frontier of lo/hi arrays through one flat numpy op table; this
+# section compiles a CSP into that table exactly once (cached on the CSP).
+
+OP_ADD, OP_SUB, OP_MUL, OP_DIV, OP_POW = 0, 1, 2, 3, 4
+OP_ABS, OP_SQRT, OP_MIN, OP_MAX, OP_SELECT = 5, 6, 7, 8, 9
+
+OPCODES = {"+": OP_ADD, "-": OP_SUB, "*": OP_MUL, "/": OP_DIV,
+           "pow": OP_POW, "abs": OP_ABS, "sqrt": OP_SQRT,
+           "min": OP_MIN, "max": OP_MAX, "select": OP_SELECT}
+
+CMP_CODES = {"<": 0, "<=": 1, ">": 2, ">=": 3}
+
+
+@dataclasses.dataclass
+class Program:
+    """One CSP compiled to a flat, topo-ordered numpy op table.
+
+    Row ``k`` defines variable ``def_var[k]`` as ``opcode[k]`` applied to up
+    to four operands; operand slot ``j`` is variable ``argv[k, j]`` when
+    ``argv[k, j] >= 0``, else the constant ``argc[k, j]``.  Rows are in
+    increasing ``def_var`` order, so a single forward pass is an evaluation
+    of the whole DAG (operand ids are always < the defined id).
+    """
+    nvars: int
+    def_var: np.ndarray        # (nd,)  int32 — id of the defined variable
+    opcode: np.ndarray         # (nd,)  int8
+    argv: np.ndarray           # (nd,4) int32 operand var id; -1 = constant
+    argc: np.ndarray           # (nd,4) float64 constant (0 where var)
+    nargs: np.ndarray          # (nd,)  int8 number of live operand slots
+    pow_n: np.ndarray          # (nd,)  int16 exponent (pow rows)
+    cmp: np.ndarray            # (nd,)  int8 comparison code (select rows)
+    init_lo: np.ndarray        # (nvars,) initial box
+    init_hi: np.ndarray        # (nvars,)
+    base: np.ndarray           # (nbase,) int32 base (free) variable ids
+    frozen: np.ndarray         # (nvars,) bool — cond-dependent base vars
+    # static split-candidate table, scalar `_split_candidates` order: sign
+    # splits of zero-straddling mul/div/even-pow operands and select
+    # thresholds, nearest the root first.  Columns: (var, split_at,
+    # is_select_threshold); sign splits have split_sel=False and split at 0.
+    split_var: np.ndarray      # (ns,) int32
+    split_at: np.ndarray       # (ns,) float64 (select threshold, else 0.0)
+    split_sel: np.ndarray      # (ns,) bool
+
+    @property
+    def ndefs(self) -> int:
+        return len(self.def_var)
+
+
+_N_SLOTS = 4
+
+
+def compile_csp(csp: CSP) -> Program:
+    """Compile (and cache) the flat numpy program for `csp`."""
+    prog = getattr(csp, "_program", None)
+    if prog is not None:
+        return prog
+    rows = [(i, d) for i, d in enumerate(csp.defs) if d is not None]
+    nd = len(rows)
+    def_var = np.empty(nd, np.int32)
+    opcode = np.empty(nd, np.int8)
+    argv = np.full((nd, _N_SLOTS), -1, np.int32)
+    argc = np.zeros((nd, _N_SLOTS), np.float64)
+    nargs = np.zeros(nd, np.int8)
+    pow_n = np.zeros(nd, np.int16)
+    cmp = np.zeros(nd, np.int8)
+    for k, (i, d) in enumerate(rows):
+        def_var[k] = i
+        opcode[k] = OPCODES[d.op]
+        nargs[k] = len(d.args)
+        pow_n[k] = d.n
+        if d.op == "select":
+            cmp[k] = CMP_CODES[d.cmp]
+        for j, (tag, val) in enumerate(d.args):
+            if tag == VAR:
+                argv[k, j] = int(val)
+            else:
+                argc[k, j] = float(val)
+    init_lo = np.array([iv.lo for iv in csp.init], np.float64)
+    init_hi = np.array([iv.hi for iv in csp.init], np.float64)
+    base = np.array(csp.base_vars(), np.int32)
+    frozen = np.zeros(csp.nvars, bool)
+    for i in csp.cond_dependent_vars():
+        frozen[i] = True
+
+    # static split candidates, mirroring solver._split_candidates' priority
+    # order (reverse def order; within a def: mul/div slots, even-pow
+    # operand, select-vs-constant thresholds).  Deduplication is per-box at
+    # runtime (only the first qualifying row fires), so repeats are fine.
+    s_var: List[int] = []
+    s_at: List[float] = []
+    s_sel: List[bool] = []
+    for i in range(csp.nvars - 1, -1, -1):
+        d = csp.defs[i]
+        if d is None:
+            continue
+        if d.op in ("*", "/"):
+            cand = [d.args[0], d.args[1]]
+        elif d.op == "pow" and d.n % 2 == 0:
+            cand = [d.args[0]]
+        elif d.op == "select":
+            for a, b in ((d.args[0], d.args[1]), (d.args[1], d.args[0])):
+                if a[0] == VAR and b[0] == CONST:
+                    s_var.append(int(a[1]))
+                    s_at.append(float(b[1]))
+                    s_sel.append(True)
+            continue
+        else:
+            continue
+        for o in cand:
+            if o[0] == VAR:
+                s_var.append(int(o[1]))
+                s_at.append(0.0)
+                s_sel.append(False)
+    prog = Program(
+        nvars=csp.nvars, def_var=def_var, opcode=opcode, argv=argv,
+        argc=argc, nargs=nargs, pow_n=pow_n, cmp=cmp,
+        init_lo=init_lo, init_hi=init_hi, base=base, frozen=frozen,
+        split_var=np.array(s_var, np.int32),
+        split_at=np.array(s_at, np.float64),
+        split_sel=np.array(s_sel, bool))
+    csp._program = prog
+    return prog
 
 
 def _fold(op: str, a: float, b: float) -> float:

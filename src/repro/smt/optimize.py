@@ -38,11 +38,24 @@ _INF = math.inf
 
 @dataclasses.dataclass
 class SMTConfig:
-    """Budgets for the branch-and-prune emulation of the paper's solver."""
+    """Budgets for the branch-and-prune emulation of the paper's solver.
+
+    Two engines answer queries: ``"batched"`` (default) runs the whole
+    branch-and-prune frontier as vectorized numpy rows — a node costs ~100x
+    less than a scalar dict walk, which is why its default budgets are ~64x
+    the scalar ones — and ``"scalar"`` is the original box-at-a-time
+    reference oracle (kept for differential tests and debugging; it uses
+    the pre-batching `scalar_*` budgets so equal-engine comparisons stay
+    affordable).
+    """
     max_vars: int = 400         # flattening budget per stage CSP (then cuts)
-    max_nodes: int = 64         # branch-and-prune boxes per query (cap)
-    work_budget: int = 4096     # ~boxes*vars per query: scales nodes down
-                                # on large CSPs where splitting rarely wins
+    engine: str = "batched"     # "batched" | "scalar" (reference oracle)
+    max_nodes: int = 4096       # batched: branch-and-prune boxes per query
+    work_budget: int = 262144   # batched: ~boxes*vars per query — scales
+                                # nodes down on large CSPs
+    scalar_max_nodes: int = 64  # reference-oracle (pre-batching) budgets
+    scalar_work_budget: int = 4096
+    batch: int = 512            # boxes popped per batched solver iteration
     hc4_rounds: int = 6
     real_queries: int = 5       # real-valued bisection steps per side
     unknown_budget: int = 3     # UNKNOWN verdicts tolerated per side before
@@ -50,21 +63,67 @@ class SMTConfig:
     time_budget_s: float = 30.0  # per pipeline; overflow stages keep the seed
     use_z3: str = "auto"        # "auto" | "never" — optional z3 delegation
 
-    def bp_budget(self, csp: CSP) -> S.BPBudget:
-        nodes = max(8, min(self.max_nodes,
-                           self.work_budget // max(csp.nvars, 1)))
-        return S.BPBudget(nodes, self.hc4_rounds)
+    def decide_fn(self):
+        return S.decide if self.engine == "batched" else S.decide_scalar
+
+    def _nodes_for(self, csp: CSP, scalar_scale: bool) -> int:
+        mn, wb = ((self.scalar_max_nodes, self.scalar_work_budget)
+                  if scalar_scale else (self.max_nodes, self.work_budget))
+        return max(8, min(mn, wb // max(csp.nvars, 1)))
+
+    def quick_nodes(self, csp: CSP) -> int:
+        """Pre-batching (scalar-era) node budget — what one PR-1 query got;
+        the batched engine's iterative-deepening quick pass uses this."""
+        return self._nodes_for(csp, scalar_scale=True)
+
+    def bp_budget(self, csp: CSP, deadline: float = _INF) -> S.BPBudget:
+        nodes = self._nodes_for(csp, scalar_scale=self.engine != "batched")
+        return S.BPBudget(nodes, self.hc4_rounds, self.batch, deadline)
 
 
 def _decide(csp: CSP, root: int, sense: str, t: float,
-            cfg: SMTConfig) -> S.Verdict:
+            cfg: SMTConfig, deadline: float = _INF,
+            escalate: bool = True) -> S.Verdict:
     if cfg.use_z3 != "never":
         from repro.smt import z3backend
         if z3backend.HAVE_Z3:
             v = z3backend.decide(csp, root, sense, t)
             if v.status != S.UNKNOWN:
                 return v
-    return S.decide(csp, root, sense, t, cfg.bp_budget(csp))
+    fn = cfg.decide_fn()
+    full = cfg.bp_budget(csp, deadline)
+    if cfg.engine == "batched":
+        # iterative deepening: most dichotomic queries resolve within the
+        # pre-batching node budget (contraction alone certifies them), so
+        # answer those at scalar-era cost and spend the 64x batched budget
+        # only where the quick pass is UNKNOWN.  This keeps the *number*
+        # of queries a stage completes per second no worse than the scalar
+        # engine's while the hard boundary queries get the deep frontier.
+        quick_nodes = cfg.quick_nodes(csp)
+        if full.max_nodes > quick_nodes:
+            v = fn(csp, root, sense, t,
+                   S.BPBudget(quick_nodes, cfg.hc4_rounds, cfg.batch,
+                              deadline))
+            now = time.monotonic()
+            if v.status != S.UNKNOWN or not escalate or now >= deadline:
+                return v
+            # time-box the deep run: a failed escalation must not eat the
+            # whole remaining slice (it returns a sound UNKNOWN at the cut)
+            esc_deadline = (now + max(1.0, 0.25 * (deadline - now))
+                            if math.isfinite(deadline) else deadline)
+            deep = fn(csp, root, sense, t,
+                      dataclasses.replace(full,
+                                          deadline=min(deadline,
+                                                       esc_deadline)))
+            if deep.status != S.UNKNOWN:
+                return deep
+            if v.witness is not None and (
+                    deep.witness is None or
+                    (sense == "ge" and v.witness > deep.witness) or
+                    (sense == "le" and v.witness < deep.witness)):
+                return v
+            return deep
+    return fn(csp, root, sense, t, full)
 
 
 def _pow2_thresholds(lo: float, hi: float) -> list:
@@ -79,7 +138,8 @@ def _pow2_thresholds(lo: float, hi: float) -> list:
 
 
 def _tighten_side(csp: CSP, root: int, iv: Interval, side: str,
-                  cfg: SMTConfig, deadline: float) -> float:
+                  cfg: SMTConfig, deadline: float,
+                  escalate: bool = True) -> float:
     """Sound new bound for one side of `iv` (hi for "hi", lo for "lo")."""
     maximize = side == "hi"
     sense = "ge" if maximize else "le"
@@ -88,17 +148,28 @@ def _tighten_side(csp: CSP, root: int, iv: Interval, side: str,
         return bound
     # floor of the search: best concrete value seen (always achievable)
     floor = iv.lo if maximize else iv.hi
-    v0 = S.decide(csp, root, sense, bound,
-                  S.BPBudget(max_nodes=1, hc4_rounds=cfg.hc4_rounds))
+    v0 = cfg.decide_fn()(csp, root, sense, bound,
+                         S.BPBudget(max_nodes=1, hc4_rounds=cfg.hc4_rounds))
     if v0.status == S.SAT:
         return bound            # the seed bound itself is attained
     if v0.witness is not None:
         floor = v0.witness
 
     unknowns = 0
+    deep_strikes = 0
 
     def q(t: float) -> S.Verdict:
-        return _decide(csp, root, sense, t, cfg)
+        # pass the deadline down so one over-budget query cannot overshoot
+        # the stage's time slice (the batched engine is "anytime": it
+        # returns a sound UNKNOWN at the cutoff).  Deep escalations that
+        # come back UNKNOWN twice stop paying for themselves on this side:
+        # fall back to quick-only queries (PR-1-era behavior) after that.
+        nonlocal deep_strikes
+        allow = escalate and deep_strikes < 2
+        v = _decide(csp, root, sense, t, cfg, deadline, escalate=allow)
+        if allow and v.status == S.UNKNOWN:
+            deep_strikes += 1
+        return v
 
     # -- dichotomic pass over bit boundaries --------------------------------
     bs = _pow2_thresholds(floor, bound) if maximize else \
@@ -157,10 +228,38 @@ def tighten_stage(csp: CSP, root: int, seed: Interval, cfg: SMTConfig,
     iv = box[root]
     if csp.is_linear():
         return iv               # affine hull is exact: no search needed
-    hi = _tighten_side(csp, root, iv, "hi", cfg, deadline)
-    lo = _tighten_side(csp, root, iv, "lo", cfg, deadline)
+    if cfg.engine != "batched":
+        # scalar reference oracle: exact PR-1 semantics — each side may use
+        # the full remaining deadline
+        hi = _tighten_side(csp, root, iv, "hi", cfg, deadline)
+        lo = _tighten_side(csp, root, iv, "lo", cfg, deadline)
+        if lo > hi:             # numerical corner: fall back to the pass-1 hull
+            return iv
+        return Interval(lo, hi)
+    # Phase 1 — quick-only dichotomic search (PR-1 semantics: every query
+    # runs at the pre-batching node budget, so this phase costs what the
+    # scalar engine cost and its bounds are never looser than PR-1's given
+    # the same time).  The hi search runs first; split the time between
+    # the sides so it cannot starve the lo search.
+    now = time.monotonic()
+    span = max(deadline - now, 0.0)
+    hi = _tighten_side(csp, root, iv, "hi", cfg,
+                       min(deadline, now + 0.35 * span), escalate=False)
+    lo = _tighten_side(csp, root, iv, "lo", cfg,
+                       min(deadline, now + 0.7 * span), escalate=False)
     if lo > hi:                 # numerical corner: fall back to the pass-1 hull
         return iv
+    # Phase 2 — spend whatever time is left re-searching the (much smaller)
+    # residual window with deep batched escalations; UNSAT-only updates, so
+    # this can only tighten the phase-1 result.
+    if time.monotonic() < deadline:
+        iv2 = Interval(lo, hi)
+        now = time.monotonic()
+        hi = _tighten_side(csp, root, iv2, "hi", cfg,
+                           min(deadline, now + 0.5 * (deadline - now)))
+        lo = _tighten_side(csp, root, Interval(lo, hi), "lo", cfg, deadline)
+        if lo > hi:
+            return iv2
     return Interval(lo, hi)
 
 
@@ -180,17 +279,31 @@ def analyze_smt(pipeline: Pipeline,
     seed = analyze(pipeline, "interval", input_ranges=input_ranges)
     bounds: Dict[str, Interval] = {n: r.range for n, r in seed.items()}
     deadline = time.monotonic() + cfg.time_budget_s
+    topo = pipeline.topo_order()
+    work = {n for n in topo
+            if not pipeline.stages[n].is_input and bounds[n].width > 0}
+    n_left = len(work)
     out: Dict[str, StageRange] = {}
-    for name in pipeline.topo_order():
-        st = pipeline.stages[name]
+    for name in topo:
         iv = bounds[name]
-        if not st.is_input and iv.width > 0 and time.monotonic() < deadline:
+        now = time.monotonic()
+        if name in work and now < deadline:
+            # fair-share time slicing: with the batched engine's large
+            # per-query budgets a single greedy stage could otherwise eat
+            # the whole pipeline budget and leave deep stages (where the
+            # whole-DAG analysis wins most) with their interval seeds.
+            # Each stage may use up to 2x its equal share of the remaining
+            # time; unused time rolls over to later stages.
+            slice_s = 2.0 * (deadline - now) / max(n_left, 1)
+            stage_deadline = min(deadline, now + max(slice_s, 0.5))
             csp, root = encode_stage(pipeline, name, bounds,
                                      input_ranges=input_ranges,
                                      max_vars=cfg.max_vars)
-            tiv = tighten_stage(csp, root, iv, cfg, deadline)
+            tiv = tighten_stage(csp, root, iv, cfg, stage_deadline)
             m = S._meet(iv, tiv)
             iv = m if m is not None else iv
+        if name in work:
+            n_left -= 1
         bounds[name] = iv
         out[name] = StageRange.from_interval(iv)
     return out

@@ -30,12 +30,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.affine import AffineForm
 from repro.core.interval import Interval
 
-from repro.smt.encoder import CONST, CSP, Def, VAR
+from repro.smt.encoder import (CONST, CSP, Def, Program, VAR, compile_csp,
+                               OP_ABS, OP_ADD, OP_DIV, OP_MAX, OP_MIN,
+                               OP_MUL, OP_POW, OP_SELECT, OP_SQRT, OP_SUB)
 
 UNSAT, SAT, UNKNOWN = "unsat", "sat", "unknown"
 
@@ -45,11 +50,16 @@ _MEET_SLACK = 1e-9     # relative slack absorbing float round-off in meets
 
 Box = List[Interval]
 
+# rolling throughput counters (benchmarks/run.py --only smt_throughput reads
+# these to report solver boxes/sec); reset freely, never used for logic
+STATS = {"boxes": 0, "secs": 0.0}
+
 
 @dataclasses.dataclass
 class Verdict:
     status: str                      # UNSAT | SAT | UNKNOWN
     witness: Optional[float] = None  # concrete objective value (SAT / best)
+    nodes: int = 0                   # boxes processed answering the query
 
 
 # ---------------------------------------------------------------------------
@@ -619,16 +629,23 @@ def _split_candidates(csp: CSP, box: Box, adj: List[Interval]
 class BPBudget:
     max_nodes: int = 48
     hc4_rounds: int = 6
+    batch: int = 512     # boxes popped per iteration (batched engine only)
+    deadline: float = _INF   # time.monotonic() cutoff -> UNKNOWN (anytime)
 
 
-def decide(csp: CSP, root: int, sense: str, threshold: float,
-           budget: Optional[BPBudget] = None) -> Verdict:
-    """Decide satisfiability of `root >= T` (sense "ge") or `root <= T`
-    ("le") subject to the CSP's defining constraints and box.
+def decide_scalar(csp: CSP, root: int, sense: str, threshold: float,
+                  budget: Optional[BPBudget] = None) -> Verdict:
+    """Reference-oracle scalar branch-and-prune (the pre-batching engine).
+
+    Decide satisfiability of `root >= T` (sense "ge") or `root <= T`
+    ("le") subject to the CSP's defining constraints and box.  Kept as the
+    differential-test oracle for `decide` (the batched engine): one box at
+    a time, Python dict/list walks, depth-first stack.
 
     UNSAT is certified (all boxes refuted by contraction / relaxation);
     SAT carries a concrete witness objective value; UNKNOWN = budget out.
     """
+    t0 = time.perf_counter()
     bud = budget or BPBudget()
     maximize = sense == "ge"
     query = (Interval(threshold, _INF) if maximize
@@ -640,46 +657,77 @@ def decide(csp: CSP, root: int, sense: str, threshold: float,
     box0[root] = m
     frozen = csp.cond_dependent_vars()
 
+    def _done(v: Verdict) -> Verdict:
+        STATS["boxes"] += v.nodes
+        STATS["secs"] += time.perf_counter() - t0
+        return v
+
     best: Optional[float] = None
     stack: List[Box] = [box0]
     nodes = 0
     while stack:
         nodes += 1
-        if nodes > bud.max_nodes:
-            return Verdict(UNKNOWN, best)
+        if nodes > bud.max_nodes or time.monotonic() > bud.deadline:
+            return _done(Verdict(UNKNOWN, best, nodes - 1))
         box = stack.pop()
-        if not hc4(csp, box, bud.hc4_rounds):
-            continue
-        if not affine_sweep(csp, box):
-            continue
-        if not hc4(csp, box, 2):
-            continue
-        sat_v, best = _check_witness(csp, box, root, maximize, threshold, best)
+        sat_v, best, children, stuck, _ = _scalar_step(
+            csp, box, root, maximize, threshold, best, frozen,
+            bud.hc4_rounds)
         if sat_v is not None:
-            return Verdict(SAT, sat_v)
-        if _monotone_fix(csp, box, root, maximize, frozen):
-            if not (hc4(csp, box, bud.hc4_rounds) and affine_sweep(csp, box)):
-                continue
-            sat_v, best = _check_witness(csp, box, root, maximize, threshold,
-                                         best)
-            if sat_v is not None:
-                return Verdict(SAT, sat_v)
-        adj = gradients(csp, box, root)
-        cands = _split_candidates(csp, box, adj)
-        if not cands:
-            return Verdict(UNKNOWN, best)   # box irreducible yet not refuted
-        j, at = cands[0]
-        iv = box[j]
+            return _done(Verdict(SAT, sat_v, nodes))
+        if stuck:
+            return _done(Verdict(UNKNOWN, best, nodes))
+        stack.extend(children)
+    return _done(Verdict(UNSAT, best, nodes))
+
+
+def _scalar_step(csp: CSP, box: Box, root: int, maximize: bool,
+                 threshold: float, best, frozen, hc4_rounds: int):
+    """One scalar branch-and-prune node: contract, probe, fix, split.
+
+    Returns (sat_value, best, children, stuck, score): `sat_value`
+    non-None means SAT; `children` is the (possibly empty) list of split
+    boxes; `stuck` marks an irreducible-yet-unrefuted box (UNSAT can no
+    longer be certified); `score` is the split variable's smear (width x
+    clamped |gradient|) so batched-engine callers can push children with
+    the same best-first priority scale `_split_batch` uses.  Shared by
+    `decide_scalar` and the batched engine's small-frontier fallback."""
+    if not hc4(csp, box, hc4_rounds):
+        return None, best, [], False, 0.0
+    if not affine_sweep(csp, box):
+        return None, best, [], False, 0.0
+    if not hc4(csp, box, 2):
+        return None, best, [], False, 0.0
+    sat_v, best = _check_witness(csp, box, root, maximize, threshold, best)
+    if sat_v is not None:
+        return sat_v, best, [], False, 0.0
+    if _monotone_fix(csp, box, root, maximize, frozen):
+        if not (hc4(csp, box, hc4_rounds) and affine_sweep(csp, box)):
+            return None, best, [], False, 0.0
+        sat_v, best = _check_witness(csp, box, root, maximize, threshold,
+                                     best)
+        if sat_v is not None:
+            return sat_v, best, [], False, 0.0
+    adj = gradients(csp, box, root)
+    cands = _split_candidates(csp, box, adj)
+    if not cands:
+        return None, best, [], True, 0.0   # box irreducible yet not refuted
+    j, at = cands[0]
+    iv = box[j]
+    if not (iv.lo < at < iv.hi):
+        at = _mid(iv)
         if not (iv.lo < at < iv.hi):
-            at = _mid(iv)
-            if not (iv.lo < at < iv.hi):
-                return Verdict(UNKNOWN, best)
-        left, right = list(box), list(box)
-        left[j] = Interval(iv.lo, at)
-        right[j] = Interval(at, iv.hi)
-        stack.append(left)
-        stack.append(right)
-    return Verdict(UNSAT, best)
+            return None, best, [], True, 0.0
+    left, right = list(box), list(box)
+    left[j] = Interval(iv.lo, at)
+    right[j] = Interval(at, iv.hi)
+    # same smear scale as _split_batch's priority score
+    w = iv.width if math.isfinite(iv.width) else 1e18
+    mag = max(abs(adj[j].lo), abs(adj[j].hi))
+    if math.isinf(mag) or math.isnan(mag):
+        mag = 1e18
+    score = w * max(mag, 1e-18)
+    return None, best, [left, right], False, score
 
 
 def _check_witness(csp, box, root, maximize, threshold, best):
@@ -692,3 +740,924 @@ def _check_witness(csp, box, root, maximize, threshold, best):
         if (val >= threshold) if maximize else (val <= threshold):
             return val, best
     return None, best
+
+
+# ===========================================================================
+# batched-box engine
+# ===========================================================================
+#
+# Everything below re-implements the scalar walk above over a whole frontier
+# of boxes at once: the frontier is a pair of (N, nvars) lo/hi float arrays,
+# the CSP is compiled once into a flat numpy op table (encoder.compile_csp),
+# and hc4 contraction, the affine relaxation, interval gradients, monotone
+# fixing, witness probes, and splitting all run as (N,)-vectorized sweeps
+# over that table.  A "node" of the branch-and-prune budget is one row —
+# ~100x cheaper than a scalar dict walk — which is what lets SMTConfig's
+# default budgets grow by the same factor.
+#
+# The affine relaxation uses an AF1-style form (dense coefficients over the
+# base variables + one aggregated non-negative error radius per variable)
+# instead of the scalar path's sparse symbol dicts: base-variable
+# correlations — linear cancellation and the colinear signed-quadratic
+# product — are preserved exactly; only correlations *between* fresh
+# linearization-error terms are lumped (sound, and none of the paper
+# pipelines rely on them).
+
+_POS0 = np.float64(0.0)
+_SMALL_BATCH = 12   # below this many rows the scalar per-box path is faster
+
+
+def _b_meet(lo_c, hi_c, nlo, nhi):
+    """Meet (nlo, nhi) into the column (lo_c, hi_c).
+
+    Returns (mlo, mhi, empty, changed) — same slack rule as `_meet`:
+    near-misses within float round-off collapse to the touching point.
+    nan bounds (inf-inf artifacts) carry no information: fmax/fmin drop
+    them, which is exactly "no contraction" on that side."""
+    mlo = np.fmax(lo_c, nlo)
+    mhi = np.fmin(hi_c, nhi)
+    gap = mlo - mhi
+    viol = gap > 0.0
+    if viol.any():
+        slack = _MEET_SLACK * np.maximum(
+            1.0, np.maximum(np.abs(mlo), np.abs(mhi)))
+        near = viol & (gap <= slack) & np.isfinite(mlo) & np.isfinite(mhi)
+        if near.any():
+            mid = 0.5 * (mlo + mhi)
+            mlo = np.where(near, mid, mlo)
+            mhi = np.where(near, mid, mhi)
+        empty = viol & ~near
+    else:
+        empty = viol
+    changed = (mlo != lo_c) | (mhi != hi_c)
+    return mlo, mhi, empty, changed
+
+
+def _b_mul(alo, ahi, blo, bhi):
+    """Interval product with the 0 * inf = 0 convention, elementwise."""
+    p1 = alo * blo
+    p2 = alo * bhi
+    p3 = ahi * blo
+    p4 = ahi * bhi
+    if np.isnan(p1 + p2 + p3 + p4).any():   # 0*inf (or empty-ish inf-inf)
+        p1 = np.where((alo == 0.0) | (blo == 0.0), 0.0, p1)
+        p2 = np.where((alo == 0.0) | (bhi == 0.0), 0.0, p2)
+        p3 = np.where((ahi == 0.0) | (blo == 0.0), 0.0, p3)
+        p4 = np.where((ahi == 0.0) | (bhi == 0.0), 0.0, p4)
+    return (np.minimum(np.minimum(p1, p2), np.minimum(p3, p4)),
+            np.maximum(np.maximum(p1, p2), np.maximum(p3, p4)))
+
+
+def _b_div(alo, ahi, blo, bhi):
+    straddle = (blo <= 0.0) & (0.0 <= bhi)
+    ilo = 1.0 / bhi
+    ihi = 1.0 / blo
+    rlo, rhi = _b_mul(alo, ahi, ilo, ihi)
+    if np.any(straddle):
+        rlo = np.where(straddle, -_INF, rlo)
+        rhi = np.where(straddle, _INF, rhi)
+    return rlo, rhi
+
+
+def _b_pow(alo, ahi, n: int):
+    if n == 0:
+        one = np.ones_like(alo + _POS0)
+        return one, one
+    l = alo ** n
+    h = ahi ** n
+    if n % 2 == 1:
+        return l, h
+    lo = np.where(alo >= 0, l, np.where(ahi < 0, h, 0.0))
+    hi = np.where(alo >= 0, h, np.where(ahi < 0, l, np.maximum(l, h)))
+    return lo, hi
+
+
+def _b_abs(alo, ahi):
+    lo = np.where(alo >= 0, alo, np.where(ahi <= 0, -ahi, 0.0))
+    hi = np.where(alo >= 0, ahi, np.where(ahi <= 0, -alo,
+                                          np.maximum(-alo, ahi)))
+    return lo, hi
+
+
+def _b_sqrt(alo, ahi):
+    return (np.sqrt(np.maximum(alo, 0.0)), np.sqrt(np.maximum(ahi, 0.0)))
+
+
+def _b_cmp(code: int, llo, lhi, rlo, rhi):
+    """Vectorized `_cmp_decide`: (provably_true, provably_false) masks."""
+    if code == 0:      # <
+        return lhi < rlo, llo >= rhi
+    if code == 1:      # <=
+        return lhi <= rlo, llo > rhi
+    if code == 2:      # >
+        return llo > rhi, lhi <= rlo
+    return llo >= rhi, lhi < rlo   # >=
+
+
+def _b_ext_div(vlo, vhi, blo, bhi):
+    """Vectorized Kahan extended division hull (see `_ext_div`)."""
+    nz = (blo > 0) | (bhi < 0)
+    dlo, dhi = _b_div(vlo, vhi, blo, bhi)
+    if np.all(nz):
+        return dlo, dhi
+    rlo = np.where(nz, dlo, -_INF)
+    rhi = np.where(nz, dhi, _INF)
+    m1 = (blo == 0.0) & (bhi > 0)
+    if np.any(m1):
+        c = m1 & (vlo > 0)
+        rlo = np.where(c, vlo / bhi, rlo)
+        rhi = np.where(c, _INF, rhi)
+        c = m1 & (vhi < 0)
+        rlo = np.where(c, -_INF, rlo)
+        rhi = np.where(c, vhi / bhi, rhi)
+    m2 = (bhi == 0.0) & (blo < 0)
+    if np.any(m2):
+        c = m2 & (vlo > 0)
+        rlo = np.where(c, -_INF, rlo)
+        rhi = np.where(c, vlo / blo, rhi)
+        c = m2 & (vhi < 0)
+        rlo = np.where(c, vhi / blo, rlo)
+        rhi = np.where(c, _INF, rhi)
+    return rlo, rhi
+
+
+def _b_root(x, n: int):
+    with np.errstate(invalid="ignore"):
+        r = np.where(x > 0, np.abs(x) ** (1.0 / n), 0.0)
+    return r
+
+
+def _b_arg(prog: Program, k: int, lo, hi, j: int):
+    ix = prog.argv[k, j]
+    if ix >= 0:
+        return lo[:, ix], hi[:, ix]
+    c = prog.argc[k, j]
+    return c, c
+
+
+def _b_forward(prog: Program, k: int, lo, hi):
+    op = prog.opcode[k]
+    alo, ahi = _b_arg(prog, k, lo, hi, 0)
+    if op == OP_POW:
+        return _b_pow(alo, ahi, int(prog.pow_n[k]))
+    if op == OP_ABS:
+        return _b_abs(alo, ahi)
+    if op == OP_SQRT:
+        return _b_sqrt(alo, ahi)
+    blo, bhi = _b_arg(prog, k, lo, hi, 1)
+    if op == OP_ADD:
+        return alo + blo, ahi + bhi
+    if op == OP_SUB:
+        return alo - bhi, ahi - blo
+    if op == OP_MUL:
+        return _b_mul(alo, ahi, blo, bhi)
+    if op == OP_DIV:
+        return _b_div(alo, ahi, blo, bhi)
+    if op == OP_MIN:
+        return np.minimum(alo, blo), np.minimum(ahi, bhi)
+    if op == OP_MAX:
+        return np.maximum(alo, blo), np.maximum(ahi, bhi)
+    # select
+    t, f = _b_cmp(int(prog.cmp[k]), alo, ahi, blo, bhi)
+    tlo, thi = _b_arg(prog, k, lo, hi, 2)
+    olo, ohi = _b_arg(prog, k, lo, hi, 3)
+    jlo = np.minimum(tlo, olo)
+    jhi = np.maximum(thi, ohi)
+    return (np.where(t, tlo, np.where(f, olo, jlo)),
+            np.where(t, thi, np.where(f, ohi, jhi)))
+
+
+def _b_backward(prog: Program, k: int, lo, hi):
+    """Vectorized `_backward_op`: ([(slot, clo, chi), ...], infeasible)."""
+    op = prog.opcode[k]
+    i = prog.def_var[k]
+    vlo, vhi = lo[:, i], hi[:, i]
+    alo, ahi = _b_arg(prog, k, lo, hi, 0)
+    no_inf = np.zeros(lo.shape[0], bool)
+    if op == OP_POW:
+        n = int(prog.pow_n[k])
+        if n % 2 == 1:
+            rl = np.copysign(_b_root(np.abs(vlo), n), vlo)
+            rh = np.copysign(_b_root(np.abs(vhi), n), vhi)
+            return [(0, np.minimum(rl, rh), np.maximum(rl, rh))], no_inf
+        if n > 0:
+            r = _b_root(np.maximum(vhi, 0.0), n)
+            rp = _b_root(np.maximum(vlo, 0.0), n)
+            clo = np.where(alo >= 0, rp, -r)
+            chi = np.where(alo >= 0, r, np.where(ahi <= 0, -rp, r))
+            return [(0, clo, chi)], no_inf
+        return [], no_inf
+    if op == OP_ABS:
+        clo = np.where(alo >= 0, np.maximum(vlo, 0.0), -vhi)
+        chi = np.where(alo >= 0, vhi,
+                       np.where(ahi <= 0, -np.maximum(vlo, 0.0), vhi))
+        return [(0, clo, chi)], no_inf
+    if op == OP_SQRT:
+        hi2 = vhi * vhi
+        lo2 = np.where(vlo > 0, vlo * vlo, -_INF)
+        return [(0, lo2, hi2)], no_inf
+    blo, bhi = _b_arg(prog, k, lo, hi, 1)
+    # only compute projections for slots that are variables — the caller
+    # cannot meet a constant slot anyway (mul-by-stencil-weight is the
+    # single hottest def shape, and this halves its backward cost)
+    v0 = prog.argv[k, 0] >= 0
+    v1 = prog.argv[k, 1] >= 0
+    if op == OP_ADD:
+        out = []
+        if v0:
+            out.append((0, vlo - bhi, vhi - blo))
+        if v1:
+            out.append((1, vlo - ahi, vhi - alo))
+        return out, no_inf
+    if op == OP_SUB:
+        out = []
+        if v0:
+            out.append((0, vlo + blo, vhi + bhi))
+        if v1:
+            out.append((1, alo - vhi, ahi - vlo))
+        return out, no_inf
+    if op == OP_MUL:
+        out = []
+        if v0:
+            out.append((0,) + _b_ext_div(vlo, vhi, blo, bhi))
+        if v1:
+            out.append((1,) + _b_ext_div(vlo, vhi, alo, ahi))
+        return out, no_inf
+    if op == OP_DIV:
+        out = []
+        if v0:
+            out.append((0,) + _b_mul(vlo, vhi, blo, bhi))
+        if v1:
+            out.append((1,) + _b_ext_div(alo, ahi, vlo, vhi))
+        return out, no_inf
+    if op in (OP_MIN, OP_MAX):
+        outs = []
+        infeas = no_inf
+        for slot, (xlo, xhi, ylo, yhi) in enumerate(
+                ((alo, ahi, blo, bhi), (blo, bhi, alo, ahi))):
+            if op == OP_MIN:
+                clo = vlo + np.zeros_like(xhi + _POS0)
+                chi = np.where(ylo <= vhi, xhi, np.minimum(xhi, vhi))
+            else:
+                chi = vhi + np.zeros_like(xlo + _POS0)
+                clo = np.where(yhi >= vlo, xlo, np.maximum(xlo, vlo))
+            bad = clo > chi
+            infeas = infeas | bad
+            # keep meet well-formed on rows just proven infeasible
+            outs.append((slot, np.where(bad, -_INF, clo),
+                         np.where(bad, _INF, chi)))
+        return outs, infeas
+    # select: the decided branch inherits the output interval
+    t, f = _b_cmp(int(prog.cmp[k]), alo, ahi, blo, bhi)
+    return [(2, np.where(t, vlo, -_INF), np.where(t, vhi, _INF)),
+            (3, np.where(f, vlo, -_INF), np.where(f, vhi, _INF))], no_inf
+
+
+def hc4_batch(prog: Program, lo, hi, alive, rounds: int = 6):
+    """Vectorized `hc4` over the whole (N, nvars) frontier, in place.
+
+    Returns the updated alive mask (False = box proven empty)."""
+    with np.errstate(all="ignore"):
+        return _hc4_rows(prog, lo, hi, alive, rounds)
+
+
+def _hc4_rows(prog: Program, lo, hi, alive, rounds: int):
+    for _ in range(rounds):
+        changed = np.zeros(lo.shape[0], bool)
+        for k in range(prog.ndefs):              # forward
+            i = prog.def_var[k]
+            flo, fhi = _b_forward(prog, k, lo, hi)
+            mlo, mhi, empty, ch = _b_meet(lo[:, i], hi[:, i], flo, fhi)
+            alive = alive & ~empty
+            changed |= ch
+            lo[:, i] = mlo
+            hi[:, i] = mhi
+        for k in range(prog.ndefs - 1, -1, -1):  # backward
+            outs, infeas = _b_backward(prog, k, lo, hi)
+            alive = alive & ~infeas
+            for slot, clo, chi in outs:
+                ix = prog.argv[k, slot]
+                if ix < 0:
+                    continue
+                mlo, mhi, empty, ch = _b_meet(lo[:, ix], hi[:, ix], clo, chi)
+                alive = alive & ~empty
+                changed |= ch
+                lo[:, ix] = mlo
+                hi[:, ix] = mhi
+        if not (changed & alive).any():
+            break
+    return alive
+
+
+# ---------------------------------------------------------------------------
+# batched affine relaxation (AF1 forms: dense base coeffs + lumped error)
+# ---------------------------------------------------------------------------
+#
+# A form is the triple (c, K, e): value = c + K @ eps + e*u, eps_i/u in
+# [-1, 1], with one eps per *base* variable and every fresh linearization
+# error lumped into the single non-negative radius e.  Mirrors
+# `affine_sweep`/`_aff_mul` op by op; only inter-error correlations are
+# dropped (sound over-approximation).
+
+_AFFINE_MEM_CAP = 48e6     # bytes of coefficient tensor per sub-batch
+
+
+def _af1_rad(K, e):
+    return np.abs(K).sum(axis=1) + e
+
+
+def _af1_mul(x, y, colinear: bool):
+    """AF1 product; `colinear` enables the `_aff_mul` signed-quadratic
+    refinement where the deviation vectors are colinear and error-free."""
+    cx, Kx, ex = x
+    cy, Ky, ey = y
+    rx = _af1_rad(Kx, ex)
+    ry = _af1_rad(Ky, ey)
+    c = cx * cy
+    K = cy[:, None] * Kx + cx[:, None] * Ky
+    e = np.abs(cx) * ey + np.abs(cy) * ex + rx * ry
+    e = np.where(np.isnan(e), _INF, e)
+    if not colinear:
+        return c, K, e
+    # colinear refinement: dev_y = r * dev_x  =>  dev_x*dev_y = r*dev_x^2
+    # in r*[0, rad_x^2] (exact, signed) instead of +-rad_x*rad_y
+    xnz = Kx != 0.0
+    ynz = Ky != 0.0
+    supp = ~(xnz ^ ynz).any(axis=1) & xnz.any(axis=1)
+    if supp.any():
+        rows = np.arange(Kx.shape[0])
+        jmax = np.argmax(np.abs(Kx), axis=1)
+        kx = Kx[rows, jmax]
+        ky = Ky[rows, jmax]
+        r = np.where(kx == 0.0, 0.0, ky / kx)
+        pr = r[:, None] * Kx
+        close = np.where(
+            xnz, np.abs(Ky - pr) <= 1e-12 * np.maximum(np.abs(Ky),
+                                                       np.abs(pr)),
+            True).all(axis=1)
+        col = supp & close & (ex == 0.0) & (ey == 0.0)
+        if col.any():
+            rad2 = np.abs(Kx).sum(axis=1) ** 2
+            q = r * rad2                     # quadratic term in r*[0, rad2]
+            qlo = np.minimum(q, 0.0)
+            qhi = np.maximum(q, 0.0)
+            c = np.where(col, cx * cy + 0.5 * (qlo + qhi), c)
+            e = np.where(col, 0.5 * (qhi - qlo), e)
+    return c, K, e
+
+
+def _af1_square(x):
+    cx, Kx, ex = x
+    r = _af1_rad(Kx, ex)
+    c = cx * cx + 0.5 * r * r
+    K = 2.0 * cx[:, None] * Kx
+    e = 2.0 * np.abs(cx) * ex + 0.5 * r * r
+    e = np.where(np.isnan(e), _INF, e)
+    return c, K, e
+
+
+def _af1_pow(x, n: int):
+    if n == 0:
+        c = np.ones_like(x[0])
+        return c, np.zeros_like(x[1]), np.zeros_like(x[0])
+    if n == 1:
+        return x
+    if n == 2:
+        return _af1_square(x)
+    half = _af1_pow(_af1_square(x), n // 2)
+    return _af1_mul(half, x, colinear=False) if n % 2 else half
+
+
+def _af1_hull(x):
+    c, K, e = x
+    r = _af1_rad(K, e)
+    return c - r, c + r
+
+
+def _af1_from_hull(lo, hi):
+    """from_interval twin: finite -> (mid, 0, rad); infinite -> (0, 0, inf)."""
+    bad = ~np.isfinite(lo) | ~np.isfinite(hi)
+    c = np.where(bad, 0.0, 0.5 * (lo + hi))
+    e = np.where(bad, _INF, 0.5 * (hi - lo))
+    return c, e
+
+
+def _af1_recip(y):
+    """1/y via the min-range linear approximation (see AffineForm.reciprocal)."""
+    cy, Ky, ey = y
+    lo, hi = _af1_hull(y)
+    straddle = (lo <= 0.0) & (0.0 <= hi)
+    point = _af1_rad(Ky, ey) == 0.0
+    p = np.where(lo > 0, -1.0 / (hi * hi), -1.0 / (lo * lo))
+    ya = 1.0 / lo - p * lo
+    yb = 1.0 / hi - p * hi
+    q = 0.5 * (ya + yb)
+    delta = 0.5 * np.abs(ya - yb)
+    c = np.where(straddle, 0.0, np.where(point, 1.0 / cy, p * cy + q))
+    K = np.where((straddle | point)[:, None], 0.0, p[:, None] * Ky)
+    e = np.where(straddle, _INF,
+                 np.where(point, 0.0, np.abs(p) * ey + delta))
+    c = np.where(np.isnan(c), 0.0, c)
+    e = np.where(np.isnan(e), _INF, e)
+    return c, K, e
+
+
+def _af1_blend(mask, x, y):
+    """Elementwise form select: mask ? x : y."""
+    return (np.where(mask, x[0], y[0]),
+            np.where(mask[:, None], x[1], y[1]),
+            np.where(mask, x[2], y[2]))
+
+
+def affine_batch(prog: Program, lo, hi, alive):
+    """Vectorized `affine_sweep` over the frontier (AF1 forms), in place.
+
+    Sub-batches rows so the (rows, nvars, nbase) coefficient tensor stays
+    under a fixed memory cap.  Returns the updated alive mask."""
+    nb = len(prog.base)
+    if nb == 0 or prog.ndefs == 0:
+        return alive
+    rows_per = max(1, int(_AFFINE_MEM_CAP / (prog.nvars * nb * 8 + 1)))
+    for s in range(0, lo.shape[0], rows_per):
+        sl = slice(s, min(s + rows_per, lo.shape[0]))
+        if alive[sl].any():
+            alive[sl] = _affine_rows(prog, lo[sl], hi[sl], alive[sl])
+    return alive
+
+
+def _affine_rows(prog: Program, lo, hi, alive):
+    with np.errstate(all="ignore"):
+        return _affine_rows_inner(prog, lo, hi, alive)
+
+
+def _affine_rows_inner(prog: Program, lo, hi, alive):
+    N = lo.shape[0]
+    nb = len(prog.base)
+    C = np.zeros((N, prog.nvars))
+    K = np.zeros((N, prog.nvars, nb))
+    E = np.zeros((N, prog.nvars))
+    for col, i in enumerate(prog.base):
+        l, h = lo[:, i], hi[:, i]
+        inf_m = ~np.isfinite(l) | ~np.isfinite(h)
+        C[:, i] = np.where(inf_m, 0.0, 0.5 * (l + h))
+        K[:, i, col] = np.where(inf_m, 0.0, 0.5 * (h - l))
+        E[:, i] = np.where(inf_m, _INF, 0.0)
+
+    zK = np.zeros((N, nb))
+    z0 = np.zeros(N)
+
+    def form(k, j):
+        ix = prog.argv[k, j]
+        if ix >= 0:
+            return C[:, ix], K[:, ix], E[:, ix]
+        return np.full(N, prog.argc[k, j]), zK, z0
+
+    for k in range(prog.ndefs):
+        i = prog.def_var[k]
+        op = prog.opcode[k]
+        a = form(k, 0)
+        if op == OP_POW:
+            f = _af1_pow(a, int(prog.pow_n[k]))
+        elif op == OP_ABS:
+            l, h = _af1_hull(a)
+            pos = l >= 0.0
+            neg = h <= 0.0
+            hc, he = _af1_from_hull(np.zeros_like(l), np.maximum(-l, h))
+            f = _af1_blend(pos, a, _af1_blend(neg, (-a[0], -a[1], a[2]),
+                                              (hc, zK, he)))
+        elif op == OP_SQRT:
+            l, h = _af1_hull(a)
+            c, e = _af1_from_hull(np.sqrt(np.maximum(l, 0.0)),
+                                  np.sqrt(np.maximum(h, 0.0)))
+            f = (c, zK, e)
+        else:
+            b = form(k, 1)
+            if op == OP_ADD:
+                f = (a[0] + b[0], a[1] + b[1], a[2] + b[2])
+            elif op == OP_SUB:
+                f = (a[0] - b[0], a[1] - b[1], a[2] + b[2])
+            elif op == OP_MUL:
+                f = _af1_mul(a, b, colinear=True)
+            elif op == OP_DIV:
+                f = _af1_mul(a, _af1_recip(b), colinear=False)
+            elif op in (OP_MIN, OP_MAX):
+                la, ha = _af1_hull(a)
+                lb, hb = _af1_hull(b)
+                if op == OP_MIN:
+                    c, e = _af1_from_hull(np.minimum(la, lb),
+                                          np.minimum(ha, hb))
+                else:
+                    c, e = _af1_from_hull(np.maximum(la, lb),
+                                          np.maximum(ha, hb))
+                f = (c, zK, e)
+            else:      # select — decided on the FORM hulls, like the scalar
+                la, ha = _af1_hull(a)
+                lb, hb = _af1_hull(b)
+                t, fm = _b_cmp(int(prog.cmp[k]), la, ha, lb, hb)
+                th = form(k, 2)
+                ot = form(k, 3)
+                lt, ht = _af1_hull(th)
+                log, hog = _af1_hull(ot)
+                jc, je = _af1_from_hull(np.minimum(lt, log),
+                                        np.maximum(ht, hog))
+                f = _af1_blend(t, th, _af1_blend(fm, ot, (jc, zK, je)))
+        # meet the hull into the box; keep the form intact (its correlations
+        # are its value, exactly like the scalar sweep)
+        fl, fh = _af1_hull(f)
+        mlo, mhi, empty, _ = _b_meet(lo[:, i], hi[:, i], fl, fh)
+        alive = alive & ~empty
+        lo[:, i] = mlo
+        hi[:, i] = mhi
+        C[:, i] = f[0]
+        K[:, i] = f[1]
+        E[:, i] = f[2]
+    return alive
+
+
+# ---------------------------------------------------------------------------
+# batched gradients + monotonicity fixing + witness probes + splitting
+# ---------------------------------------------------------------------------
+
+def gradients_batch(prog: Program, lo, hi, root: int):
+    """Vectorized `gradients`: (glo, ghi) arrays of shape (N, nvars)."""
+    with np.errstate(all="ignore"):
+        return _gradients_rows(prog, lo, hi, root)
+
+
+def _gradients_rows(prog: Program, lo, hi, root: int):
+    N = lo.shape[0]
+    glo = np.zeros((N, prog.nvars))
+    ghi = np.zeros((N, prog.nvars))
+    glo[:, root] = 1.0
+    ghi[:, root] = 1.0
+    one = np.ones(N)
+    zero = np.zeros(N)
+    inf = np.full(N, _INF)
+    for k in range(prog.ndefs - 1, -1, -1):
+        i = prog.def_var[k]
+        gl, gh = glo[:, i], ghi[:, i]
+        if not (gl.any() or gh.any()):
+            continue
+        op = prog.opcode[k]
+        alo, ahi = _b_arg(prog, k, lo, hi, 0)
+        if op == OP_POW:
+            n = int(prog.pow_n[k])
+            if n == 0:
+                parts = [(0, zero, zero)]
+            else:
+                plo, phi = _b_pow(alo, ahi, n - 1)
+                parts = [(0, n * plo, n * phi)]
+        elif op == OP_ABS:
+            plo = np.where(alo >= 0, 1.0, -1.0)
+            phi = np.where(alo >= 0, 1.0, np.where(ahi <= 0, -1.0, 1.0))
+            parts = [(0, plo, phi)]
+        elif op == OP_SQRT:
+            pos = alo > 0
+            plo = np.where(pos, 0.5 / np.sqrt(np.maximum(ahi, 1e-300)), 0.0)
+            phi = np.where(pos, 0.5 / np.sqrt(np.where(pos, alo, 1.0)), _INF)
+            parts = [(0, plo, phi)]
+        elif op == OP_ADD:
+            parts = [(0, one, one), (1, one, one)]
+        elif op == OP_SUB:
+            parts = [(0, one, one), (1, -one, -one)]
+        elif op == OP_MUL:
+            blo, bhi = _b_arg(prog, k, lo, hi, 1)
+            parts = [(0, blo, bhi), (1, alo, ahi)]
+        elif op == OP_DIV:
+            blo, bhi = _b_arg(prog, k, lo, hi, 1)
+            nz = (blo > 0) | (bhi < 0)
+            ivlo = 1.0 / np.where(nz, bhi, 1.0)
+            ivhi = 1.0 / np.where(nz, blo, 1.0)
+            i2lo, i2hi = _b_pow(ivlo, ivhi, 2)
+            q0lo, q0hi = _b_mul(-ahi, -alo, i2lo, i2hi)
+            parts = [(0, np.where(nz, ivlo, -inf), np.where(nz, ivhi, inf)),
+                     (1, np.where(nz, q0lo, -inf), np.where(nz, q0hi, inf))]
+        elif op in (OP_MIN, OP_MAX):
+            parts = [(0, zero, one), (1, zero, one)]
+        else:     # select
+            blo, bhi = _b_arg(prog, k, lo, hi, 1)
+            t, f = _b_cmp(int(prog.cmp[k]), alo, ahi, blo, bhi)
+            und = ~t & ~f
+            parts = [
+                (0, np.where(und, -inf, 0.0), np.where(und, inf, 0.0)),
+                (1, np.where(und, -inf, 0.0), np.where(und, inf, 0.0)),
+                (2, np.where(t, 1.0, 0.0),
+                 np.where(t | und, 1.0, 0.0)),
+                (3, np.where(f, 1.0, 0.0),
+                 np.where(f | und, 1.0, 0.0)),
+            ]
+        for slot, plo, phi in parts:
+            ix = prog.argv[k, slot]
+            if ix < 0:
+                continue
+            dlo, dhi = _b_mul(gl, gh, plo, phi)
+            nlo = glo[:, ix] + dlo
+            nhi = ghi[:, ix] + dhi
+            glo[:, ix] = np.where(np.isnan(nlo), -_INF, nlo)
+            ghi[:, ix] = np.where(np.isnan(nhi), _INF, nhi)
+    return glo, ghi
+
+
+def _monotone_fix_batch(prog: Program, lo, hi, glo, ghi, maximize: bool,
+                        alive):
+    """Vectorized `_monotone_fix`; returns the per-box fixed-anything mask."""
+    fixed = np.zeros(lo.shape[0], bool)
+    for i in prog.base:
+        if prog.frozen[i]:
+            continue
+        elig = alive & (hi[:, i] - lo[:, i] > 0)
+        up = elig & (glo[:, i] >= 0)
+        dn = elig & ~up & (ghi[:, i] <= 0)
+        v_up = hi[:, i] if maximize else lo[:, i]
+        v_dn = lo[:, i] if maximize else hi[:, i]
+        m_up = up & np.isfinite(v_up)
+        m_dn = dn & np.isfinite(v_dn)
+        pin = np.where(m_up, v_up, v_dn)
+        m = m_up | m_dn
+        lo[:, i] = np.where(m, pin, lo[:, i])
+        hi[:, i] = np.where(m, pin, hi[:, i])
+        fixed |= m
+    return fixed
+
+
+def concrete_batch(prog: Program, pts):
+    """Vectorized `concrete_eval`: pts is (N, nvars) with base columns set;
+    fills every defined column in place and returns the array."""
+    with np.errstate(all="ignore"):
+        return _concrete_rows(prog, pts)
+
+
+def _concrete_rows(prog: Program, pts):
+    for k in range(prog.ndefs):
+        i = prog.def_var[k]
+        op = prog.opcode[k]
+
+        def v(j):
+            ix = prog.argv[k, j]
+            return pts[:, ix] if ix >= 0 else prog.argc[k, j]
+
+        a = v(0)
+        if op == OP_POW:
+            r = a ** int(prog.pow_n[k])
+        elif op == OP_ABS:
+            r = np.abs(a)
+        elif op == OP_SQRT:
+            r = np.sqrt(np.maximum(a, 0.0))
+        else:
+            b = v(1)
+            if op == OP_ADD:
+                r = a + b
+            elif op == OP_SUB:
+                r = a - b
+            elif op == OP_MUL:
+                r = a * b
+            elif op == OP_DIV:
+                r = np.where(b == 0.0, np.copysign(_INF, a), a / b)
+            elif op == OP_MIN:
+                r = np.minimum(a, b)
+            elif op == OP_MAX:
+                r = np.maximum(a, b)
+            else:
+                code = int(prog.cmp[k])
+                ok = (a < b if code == 0 else a <= b if code == 1
+                      else a > b if code == 2 else a >= b)
+                r = np.where(ok, v(2), v(3))
+        pts[:, i] = r
+    return pts
+
+
+def _b_mid(l, h):
+    """Vectorized `_mid`."""
+    m = 0.5 * (l + h)
+    m = np.where(np.isinf(l) & np.isinf(h), 0.0,
+                 np.where(np.isinf(l), h, np.where(np.isinf(h), l, m)))
+    return m
+
+
+def _witness_batch(prog: Program, lo, hi, alive, root: int, maximize: bool,
+                   threshold: float, glo, ghi, best):
+    """Vectorized `_check_witness` over the frontier.
+
+    Probes mid / gradient-corner / all-lo / all-hi points of every alive
+    box; returns (sat_value_or_None, best)."""
+    base = prog.base
+    bl = lo[:, base]
+    bh = hi[:, base]
+    mid = _b_mid(bl, bh)
+    gl = glo[:, base]
+    gh = ghi[:, base]
+    pick_hi = bh if maximize else bl
+    pick_lo = bl if maximize else bh
+    corner = np.where(gl >= 0, pick_hi, np.where(gh <= 0, pick_lo, mid))
+    corner = np.where(np.isinf(corner), mid, corner)
+    probes = [(mid, alive), (corner, alive),
+              (bl, alive & np.isfinite(bl).all(axis=1)),
+              (bh, alive & np.isfinite(bh).all(axis=1))]
+    probes = [(pt, valid) for pt, valid in probes if valid.any()]
+    if not probes:
+        return None, best
+    # stack all probe points into ONE forward pass over the op table: the
+    # per-def Python cost is paid once, not once per probe kind
+    P = len(probes)
+    N = lo.shape[0]
+    pts = np.zeros((P * N, prog.nvars))
+    valid = np.zeros(P * N, bool)
+    for q, (pt, vd) in enumerate(probes):
+        pts[q * N:(q + 1) * N, base] = pt
+        valid[q * N:(q + 1) * N] = vd
+    vals = concrete_batch(prog, pts)[:, root]
+    good = valid & np.isfinite(vals)
+    sat_val = None
+    if good.any():
+        gv = vals[good]
+        ext = gv.max() if maximize else gv.min()
+        if best is None or (ext > best if maximize else ext < best):
+            best = float(ext)
+        meets = good & ((vals >= threshold) if maximize
+                        else (vals <= threshold))
+        if meets.any():
+            mv = vals[meets]
+            sat_val = float(mv.max() if maximize else mv.min())
+    return sat_val, best
+
+
+def _split_batch(prog: Program, lo, hi, glo, ghi, alive):
+    """Vectorized `_split_candidates`[0]: per-box (split var, split point,
+    priority score).  var = -1 marks an irreducible box."""
+    N = lo.shape[0]
+    svar = np.full(N, -1, np.int32)
+    sat = np.zeros(N)
+    pend = alive.copy()
+    for t in range(len(prog.split_var)):
+        if not pend.any():
+            break
+        j = int(prog.split_var[t])
+        l, h = lo[:, j], hi[:, j]
+        at = prog.split_at[t] if prog.split_sel[t] else 0.0
+        ok = pend & (l < at) & (at < h) & (h - l > _WIDTH_EPS)
+        if ok.any():
+            svar[ok] = j
+            sat[ok] = at
+            pend &= ~ok
+    if pend.any():
+        bl = lo[:, prog.base]
+        bh = hi[:, prog.base]
+        w = bh - bl
+        mag = np.maximum(np.abs(glo[:, prog.base]),
+                         np.abs(ghi[:, prog.base]))
+        mag = np.where(np.isinf(mag) | np.isnan(mag), 1e18, mag)
+        score = w * np.maximum(mag, 1e-18)
+        score = np.where((w <= _WIDTH_EPS) | np.isinf(w), -_INF, score)
+        kbest = np.argmax(score, axis=1) if score.shape[1] else \
+            np.zeros(N, np.int64)
+        rows = np.arange(N)
+        has = score.shape[1] > 0
+        if has:
+            sc = score[rows, kbest]
+            jvar = prog.base[kbest]
+            mids = _b_mid(bl[rows, kbest], bh[rows, kbest])
+            inside = (lo[rows, jvar] < mids) & (mids < hi[rows, jvar])
+            take = pend & (sc > -_INF) & inside
+            svar = np.where(take, jvar.astype(np.int32), svar)
+            sat = np.where(take, mids, sat)
+    # priority score for best-first popping: smear of the chosen split var
+    rows = np.arange(N)
+    jj = np.maximum(svar, 0)
+    w = hi[rows, jj] - lo[rows, jj]
+    mag = np.maximum(np.abs(glo[rows, jj]), np.abs(ghi[rows, jj]))
+    mag = np.where(np.isinf(mag) | np.isnan(mag), 1e18, mag)
+    score = np.where(np.isfinite(w), w, 1e18) * np.maximum(mag, 1e-18)
+    return svar, sat, score
+
+
+def decide(csp: CSP, root: int, sense: str, threshold: float,
+           budget: Optional[BPBudget] = None) -> Verdict:
+    """Batched-box `decide`: same three-valued contract as `decide_scalar`
+    (UNSAT is certified, SAT carries a witness, UNKNOWN = budget out), but
+    the frontier is popped and split in best-first batches of vectorized
+    rows instead of one Python box at a time.
+    """
+    t0 = time.perf_counter()
+    bud = budget or BPBudget()
+    prog = compile_csp(csp)
+    maximize = sense == "ge"
+    query = (Interval(threshold, _INF) if maximize
+             else Interval(-_INF, threshold))
+    m = _meet(Interval(float(prog.init_lo[root]), float(prog.init_hi[root])),
+              query)
+    if m is None:
+        return Verdict(UNSAT)
+    f_lo = prog.init_lo[None, :].copy()
+    f_hi = prog.init_hi[None, :].copy()
+    f_lo[0, root] = m.lo
+    f_hi[0, root] = m.hi
+    f_score = np.zeros(1)
+
+    def _done(v: Verdict) -> Verdict:
+        STATS["boxes"] += v.nodes
+        STATS["secs"] += time.perf_counter() - t0
+        return v
+
+    best: Optional[float] = None
+    nodes = 0
+    stuck = False
+    frozen_set = {int(i) for i in np.nonzero(prog.frozen)[0]}
+    while f_lo.shape[0]:
+        remaining = bud.max_nodes - nodes
+        if remaining <= 0 or time.monotonic() > bud.deadline:
+            return _done(Verdict(UNKNOWN, best, nodes))
+        B = min(f_lo.shape[0], remaining, bud.batch)
+        if B < f_lo.shape[0]:          # pop the best-scored B boxes
+            order = np.argpartition(-f_score, B - 1)
+            take, keep = order[:B], order[B:]
+            lo, hi = f_lo[take], f_hi[take]
+            f_lo, f_hi, f_score = f_lo[keep], f_hi[keep], f_score[keep]
+        else:
+            lo, hi = f_lo, f_hi
+            f_lo = np.empty((0, prog.nvars))
+            f_hi = np.empty((0, prog.nvars))
+            f_score = np.empty(0)
+        nodes += B
+        if B < _SMALL_BATCH:
+            # narrow frontier: numpy per-def overhead beats vectorization
+            # gains below ~a dozen rows, so run these boxes through the
+            # scalar per-box step (identical semantics, ~4x faster here)
+            kid_rows = []
+            kid_scores = []
+            for r in range(B):
+                box = [Interval(float(lo[r, i]), float(hi[r, i]))
+                       if lo[r, i] <= hi[r, i] else
+                       Interval(float(lo[r, i]), float(lo[r, i]))
+                       for i in range(prog.nvars)]
+                sat_v, best, children, irred, sc = _scalar_step(
+                    csp, box, root, maximize, threshold, best, frozen_set,
+                    bud.hc4_rounds)
+                if sat_v is not None:
+                    return _done(Verdict(SAT, sat_v, nodes))
+                stuck = stuck or irred
+                for ch in children:
+                    kid_rows.append(([iv.lo for iv in ch],
+                                     [iv.hi for iv in ch]))
+                    kid_scores.append(sc)
+            if kid_rows:
+                k_lo = np.array([r[0] for r in kid_rows])
+                k_hi = np.array([r[1] for r in kid_rows])
+                f_lo = np.concatenate([f_lo, k_lo])
+                f_hi = np.concatenate([f_hi, k_hi])
+                f_score = np.concatenate([f_score, np.array(kid_scores)])
+            continue
+        alive = np.ones(B, bool)
+        alive = hc4_batch(prog, lo, hi, alive, bud.hc4_rounds)
+        if alive.any():
+            alive = affine_batch(prog, lo, hi, alive)
+        if alive.any():
+            alive = hc4_batch(prog, lo, hi, alive, 2)
+        if not alive.any():
+            continue
+        if not alive.all():
+            # compact to the surviving rows: gradients/witness/monotone-fix
+            # cost is proportional to N, and near an UNSAT threshold most
+            # of a batch dies in contraction
+            keep_rows = np.nonzero(alive)[0]
+            lo, hi = lo[keep_rows], hi[keep_rows]
+            alive = np.ones(len(keep_rows), bool)
+        glo, ghi = gradients_batch(prog, lo, hi, root)
+        sat_v, best = _witness_batch(prog, lo, hi, alive, root, maximize,
+                                     threshold, glo, ghi, best)
+        if sat_v is not None:
+            return _done(Verdict(SAT, sat_v, nodes))
+        fixed = _monotone_fix_batch(prog, lo, hi, glo, ghi, maximize, alive)
+        if fixed.any():
+            alive = hc4_batch(prog, lo, hi, alive, bud.hc4_rounds)
+            if alive.any():
+                alive = affine_batch(prog, lo, hi, alive)
+            if not alive.any():
+                continue
+            if not alive.all():
+                keep_rows = np.nonzero(alive)[0]
+                lo, hi = lo[keep_rows], hi[keep_rows]
+                alive = np.ones(len(keep_rows), bool)
+            glo, ghi = gradients_batch(prog, lo, hi, root)
+            sat_v, best = _witness_batch(prog, lo, hi, alive, root, maximize,
+                                         threshold, glo, ghi, best)
+            if sat_v is not None:
+                return _done(Verdict(SAT, sat_v, nodes))
+        svar, sat, score = _split_batch(prog, lo, hi, glo, ghi, alive)
+        irred = alive & (svar < 0)
+        if irred.any():
+            stuck = True               # cannot certify UNSAT any more
+        sp = alive & (svar >= 0)
+        if sp.any():
+            rows = np.nonzero(sp)[0]
+            j = svar[rows]
+            at = sat[rows]
+            left_lo, left_hi = lo[rows], hi[rows].copy()
+            right_lo, right_hi = lo[rows].copy(), hi[rows]
+            rr = np.arange(len(rows))
+            left_hi[rr, j] = at
+            right_lo[rr, j] = at
+            f_lo = np.concatenate([f_lo, left_lo, right_lo])
+            f_hi = np.concatenate([f_hi, left_hi, right_hi])
+            f_score = np.concatenate([f_score, score[rows], score[rows]])
+    status = UNKNOWN if stuck else UNSAT
+    return _done(Verdict(status, best, nodes))

@@ -91,6 +91,20 @@ def test_lower_cell_debug_mesh(kind, arch):
     assert a["hbm_bytes"] > 0
 
 
+def test_normalize_cost_analysis_shapes():
+    """Regression: newer JAX returns a *list* of per-computation dicts from
+    Compiled.cost_analysis(); older releases return one dict (or None).
+    All consumers route through this one helper."""
+    from repro.launch.lowering import normalize_cost_analysis as norm
+    d = {"flops": 2.0, "bytes accessed": 8.0}
+    assert norm(d) is d                       # legacy flat dict
+    assert norm([d]) is d                     # current list-of-dicts
+    assert norm([{}, d]) is d                 # empty entries skipped
+    assert norm(None) == {}
+    assert norm([]) == {}
+    assert norm([{}]) == {}
+
+
 # ---------------------------------------------------------------------------
 # checkpointing + fault tolerance
 # ---------------------------------------------------------------------------
