@@ -1,0 +1,86 @@
+"""Per-benchmark alpha delta of the committed golden table vs its baseline.
+
+    PYTHONPATH=src python -m benchmarks.alpha_delta [--markdown]
+
+Compares `benchmarks/results/table11_smt_alphas.json` (the committed golden
+table, regenerated whenever the analysis improves) against
+`table11_smt_alphas.baseline.json` (the previous PR's snapshot) and prints
+one summary line per benchmark group plus every per-stage alpha move.  CI
+appends the markdown form to the job summary so encoder/solver changes show
+their recovered (or regressed!) bits at a glance.
+
+Exit status is non-zero when any smt alpha regressed (grew) on a stage both
+tables know — the delta report doubles as a cheap golden-regression gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = os.path.join(HERE, "results", "table11_smt_alphas.json")
+BASELINE = os.path.join(HERE, "results", "table11_smt_alphas.baseline.json")
+
+
+def _load(path):
+    with open(path) as f:
+        data = json.load(f)
+    return {(r[0], r[1]): (int(r[2]), int(r[3]), int(r[4]))
+            for r in data["rows"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavored markdown table")
+    args = ap.parse_args()
+    golden = _load(GOLDEN)
+    base = _load(BASELINE)
+
+    groups = defaultdict(lambda: {"delta": 0, "moves": [], "new": 0})
+    regressed = []
+    for key, (ia, sa, pa) in sorted(golden.items()):
+        g, stage = key
+        if key not in base:
+            groups[g]["new"] += 1
+            continue
+        d = sa - base[key][1]          # negative = bits recovered
+        if d:
+            groups[g]["delta"] += d
+            groups[g]["moves"].append(f"{stage} {base[key][1]}->{sa}")
+        if d > 0:
+            regressed.append((key, base[key][1], sa))
+    # rows the baseline knew that vanished from the golden table are silent
+    # coverage loss — gate them like regressions (regenerate the baseline
+    # deliberately when a benchmark group is really renamed/retired)
+    dropped = sorted(set(base) - set(golden))
+
+    if args.markdown:
+        print("### table11 smt alpha delta vs baseline\n")
+        print("| benchmark | alpha bits moved | stages | new stages |")
+        print("|---|---|---|---|")
+        for g in sorted(set(k[0] for k in golden)):
+            info = groups[g]
+            moves = ", ".join(info["moves"]) or "—"
+            print(f"| {g} | {info['delta']:+d} | {moves} | {info['new']} |")
+    else:
+        for g in sorted(set(k[0] for k in golden)):
+            info = groups[g]
+            moves = ", ".join(info["moves"]) or "none"
+            print(f"{g}: delta {info['delta']:+d} bits "
+                  f"({moves}; {info['new']} new stages)")
+
+    if regressed:
+        print(f"\nALPHA REGRESSION on {len(regressed)} stage(s): "
+              f"{regressed}", file=sys.stderr)
+    if dropped:
+        print(f"\nBASELINE ROWS MISSING from golden table: {dropped}",
+              file=sys.stderr)
+    return 1 if (regressed or dropped) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

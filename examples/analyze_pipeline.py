@@ -60,6 +60,20 @@ def main():
         print(f"   {k:6s} interval {ia[k].range!s:>18s}   "
               f"smt {sm[k].range!s:>22s}{note}")
 
+    print("\n== phase-split encoding across sampling boundaries ==")
+    # detail stages of a down/up pyramid difference signals across stride-2
+    # producers: the alignment-blind encoding must cut them to independent
+    # [0,255] signals; phase-split recovers the exactly-aligned expansion
+    from repro.pipelines import dus
+    from repro.smt import SMTConfig, analyze_smt
+    pyr = dus.build_extended()
+    blind = analyze_smt(pyr, config=SMTConfig(phase_split=False))
+    phase = analyze_smt(pyr, config=SMTConfig())
+    for k in ("band", "res"):
+        print(f"   {k:5s} blind {blind[k].range!s:>18s} (alpha "
+              f"{blind[k].alpha})   phase-split {phase[k].range!s:>18s} "
+              f"(alpha {phase[k].alpha})")
+
     print("\n== profile + synthesize ==")
     from repro.core.profile import profile_pipeline
     imgs = [natural_image((48, 48), seed=i) for i in range(4)]

@@ -61,6 +61,56 @@ def build(n_iters: int = N_ITERS) -> Pipeline:
     return p.build()
 
 
+def build_pyramid(n_iters: int = 1) -> Pipeline:
+    """Coarse-to-fine (2-level) Horn–Schunck pyramid.
+
+    The classic pyramid scheme the flat `build()` skips: both frames are
+    binomial-blurred and decimated by (2, 2), one HS update runs at the
+    coarse level, the coarse flow is nearest-expanded back to full rate
+    (smoothed, x2 magnitude — one coarse pixel spans two fine pixels), and
+    `n_iters` fine-level HS iterations refine it.
+
+    For range analysis this is the sampled deep pipeline the phase-split
+    encoder exists for: the fine update's `Avg`/`Common`/`V` stages read
+    the upsampled coarse flow, which an alignment-blind encoding must cut
+    (independent +-|UVx| taps), while the phase-split expansion shares the
+    coarse-level pixels with the fine-level derivative stencils.
+    """
+    p = PipelineBuilder("of_pyramid")
+    img1 = p.image("img1", 0, 255)
+    img2 = p.image("img2", 0, 255)
+    bin2d = [[r * c for c in (1, 2, 1)] for r in (1, 2, 1)]
+
+    # -- coarse level: blur+decimate, one HS update from zero flow ---------
+    c1 = p.downsample("cImg1", img1, bin2d, scale=1.0 / 16, stride=(2, 2))
+    c2 = p.downsample("cImg2", img2, bin2d, scale=1.0 / 16, stride=(2, 2))
+    cIt = p.define("cIt", c2 - c1)
+    cIx = p.stencil("cIx", c1, SOBEL_X, scale=1.0 / 12)
+    cIy = p.stencil("cIy", c1, SOBEL_Y, scale=1.0 / 12)
+    cDenom = p.define("cDenom", ALPHA2 + Pow(cIx, 2) + Pow(cIy, 2))
+    cVx = p.define("cVx0", (0 - cIx / cDenom) * cIt)
+    cVy = p.define("cVy0", (0 - cIy / cDenom) * cIt)
+
+    # -- expand flow to full rate (x2: coarse displacement in fine pixels) -
+    vx = p.upsample("UVx", cVx, bin2d, scale=2.0 / 16, factor=(2, 2))
+    vy = p.upsample("UVy", cVy, bin2d, scale=2.0 / 16, factor=(2, 2))
+
+    # -- fine level: HS refinement seeded by the upsampled coarse flow -----
+    It = p.define("It", img2 - img1)
+    Ix = p.stencil("Ix", img1, SOBEL_X, scale=1.0 / 12)
+    Iy = p.stencil("Iy", img1, SOBEL_Y, scale=1.0 / 12)
+    denom = p.define("Denom", ALPHA2 + Pow(Ix, 2) + Pow(Iy, 2))
+    for k in range(1, n_iters + 1):
+        avgx = p.stencil(f"Avgx{k}", vx, HS_AVG, scale=1.0 / 12)
+        avgy = p.stencil(f"Avgy{k}", vy, HS_AVG, scale=1.0 / 12)
+        common = p.define(f"Common{k}", (Ix * avgx + Iy * avgy + It) / denom)
+        vx = p.define(f"Vx{k}", avgx - Ix * common)
+        vy = p.define(f"Vy{k}", avgy - Iy * common)
+    p.output(vx)
+    p.output(vy)
+    return p.build()
+
+
 def stage_families(n_iters: int = N_ITERS):
     """Grouping used by the benchmark table (paper groups by family)."""
     fams = {

@@ -186,8 +186,41 @@ def make_of(n_pairs: int = 4, shape=(40, 40)) -> BenchmarkSetup:
                           test, quality, quality_target=-2.0, two_input=True)
 
 
+def make_dus_ext(n_train: int = 6, n_test: int = 6,
+                 shape=(48, 48)) -> BenchmarkSetup:
+    """Extended DUS: the paper chain plus DoG band + reconstruction
+    residual — the sampled detail stages the phase-split encoder tightens."""
+    train, test = pdata.train_test_split(n_train + n_test, shape, seed=37)
+
+    def quality(ref_env, fix_env, params_):
+        return metrics.psnr(ref_env["res"], fix_env["res"])
+
+    return BenchmarkSetup("dus_ext", dus.build_extended(), {},
+                          train[:n_train], test[:n_test], quality,
+                          quality_target=50.0)
+
+
+def make_of_pyramid(n_pairs: int = 4, shape=(40, 40)) -> BenchmarkSetup:
+    """Coarse-to-fine Horn–Schunck (2 levels, 1 fine iteration) — the
+    sampled deep pipeline for phase-split range analysis."""
+    pairs = [pdata.shifted_pair(shape, seed=300 + i, shift=(1, 1))
+             for i in range(2 * n_pairs)]
+    train = pairs[:n_pairs]
+    test = pairs[n_pairs:]
+
+    def quality(ref_env, fix_env, params_):
+        aae = metrics.aae_degrees(ref_env["Vx1"], ref_env["Vy1"],
+                                  fix_env["Vx1"], fix_env["Vy1"])
+        return -aae            # higher is better
+
+    return BenchmarkSetup("of_pyramid", optical_flow.build_pyramid(1), {},
+                          train, test, quality, quality_target=-2.0,
+                          two_input=True)
+
+
 ALL_BENCHMARKS = {"hcd": make_hcd, "usm": make_usm, "dus": make_dus,
-                  "optical_flow": make_of}
+                  "optical_flow": make_of, "dus_ext": make_dus_ext,
+                  "of_pyramid": make_of_pyramid}
 
 
 # ---------------------------------------------------------------------------

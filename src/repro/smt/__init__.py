@@ -14,6 +14,12 @@ branch-and-prune frontier is contracted/split as (N, nvars) lo/hi arrays —
 `SMTConfig(engine="scalar")` (or `analyze(pipe, domain="smt-scalar")`)
 selects the original box-at-a-time reference oracle.
 
+Stages read through stride/upsample boundaries use *phase-split* encoding
+(`SMTConfig(phase_split=True)`, the default): one exactly-aligned CSP per
+output-phase residue of the sampling lattice, solved as a single
+OR-composed multi-phase query (`solver.decide_multi`) whose union bound
+replaces the alignment-blind sampling cuts.  See docs/range_analysis.md.
+
 Importing this package registers the `"smt"` analysis domain, so
 
     from repro.core.range_analysis import analyze

@@ -24,12 +24,23 @@ a flat CSP:
     tightens stages in topological order, so cut bounds inherit earlier
     SMT results rather than raw interval ones.
 
+**Phase-split encoding** (`encode_stage_phases`) removes the sampling cuts:
+across stride/upsample stages the §IV homogeneity classes are exactly the
+output-phase residues mod the pipeline's sampling lattice, so fixing the
+root's output coordinate to one residue makes every tap→source coordinate
+map a concrete integer (floor) map — the expansion through sampled
+producers becomes exactly aligned and sharing is sound again.  One CSP per
+phase; the stage range is the union over phases (`optimize` solves them as
+one multi-phase query, `solver.decide_multi`).
+
 Everything downstream (HC4 contraction, branch-and-prune, dichotomic
 tightening) operates on this CSP; see `repro.smt.solver` / `.optimize`.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+from fractions import Fraction
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -140,15 +151,81 @@ def _is_sampled(pipeline: Pipeline, name: str) -> bool:
     return st.stride != (1, 1) or st.upsample != (1, 1)
 
 
-def encode_stage(pipeline: Pipeline, stage: str,
-                 stage_bounds: Dict[str, Interval],
-                 input_ranges: Optional[Dict[str, Interval]] = None,
-                 max_vars: int = 400) -> Tuple[CSP, int]:
-    """Flatten the DAG feeding `stage` into a CSP; returns (csp, root_var).
+def closure_is_sampled(pipeline: Pipeline, stage: str) -> bool:
+    """True when `stage` or any transitive producer is strided/upsampled —
+    i.e. when the alignment-blind encoder would cut (and phase-split can
+    recover sharing)."""
+    seen = set()
+    stack = [stage]
+    while stack:
+        n = stack.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        if _is_sampled(pipeline, n):
+            return True
+        st = pipeline.stages[n]
+        if st.expr is not None:
+            stack.extend(r.stage for r in st.refs())
+    return False
 
-    `stage_bounds` must hold a *sound* range for every stage (interval seed,
-    progressively replaced by SMT-tightened ones) — used to bound cut vars.
+
+def sampling_lattice(pipeline: Pipeline, stage: str
+                     ) -> Optional[Tuple[int, int]]:
+    """Per-axis phase modulus (My, Mx) of the DAG feeding `stage`.
+
+    Walking from the root, a producer read through a stage with stride `s`
+    and upsample `u` advances `s/u` source pixels per root pixel; the
+    accumulated per-stage rates are exact rationals.  Choosing the modulus
+    as the lcm of all rate denominators makes every per-stage coordinate
+    step (`M * rate`) an integer, which is precisely the condition for the
+    floor tap→source maps to be translation-invariant within one output
+    residue class — each phase CSP then models *every* pixel of its class.
+
+    Returns None when two paths reach the same producer at different rates
+    (no uniform lattice exists; callers fall back to the blind encoding).
     """
+    rates: Dict[str, Tuple[Fraction, Fraction]] = {
+        stage: (Fraction(1), Fraction(1))}
+    stack = [stage]
+    while stack:
+        name = stack.pop()
+        st = pipeline.stages[name]
+        if st.is_input or st.expr is None:
+            continue
+        ry, rx = rates[name]
+        child_rate = (ry * st.stride[0] / st.upsample[0],
+                      rx * st.stride[1] / st.upsample[1])
+        for child in dict.fromkeys(r.stage for r in st.refs()):
+            if child in rates:
+                if rates[child] != child_rate:
+                    return None
+            else:
+                rates[child] = child_rate
+                stack.append(child)
+    my = mx = 1
+    for ry, rx in rates.values():
+        my = my * ry.denominator // math.gcd(my, ry.denominator)
+        mx = mx * rx.denominator // math.gcd(mx, rx.denominator)
+    return my, mx
+
+
+def _flatten(pipeline: Pipeline, stage: str,
+             stage_bounds: Dict[str, Interval],
+             input_ranges: Optional[Dict[str, Interval]],
+             max_vars: int,
+             origin: Optional[Tuple[int, int]]) -> Tuple[CSP, int]:
+    """Shared flattening core.
+
+    `origin=None` is the alignment-blind mode (classic `encode_stage`):
+    tap offsets accumulate additively, sampled producers are cut, and an
+    upsampled root stage cuts each tap individually.  `origin=(ry, rx)`
+    is phase-split mode: coordinates are absolute on each stage's own
+    output grid, the root sits at its phase residue, and every Ref maps
+    through the exact `(y*stride + dy) // upsample` source coordinate —
+    sampled producers expand and share like any other stage.
+    """
+    phase_mode = origin is not None
     csp = CSP()
     inst: Dict[Tuple[str, int, int], Operand] = {}
     params: Dict[str, int] = {}
@@ -167,39 +244,54 @@ def encode_stage(pipeline: Pipeline, stage: str,
             if iv is None:
                 raise ValueError(f"input stage {name!r} has no declared range")
             op = var(csp.new_var(f"{name}[{dy},{dx}]", iv, "input"))
-        elif name != stage and _is_sampled(pipeline, name):
-            # sampled producer: tap alignment is not uniform across output
-            # pixels, so sharing its expansion would be unsound — cut.
+        elif (not phase_mode and name != stage
+              and _is_sampled(pipeline, name)):
+            # blind mode, sampled producer: tap alignment is not uniform
+            # across output pixels, so sharing its expansion would be
+            # unsound — cut.
             op = cut(name, dy, dx)
         elif csp.nvars >= max_vars:
             op = cut(name, dy, dx)
         else:
-            # nearest-expand upsampling makes the *reading* stage's tap->
-            # source mapping alignment-dependent: cut each tap individually.
-            cut_taps = st.upsample != (1, 1)
-            op = encode_expr(st.expr, dy, dx, cut_taps)
+            # blind mode only: nearest-expand upsampling makes the *reading*
+            # stage's tap->source mapping alignment-dependent — cut each tap
+            # individually.  Phase mode resolves the mapping exactly instead.
+            cut_taps = not phase_mode and st.upsample != (1, 1)
+            op = encode_expr(st.expr, st, dy, dx, cut_taps)
             # the expansion defines the value, but the producer's best known
             # sound range is extra information the flattened expression may
             # not imply (it can come from earlier SMT tightening): meet it
-            # into the instance's initial box.
-            if op[0] == VAR:
+            # into the instance's initial box.  Applied uniformly: constant-
+            # folded expansions are wrapped in an aux var first, so they
+            # benefit from earlier tightening exactly like VAR roots.
+            b = stage_bounds.get(name)
+            if b is not None:
+                if op[0] == CONST:
+                    op = var(csp.new_var(
+                        f"{name}[{dy},{dx}]", Interval.point(op[1]), "aux",
+                        Def("+", (const(op[1]), const(0.0)))))
                 i = int(op[1])
-                b = stage_bounds.get(name)
-                if b is not None:
-                    lo = max(csp.init[i].lo, b.lo)
-                    hi = min(csp.init[i].hi, b.hi)
-                    if lo <= hi:
-                        csp.init[i] = Interval(lo, hi)
+                lo = max(csp.init[i].lo, b.lo)
+                hi = min(csp.init[i].hi, b.hi)
+                if lo <= hi:
+                    csp.init[i] = Interval(lo, hi)
         inst[key] = op
         return op
 
     def aux(name: str, d: Def) -> Operand:
         return var(csp.new_var(name, Interval.top(), "aux", d))
 
-    def encode_expr(e: Expr, Y: int, X: int, cut_taps: bool = False) -> Operand:
+    def encode_expr(e: Expr, st, Y: int, X: int,
+                    cut_taps: bool = False) -> Operand:
         if isinstance(e, Const):
             return const(e.value)
         if isinstance(e, Ref):
+            if phase_mode:
+                # exact tap->source map: output (Y, X) of `st` reads its
+                # producer at the decimated-then-expanded source coordinate
+                cy = (Y * st.stride[0] + e.dy) // st.upsample[0]
+                cx = (X * st.stride[1] + e.dx) // st.upsample[1]
+                return instantiate(e.stage, cy, cx)
             if cut_taps:
                 key = (e.stage, Y + e.dy, X + e.dx)
                 if key not in inst:
@@ -212,35 +304,86 @@ def encode_stage(pipeline: Pipeline, stage: str,
                     e.name, pipeline.params[e.name], "param")
             return var(params[e.name])
         if isinstance(e, BinOp):
-            l = encode_expr(e.left, Y, X, cut_taps)
-            r = encode_expr(e.right, Y, X, cut_taps)
+            l = encode_expr(e.left, st, Y, X, cut_taps)
+            r = encode_expr(e.right, st, Y, X, cut_taps)
             if l[0] == CONST and r[0] == CONST:
                 return const(_fold(e.op, l[1], r[1]))
             return aux(e.op, Def(e.op, (l, r)))
         if isinstance(e, Pow):
-            b = encode_expr(e.base, Y, X, cut_taps)
+            b = encode_expr(e.base, st, Y, X, cut_taps)
             if b[0] == CONST:
                 return const(b[1] ** e.n)
             return aux(f"pow{e.n}", Def("pow", (b,), n=e.n))
         if isinstance(e, Call):
-            args = tuple(encode_expr(a, Y, X, cut_taps) for a in e.args)
+            args = tuple(encode_expr(a, st, Y, X, cut_taps) for a in e.args)
             return aux(e.fn, Def(e.fn, args))
         if isinstance(e, Select):
             c = e.cond
             if not isinstance(c, Cmp) or c.op not in _CMP_OPS:
                 raise ValueError(f"unsupported select condition {c!r}")
-            cl = encode_expr(c.left, Y, X, cut_taps)
-            cr = encode_expr(c.right, Y, X, cut_taps)
-            t = encode_expr(e.then, Y, X, cut_taps)
-            o = encode_expr(e.other, Y, X, cut_taps)
+            cl = encode_expr(c.left, st, Y, X, cut_taps)
+            cr = encode_expr(c.right, st, Y, X, cut_taps)
+            t = encode_expr(e.then, st, Y, X, cut_taps)
+            o = encode_expr(e.other, st, Y, X, cut_taps)
             return aux("select", Def("select", (cl, cr, t, o), cmp=c.op))
         raise TypeError(f"unknown expr node {type(e)}")
 
-    root = instantiate(stage, 0, 0)
+    oy, ox = origin if phase_mode else (0, 0)
+    root = instantiate(stage, oy, ox)
     if root[0] == CONST:
         root = var(csp.new_var("root", Interval.point(root[1]), "aux",
                                Def("+", (const(root[1]), const(0.0)))))
     return csp, int(root[1])
+
+
+def encode_stage(pipeline: Pipeline, stage: str,
+                 stage_bounds: Dict[str, Interval],
+                 input_ranges: Optional[Dict[str, Interval]] = None,
+                 max_vars: int = 400) -> Tuple[CSP, int]:
+    """Flatten the DAG feeding `stage` into a CSP; returns (csp, root_var).
+
+    `stage_bounds` must hold a *sound* range for every stage (interval seed,
+    progressively replaced by SMT-tightened ones) — used to bound cut vars.
+    This is the alignment-blind encoding (sampled producers are cut); see
+    `encode_stage_phases` for the phase-split alternative.
+    """
+    return _flatten(pipeline, stage, stage_bounds, input_ranges, max_vars,
+                    origin=None)
+
+
+def encode_stage_phase(pipeline: Pipeline, stage: str,
+                       origin: Tuple[int, int],
+                       stage_bounds: Dict[str, Interval],
+                       input_ranges: Optional[Dict[str, Interval]] = None,
+                       max_vars: int = 400) -> Tuple[CSP, int]:
+    """Exactly-aligned CSP for the output pixels `origin (mod lattice)`."""
+    return _flatten(pipeline, stage, stage_bounds, input_ranges, max_vars,
+                    origin=origin)
+
+
+def encode_stage_phases(pipeline: Pipeline, stage: str,
+                        stage_bounds: Dict[str, Interval],
+                        input_ranges: Optional[Dict[str, Interval]] = None,
+                        max_vars: int = 400,
+                        max_phases: int = 16
+                        ) -> Optional[List[Tuple[CSP, int]]]:
+    """Phase-split encoding: one exactly-aligned CSP per output-phase
+    residue `(ry, rx)` mod the sampling lattice; the stage range is the
+    union over phases.
+
+    Returns None (callers fall back to the alignment-blind `encode_stage`)
+    when no uniform lattice exists or the phase count exceeds `max_phases`
+    — the budget guard for pathologically deep sampling chains.
+    """
+    lat = sampling_lattice(pipeline, stage)
+    if lat is None:
+        return None
+    my, mx = lat
+    if my * mx > max_phases:
+        return None
+    return [encode_stage_phase(pipeline, stage, (ry, rx), stage_bounds,
+                               input_ranges, max_vars)
+            for ry in range(my) for rx in range(mx)]
 
 
 # ---------------------------------------------------------------------------

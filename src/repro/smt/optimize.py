@@ -31,7 +31,8 @@ from repro.core.interval import Interval
 from repro.core.range_analysis import StageRange, analyze
 
 from repro.smt import solver as S
-from repro.smt.encoder import CSP, encode_stage
+from repro.smt.encoder import (CSP, closure_is_sampled, encode_stage,
+                               encode_stage_phases)
 
 _INF = math.inf
 
@@ -47,6 +48,13 @@ class SMTConfig:
     reference oracle (kept for differential tests and debugging; it uses
     the pre-batching `scalar_*` budgets so equal-engine comparisons stay
     affordable).
+
+    ``phase_split`` (default on) encodes stages whose producer closure
+    crosses stride/upsample boundaries as one exactly-aligned CSP per
+    output-phase residue (`encoder.encode_stage_phases`) and solves all
+    phases as a single OR-composed query; the alignment-blind cut encoding
+    remains the fallback when no uniform sampling lattice exists or the
+    phase count exceeds ``max_phases``.
     """
     max_vars: int = 400         # flattening budget per stage CSP (then cuts)
     engine: str = "batched"     # "batched" | "scalar" (reference oracle)
@@ -62,36 +70,68 @@ class SMTConfig:
                                 # the search settles for the current bound
     time_budget_s: float = 30.0  # per pipeline; overflow stages keep the seed
     use_z3: str = "auto"        # "auto" | "never" — optional z3 delegation
+    phase_split: bool = True    # polyphase encoding across sampled stages
+    max_phases: int = 16        # fall back to the blind encoding above this
 
     def decide_fn(self):
-        return S.decide if self.engine == "batched" else S.decide_scalar
+        return (S.decide_multi if self.engine == "batched"
+                else S.decide_scalar_multi)
 
-    def _nodes_for(self, csp: CSP, scalar_scale: bool) -> int:
+    def _nodes_for(self, nvars: int, scalar_scale: bool) -> int:
         mn, wb = ((self.scalar_max_nodes, self.scalar_work_budget)
                   if scalar_scale else (self.max_nodes, self.work_budget))
-        return max(8, min(mn, wb // max(csp.nvars, 1)))
+        return max(8, min(mn, wb // max(nvars, 1)))
 
-    def quick_nodes(self, csp: CSP) -> int:
+    def quick_nodes(self, nvars: int) -> int:
         """Pre-batching (scalar-era) node budget — what one PR-1 query got;
         the batched engine's iterative-deepening quick pass uses this."""
-        return self._nodes_for(csp, scalar_scale=True)
+        return self._nodes_for(nvars, scalar_scale=True)
 
-    def bp_budget(self, csp: CSP, deadline: float = _INF) -> S.BPBudget:
-        nodes = self._nodes_for(csp, scalar_scale=self.engine != "batched")
+    def bp_budget(self, nvars: int, deadline: float = _INF) -> S.BPBudget:
+        nodes = self._nodes_for(nvars, scalar_scale=self.engine != "batched")
         return S.BPBudget(nodes, self.hc4_rounds, self.batch, deadline)
 
 
-def _decide(csp: CSP, root: int, sense: str, t: float,
+def _z3_decide_multi(entries, sense: str, t: float,
+                     deadline: float = _INF) -> S.Verdict:
+    """OR-compose z3 verdicts over the phase systems: any SAT is SAT, all
+    UNSAT is UNSAT, anything else stays UNKNOWN (branch-and-prune decides).
+
+    Each phase is a separate z3 call, so the anytime deadline is checked
+    between phases — a slow multi-phase query degrades to UNKNOWN instead
+    of multiplying z3's per-call timeout by the phase count."""
+    from repro.smt import z3backend
+    best = None
+    n_unsat = 0
+    for csp, root in entries:
+        if time.monotonic() >= deadline:
+            return S.Verdict(S.UNKNOWN, best)
+        v = z3backend.decide(csp, root, sense, t)
+        if v.status == S.SAT:
+            return v
+        if v.status == S.UNSAT:
+            n_unsat += 1
+        if v.witness is not None:
+            best = (v.witness if best is None else
+                    (max(best, v.witness) if sense == "ge"
+                     else min(best, v.witness)))
+    if n_unsat == len(entries):
+        return S.Verdict(S.UNSAT, best)
+    return S.Verdict(S.UNKNOWN, best)
+
+
+def _decide(entries, sense: str, t: float,
             cfg: SMTConfig, deadline: float = _INF,
             escalate: bool = True) -> S.Verdict:
     if cfg.use_z3 != "never":
         from repro.smt import z3backend
         if z3backend.HAVE_Z3:
-            v = z3backend.decide(csp, root, sense, t)
+            v = _z3_decide_multi(entries, sense, t, deadline)
             if v.status != S.UNKNOWN:
                 return v
     fn = cfg.decide_fn()
-    full = cfg.bp_budget(csp, deadline)
+    nvars = max(csp.nvars for csp, _ in entries)
+    full = cfg.bp_budget(nvars, deadline)
     if cfg.engine == "batched":
         # iterative deepening: most dichotomic queries resolve within the
         # pre-batching node budget (contraction alone certifies them), so
@@ -99,9 +139,9 @@ def _decide(csp: CSP, root: int, sense: str, t: float,
         # only where the quick pass is UNKNOWN.  This keeps the *number*
         # of queries a stage completes per second no worse than the scalar
         # engine's while the hard boundary queries get the deep frontier.
-        quick_nodes = cfg.quick_nodes(csp)
+        quick_nodes = cfg.quick_nodes(nvars)
         if full.max_nodes > quick_nodes:
-            v = fn(csp, root, sense, t,
+            v = fn(entries, sense, t,
                    S.BPBudget(quick_nodes, cfg.hc4_rounds, cfg.batch,
                               deadline))
             now = time.monotonic()
@@ -111,7 +151,7 @@ def _decide(csp: CSP, root: int, sense: str, t: float,
             # whole remaining slice (it returns a sound UNKNOWN at the cut)
             esc_deadline = (now + max(1.0, 0.25 * (deadline - now))
                             if math.isfinite(deadline) else deadline)
-            deep = fn(csp, root, sense, t,
+            deep = fn(entries, sense, t,
                       dataclasses.replace(full,
                                           deadline=min(deadline,
                                                        esc_deadline)))
@@ -123,7 +163,7 @@ def _decide(csp: CSP, root: int, sense: str, t: float,
                     (sense == "le" and v.witness < deep.witness)):
                 return v
             return deep
-    return fn(csp, root, sense, t, full)
+    return fn(entries, sense, t, full)
 
 
 def _pow2_thresholds(lo: float, hi: float) -> list:
@@ -137,10 +177,14 @@ def _pow2_thresholds(lo: float, hi: float) -> list:
     return sorted(set(out))
 
 
-def _tighten_side(csp: CSP, root: int, iv: Interval, side: str,
+def _tighten_side(entries, iv: Interval, side: str,
                   cfg: SMTConfig, deadline: float,
                   escalate: bool = True) -> float:
-    """Sound new bound for one side of `iv` (hi for "hi", lo for "lo")."""
+    """Sound new bound for one side of `iv` (hi for "hi", lo for "lo").
+
+    `entries` is the phase list `[(csp, root), ...]` (a single pair for the
+    classic alignment-blind encoding); the bound covers the union of phases.
+    """
     maximize = side == "hi"
     sense = "ge" if maximize else "le"
     bound = iv.hi if maximize else iv.lo
@@ -148,8 +192,9 @@ def _tighten_side(csp: CSP, root: int, iv: Interval, side: str,
         return bound
     # floor of the search: best concrete value seen (always achievable)
     floor = iv.lo if maximize else iv.hi
-    v0 = cfg.decide_fn()(csp, root, sense, bound,
-                         S.BPBudget(max_nodes=1, hc4_rounds=cfg.hc4_rounds))
+    v0 = cfg.decide_fn()(entries, sense, bound,
+                         S.BPBudget(max_nodes=len(entries),
+                                    hc4_rounds=cfg.hc4_rounds))
     if v0.status == S.SAT:
         return bound            # the seed bound itself is attained
     if v0.witness is not None:
@@ -166,7 +211,7 @@ def _tighten_side(csp: CSP, root: int, iv: Interval, side: str,
         # fall back to quick-only queries (PR-1-era behavior) after that.
         nonlocal deep_strikes
         allow = escalate and deep_strikes < 2
-        v = _decide(csp, root, sense, t, cfg, deadline, escalate=allow)
+        v = _decide(entries, sense, t, cfg, deadline, escalate=allow)
         if allow and v.status == S.UNKNOWN:
             deep_strikes += 1
         return v
@@ -216,23 +261,43 @@ def _tighten_side(csp: CSP, root: int, iv: Interval, side: str,
 def tighten_stage(csp: CSP, root: int, seed: Interval, cfg: SMTConfig,
                   deadline: float) -> Interval:
     """Tightened sound range for `root`, always a subset of `seed`."""
-    # certified initial pass: HC4 + affine relaxation over the full box
-    box = list(csp.init)
-    m = S._meet(box[root], seed)
-    if m is None:
+    return tighten_stage_phases([(csp, root)], seed, cfg, deadline)
+
+
+def tighten_stage_phases(entries, seed: Interval, cfg: SMTConfig,
+                         deadline: float) -> Interval:
+    """Tightened sound union-of-phases range, always a subset of `seed`.
+
+    `entries` holds one `(csp, root)` per output phase (a single entry is
+    the classic whole-stage CSP).  Every phase's certified initial pass
+    (HC4 + affine relaxation) runs first; when all phases are linear the
+    union of their exact affine hulls is returned without any search,
+    otherwise the dichotomic searches below query all phases as one
+    OR-composed `decide_multi` problem under the shared budget/deadline.
+    """
+    # certified initial pass per phase: HC4 + affine relaxation on full box
+    iv: Optional[Interval] = None
+    all_linear = True
+    for csp, root in entries:
+        box = list(csp.init)
+        m = S._meet(box[root], seed)
+        if m is None:
+            continue            # seed excludes this phase's root box entirely
+        box[root] = m
+        if not (S.hc4(csp, box, cfg.hc4_rounds) and S.affine_sweep(csp, box)
+                and S.hc4(csp, box, 2)):
+            return seed         # should not happen (seed is sound); bail out
+        iv = box[root] if iv is None else iv.join(box[root])
+        all_linear &= csp.is_linear()
+    if iv is None:
         return seed
-    box[root] = m
-    if not (S.hc4(csp, box, cfg.hc4_rounds) and S.affine_sweep(csp, box)
-            and S.hc4(csp, box, 2)):
-        return seed             # should not happen (seed is sound); bail out
-    iv = box[root]
-    if csp.is_linear():
-        return iv               # affine hull is exact: no search needed
+    if all_linear:
+        return iv               # affine hulls are exact: no search needed
     if cfg.engine != "batched":
         # scalar reference oracle: exact PR-1 semantics — each side may use
         # the full remaining deadline
-        hi = _tighten_side(csp, root, iv, "hi", cfg, deadline)
-        lo = _tighten_side(csp, root, iv, "lo", cfg, deadline)
+        hi = _tighten_side(entries, iv, "hi", cfg, deadline)
+        lo = _tighten_side(entries, iv, "lo", cfg, deadline)
         if lo > hi:             # numerical corner: fall back to the pass-1 hull
             return iv
         return Interval(lo, hi)
@@ -243,9 +308,9 @@ def tighten_stage(csp: CSP, root: int, seed: Interval, cfg: SMTConfig,
     # the sides so it cannot starve the lo search.
     now = time.monotonic()
     span = max(deadline - now, 0.0)
-    hi = _tighten_side(csp, root, iv, "hi", cfg,
+    hi = _tighten_side(entries, iv, "hi", cfg,
                        min(deadline, now + 0.35 * span), escalate=False)
-    lo = _tighten_side(csp, root, iv, "lo", cfg,
+    lo = _tighten_side(entries, iv, "lo", cfg,
                        min(deadline, now + 0.7 * span), escalate=False)
     if lo > hi:                 # numerical corner: fall back to the pass-1 hull
         return iv
@@ -255,9 +320,9 @@ def tighten_stage(csp: CSP, root: int, seed: Interval, cfg: SMTConfig,
     if time.monotonic() < deadline:
         iv2 = Interval(lo, hi)
         now = time.monotonic()
-        hi = _tighten_side(csp, root, iv2, "hi", cfg,
+        hi = _tighten_side(entries, iv2, "hi", cfg,
                            min(deadline, now + 0.5 * (deadline - now)))
-        lo = _tighten_side(csp, root, Interval(lo, hi), "lo", cfg, deadline)
+        lo = _tighten_side(entries, Interval(lo, hi), "lo", cfg, deadline)
         if lo > hi:
             return iv2
     return Interval(lo, hi)
@@ -296,10 +361,40 @@ def analyze_smt(pipeline: Pipeline,
             # time; unused time rolls over to later stages.
             slice_s = 2.0 * (deadline - now) / max(n_left, 1)
             stage_deadline = min(deadline, now + max(slice_s, 0.5))
-            csp, root = encode_stage(pipeline, name, bounds,
-                                     input_ranges=input_ranges,
-                                     max_vars=cfg.max_vars)
-            tiv = tighten_stage(csp, root, iv, cfg, stage_deadline)
+            entries = None
+            if cfg.phase_split and closure_is_sampled(pipeline, name):
+                # phase-split: exactly-aligned expansion per output-phase
+                # residue; None = no uniform lattice / too many phases —
+                # fall back to the alignment-blind cut encoding below
+                entries = encode_stage_phases(pipeline, name, bounds,
+                                              input_ranges=input_ranges,
+                                              max_vars=cfg.max_vars,
+                                              max_phases=cfg.max_phases)
+            if entries is None:
+                entries = [encode_stage(pipeline, name, bounds,
+                                        input_ranges=input_ranges,
+                                        max_vars=cfg.max_vars)]
+            elif not all(c.is_linear() and "cut" not in c.kinds
+                         for c, _ in entries):
+                # nonlinear (or budget-cut) phases need search, and the
+                # exact expansions are much larger CSPs than the blind cut
+                # encoding — a fixed slice can leave them UNKNOWN where the
+                # small blind system converges.  Run the blind search on
+                # half the slice first and seed the phase pass with its
+                # result: the phase-split bound is then never looser than
+                # the alignment-blind one by construction.  (All-linear
+                # cut-free phases skip this: their union hull is exact.)
+                b_csp, b_root = encode_stage(pipeline, name, bounds,
+                                             input_ranges=input_ranges,
+                                             max_vars=cfg.max_vars)
+                now = time.monotonic()
+                b_deadline = min(stage_deadline,
+                                 now + 0.5 * (stage_deadline - now))
+                biv = tighten_stage_phases([(b_csp, b_root)], iv, cfg,
+                                           b_deadline)
+                m = S._meet(iv, biv)
+                iv = m if m is not None else iv
+            tiv = tighten_stage_phases(entries, iv, cfg, stage_deadline)
             m = S._meet(iv, tiv)
             iv = m if m is not None else iv
         if name in work:

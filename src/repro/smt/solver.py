@@ -645,17 +645,34 @@ def decide_scalar(csp: CSP, root: int, sense: str, threshold: float,
     UNSAT is certified (all boxes refuted by contraction / relaxation);
     SAT carries a concrete witness objective value; UNKNOWN = budget out.
     """
+    return decide_scalar_multi(((csp, root),), sense, threshold, budget)
+
+
+def decide_scalar_multi(entries, sense: str, threshold: float,
+                        budget: Optional[BPBudget] = None) -> Verdict:
+    """Scalar oracle for a multi-phase (OR-composed) query.
+
+    `entries` is a sequence of `(csp, root)` phase systems — the phase-split
+    encoding of one stage.  The query "∃ output pixel with root {sense} T"
+    is satisfiable iff *some* phase is, so SAT short-circuits, UNSAT
+    requires refuting every phase, and the node budget / deadline is shared
+    across all phases (one query costs one budget, phase-split or not).
+    """
     t0 = time.perf_counter()
     bud = budget or BPBudget()
     maximize = sense == "ge"
     query = (Interval(threshold, _INF) if maximize
              else Interval(-_INF, threshold))
-    box0 = list(csp.init)
-    m = _meet(box0[root], query)
-    if m is None:
-        return Verdict(UNSAT)
-    box0[root] = m
-    frozen = csp.cond_dependent_vars()
+    stack: List[Tuple[int, Box]] = []
+    for pi in range(len(entries) - 1, -1, -1):    # phase 0 popped first
+        csp, root = entries[pi]
+        box0 = list(csp.init)
+        m = _meet(box0[root], query)
+        if m is None:
+            continue                              # phase refuted up front
+        box0[root] = m
+        stack.append((pi, box0))
+    frozen: Dict[int, set] = {}
 
     def _done(v: Verdict) -> Verdict:
         STATS["boxes"] += v.nodes
@@ -663,21 +680,23 @@ def decide_scalar(csp: CSP, root: int, sense: str, threshold: float,
         return v
 
     best: Optional[float] = None
-    stack: List[Box] = [box0]
     nodes = 0
     while stack:
         nodes += 1
         if nodes > bud.max_nodes or time.monotonic() > bud.deadline:
             return _done(Verdict(UNKNOWN, best, nodes - 1))
-        box = stack.pop()
+        pi, box = stack.pop()
+        csp, root = entries[pi]
+        if pi not in frozen:
+            frozen[pi] = csp.cond_dependent_vars()
         sat_v, best, children, stuck, _ = _scalar_step(
-            csp, box, root, maximize, threshold, best, frozen,
+            csp, box, root, maximize, threshold, best, frozen[pi],
             bud.hc4_rounds)
         if sat_v is not None:
             return _done(Verdict(SAT, sat_v, nodes))
         if stuck:
             return _done(Verdict(UNKNOWN, best, nodes))
-        stack.extend(children)
+        stack.extend((pi, ch) for ch in children)
     return _done(Verdict(UNSAT, best, nodes))
 
 
@@ -1530,6 +1549,96 @@ def _split_batch(prog: Program, lo, hi, glo, ghi, alive):
     return svar, sat, score
 
 
+def _group_step(csp: CSP, prog: Program, root: int, lo, hi, maximize: bool,
+                threshold: float, best, bud: BPBudget, frozen_set):
+    """Process one homogeneous (single-CSP) batch of popped boxes: contract,
+    probe, fix, split.  Returns (sat_value, best, kid_lo, kid_hi,
+    kid_scores, stuck); `kid_*` are the split children (possibly empty
+    arrays of shape (k, nvars) / (k,))."""
+    B = lo.shape[0]
+    empty = (np.empty((0, prog.nvars)), np.empty((0, prog.nvars)),
+             np.empty(0))
+    if B < _SMALL_BATCH:
+        # narrow frontier: numpy per-def overhead beats vectorization
+        # gains below ~a dozen rows, so run these boxes through the
+        # scalar per-box step (identical semantics, ~4x faster here)
+        kid_rows = []
+        kid_scores = []
+        stuck = False
+        for r in range(B):
+            box = [Interval(float(lo[r, i]), float(hi[r, i]))
+                   if lo[r, i] <= hi[r, i] else
+                   Interval(float(lo[r, i]), float(lo[r, i]))
+                   for i in range(prog.nvars)]
+            sat_v, best, children, irred, sc = _scalar_step(
+                csp, box, root, maximize, threshold, best, frozen_set,
+                bud.hc4_rounds)
+            if sat_v is not None:
+                return sat_v, best, *empty, stuck
+            stuck = stuck or irred
+            for ch in children:
+                kid_rows.append(([iv.lo for iv in ch],
+                                 [iv.hi for iv in ch]))
+                kid_scores.append(sc)
+        if not kid_rows:
+            return None, best, *empty, stuck
+        return (None, best, np.array([r[0] for r in kid_rows]),
+                np.array([r[1] for r in kid_rows]), np.array(kid_scores),
+                stuck)
+    alive = np.ones(B, bool)
+    alive = hc4_batch(prog, lo, hi, alive, bud.hc4_rounds)
+    if alive.any():
+        alive = affine_batch(prog, lo, hi, alive)
+    if alive.any():
+        alive = hc4_batch(prog, lo, hi, alive, 2)
+    if not alive.any():
+        return None, best, *empty, False
+    if not alive.all():
+        # compact to the surviving rows: gradients/witness/monotone-fix
+        # cost is proportional to N, and near an UNSAT threshold most
+        # of a batch dies in contraction
+        keep_rows = np.nonzero(alive)[0]
+        lo, hi = lo[keep_rows], hi[keep_rows]
+        alive = np.ones(len(keep_rows), bool)
+    glo, ghi = gradients_batch(prog, lo, hi, root)
+    sat_v, best = _witness_batch(prog, lo, hi, alive, root, maximize,
+                                 threshold, glo, ghi, best)
+    if sat_v is not None:
+        return sat_v, best, *empty, False
+    fixed = _monotone_fix_batch(prog, lo, hi, glo, ghi, maximize, alive)
+    if fixed.any():
+        alive = hc4_batch(prog, lo, hi, alive, bud.hc4_rounds)
+        if alive.any():
+            alive = affine_batch(prog, lo, hi, alive)
+        if not alive.any():
+            return None, best, *empty, False
+        if not alive.all():
+            keep_rows = np.nonzero(alive)[0]
+            lo, hi = lo[keep_rows], hi[keep_rows]
+            alive = np.ones(len(keep_rows), bool)
+        glo, ghi = gradients_batch(prog, lo, hi, root)
+        sat_v, best = _witness_batch(prog, lo, hi, alive, root, maximize,
+                                     threshold, glo, ghi, best)
+        if sat_v is not None:
+            return sat_v, best, *empty, False
+    svar, sat, score = _split_batch(prog, lo, hi, glo, ghi, alive)
+    stuck = bool((alive & (svar < 0)).any())  # cannot certify UNSAT any more
+    sp = alive & (svar >= 0)
+    if not sp.any():
+        return None, best, *empty, stuck
+    rows = np.nonzero(sp)[0]
+    j = svar[rows]
+    at = sat[rows]
+    left_lo, left_hi = lo[rows], hi[rows].copy()
+    right_lo, right_hi = lo[rows].copy(), hi[rows]
+    rr = np.arange(len(rows))
+    left_hi[rr, j] = at
+    right_lo[rr, j] = at
+    return (None, best, np.concatenate([left_lo, right_lo]),
+            np.concatenate([left_hi, right_hi]),
+            np.concatenate([score[rows], score[rows]]), stuck)
+
+
 def decide(csp: CSP, root: int, sense: str, threshold: float,
            budget: Optional[BPBudget] = None) -> Verdict:
     """Batched-box `decide`: same three-valued contract as `decide_scalar`
@@ -1537,31 +1646,59 @@ def decide(csp: CSP, root: int, sense: str, threshold: float,
     the frontier is popped and split in best-first batches of vectorized
     rows instead of one Python box at a time.
     """
+    return decide_multi(((csp, root),), sense, threshold, budget)
+
+
+def decide_multi(entries, sense: str, threshold: float,
+                 budget: Optional[BPBudget] = None) -> Verdict:
+    """Batched-box engine for a multi-phase (OR-composed) query.
+
+    The phase id is an extra leading axis folded into the box frontier:
+    rows of every phase live in ONE `(N, max_nvars)` lo/hi tensor (short
+    phases are padded with inert point columns) tagged by a per-row phase
+    index, so all phases share the same best-first loop, node budget, and
+    anytime deadline.  Each popped batch is regrouped by phase and run
+    through that phase's compiled op table.  SAT short-circuits on any
+    phase; UNSAT certifies that *every* phase's frontier was refuted.
+    """
     t0 = time.perf_counter()
     bud = budget or BPBudget()
-    prog = compile_csp(csp)
+    progs = [compile_csp(c) for c, _ in entries]
+    nv = max(p.nvars for p in progs)
     maximize = sense == "ge"
     query = (Interval(threshold, _INF) if maximize
              else Interval(-_INF, threshold))
-    m = _meet(Interval(float(prog.init_lo[root]), float(prog.init_hi[root])),
-              query)
-    if m is None:
+    rows_lo, rows_hi, rows_ph = [], [], []
+    for pi, ((csp, root), prog) in enumerate(zip(entries, progs)):
+        m = _meet(Interval(float(prog.init_lo[root]),
+                           float(prog.init_hi[root])), query)
+        if m is None:
+            continue                              # phase refuted up front
+        lo = np.zeros(nv)
+        hi = np.zeros(nv)
+        lo[:prog.nvars] = prog.init_lo
+        hi[:prog.nvars] = prog.init_hi
+        lo[root] = m.lo
+        hi[root] = m.hi
+        rows_lo.append(lo)
+        rows_hi.append(hi)
+        rows_ph.append(pi)
+    if not rows_lo:
         return Verdict(UNSAT)
-    f_lo = prog.init_lo[None, :].copy()
-    f_hi = prog.init_hi[None, :].copy()
-    f_lo[0, root] = m.lo
-    f_hi[0, root] = m.hi
-    f_score = np.zeros(1)
+    f_lo = np.stack(rows_lo)
+    f_hi = np.stack(rows_hi)
+    f_ph = np.array(rows_ph, np.int32)
+    f_score = np.zeros(len(rows_ph))
 
     def _done(v: Verdict) -> Verdict:
         STATS["boxes"] += v.nodes
         STATS["secs"] += time.perf_counter() - t0
         return v
 
+    frozen_sets: Dict[int, set] = {}
     best: Optional[float] = None
     nodes = 0
     stuck = False
-    frozen_set = {int(i) for i in np.nonzero(prog.frozen)[0]}
     while f_lo.shape[0]:
         remaining = bud.max_nodes - nodes
         if remaining <= 0 or time.monotonic() > bud.deadline:
@@ -1570,94 +1707,43 @@ def decide(csp: CSP, root: int, sense: str, threshold: float,
         if B < f_lo.shape[0]:          # pop the best-scored B boxes
             order = np.argpartition(-f_score, B - 1)
             take, keep = order[:B], order[B:]
-            lo, hi = f_lo[take], f_hi[take]
-            f_lo, f_hi, f_score = f_lo[keep], f_hi[keep], f_score[keep]
+            lo, hi, ph = f_lo[take], f_hi[take], f_ph[take]
+            f_lo, f_hi, f_ph, f_score = (f_lo[keep], f_hi[keep],
+                                         f_ph[keep], f_score[keep])
         else:
-            lo, hi = f_lo, f_hi
-            f_lo = np.empty((0, prog.nvars))
-            f_hi = np.empty((0, prog.nvars))
+            lo, hi, ph = f_lo, f_hi, f_ph
+            f_lo = np.empty((0, nv))
+            f_hi = np.empty((0, nv))
+            f_ph = np.empty(0, np.int32)
             f_score = np.empty(0)
         nodes += B
-        if B < _SMALL_BATCH:
-            # narrow frontier: numpy per-def overhead beats vectorization
-            # gains below ~a dozen rows, so run these boxes through the
-            # scalar per-box step (identical semantics, ~4x faster here)
-            kid_rows = []
-            kid_scores = []
-            for r in range(B):
-                box = [Interval(float(lo[r, i]), float(hi[r, i]))
-                       if lo[r, i] <= hi[r, i] else
-                       Interval(float(lo[r, i]), float(lo[r, i]))
-                       for i in range(prog.nvars)]
-                sat_v, best, children, irred, sc = _scalar_step(
-                    csp, box, root, maximize, threshold, best, frozen_set,
-                    bud.hc4_rounds)
-                if sat_v is not None:
-                    return _done(Verdict(SAT, sat_v, nodes))
-                stuck = stuck or irred
-                for ch in children:
-                    kid_rows.append(([iv.lo for iv in ch],
-                                     [iv.hi for iv in ch]))
-                    kid_scores.append(sc)
-            if kid_rows:
-                k_lo = np.array([r[0] for r in kid_rows])
-                k_hi = np.array([r[1] for r in kid_rows])
-                f_lo = np.concatenate([f_lo, k_lo])
-                f_hi = np.concatenate([f_hi, k_hi])
-                f_score = np.concatenate([f_score, np.array(kid_scores)])
-            continue
-        alive = np.ones(B, bool)
-        alive = hc4_batch(prog, lo, hi, alive, bud.hc4_rounds)
-        if alive.any():
-            alive = affine_batch(prog, lo, hi, alive)
-        if alive.any():
-            alive = hc4_batch(prog, lo, hi, alive, 2)
-        if not alive.any():
-            continue
-        if not alive.all():
-            # compact to the surviving rows: gradients/witness/monotone-fix
-            # cost is proportional to N, and near an UNSAT threshold most
-            # of a batch dies in contraction
-            keep_rows = np.nonzero(alive)[0]
-            lo, hi = lo[keep_rows], hi[keep_rows]
-            alive = np.ones(len(keep_rows), bool)
-        glo, ghi = gradients_batch(prog, lo, hi, root)
-        sat_v, best = _witness_batch(prog, lo, hi, alive, root, maximize,
-                                     threshold, glo, ghi, best)
-        if sat_v is not None:
-            return _done(Verdict(SAT, sat_v, nodes))
-        fixed = _monotone_fix_batch(prog, lo, hi, glo, ghi, maximize, alive)
-        if fixed.any():
-            alive = hc4_batch(prog, lo, hi, alive, bud.hc4_rounds)
-            if alive.any():
-                alive = affine_batch(prog, lo, hi, alive)
-            if not alive.any():
-                continue
-            if not alive.all():
-                keep_rows = np.nonzero(alive)[0]
-                lo, hi = lo[keep_rows], hi[keep_rows]
-                alive = np.ones(len(keep_rows), bool)
-            glo, ghi = gradients_batch(prog, lo, hi, root)
-            sat_v, best = _witness_batch(prog, lo, hi, alive, root, maximize,
-                                         threshold, glo, ghi, best)
+        for pi in np.unique(ph):
+            pi = int(pi)
+            csp, root = entries[pi]
+            prog = progs[pi]
+            if pi not in frozen_sets:
+                frozen_sets[pi] = {int(i)
+                                   for i in np.nonzero(prog.frozen)[0]}
+            rows = np.nonzero(ph == pi)[0]
+            g_lo = lo[rows][:, :prog.nvars]
+            g_hi = hi[rows][:, :prog.nvars]
+            sat_v, best, k_lo, k_hi, k_sc, g_stuck = _group_step(
+                csp, prog, root, g_lo, g_hi, maximize, threshold, best,
+                bud, frozen_sets[pi])
             if sat_v is not None:
                 return _done(Verdict(SAT, sat_v, nodes))
-        svar, sat, score = _split_batch(prog, lo, hi, glo, ghi, alive)
-        irred = alive & (svar < 0)
-        if irred.any():
-            stuck = True               # cannot certify UNSAT any more
-        sp = alive & (svar >= 0)
-        if sp.any():
-            rows = np.nonzero(sp)[0]
-            j = svar[rows]
-            at = sat[rows]
-            left_lo, left_hi = lo[rows], hi[rows].copy()
-            right_lo, right_hi = lo[rows].copy(), hi[rows]
-            rr = np.arange(len(rows))
-            left_hi[rr, j] = at
-            right_lo[rr, j] = at
-            f_lo = np.concatenate([f_lo, left_lo, right_lo])
-            f_hi = np.concatenate([f_hi, left_hi, right_hi])
-            f_score = np.concatenate([f_score, score[rows], score[rows]])
+            stuck = stuck or g_stuck
+            if len(k_lo):
+                if prog.nvars < nv:    # pad children back to the frontier
+                    pad_lo = np.zeros((len(k_lo), nv))
+                    pad_hi = np.zeros((len(k_lo), nv))
+                    pad_lo[:, :prog.nvars] = k_lo
+                    pad_hi[:, :prog.nvars] = k_hi
+                    k_lo, k_hi = pad_lo, pad_hi
+                f_lo = np.concatenate([f_lo, k_lo])
+                f_hi = np.concatenate([f_hi, k_hi])
+                f_ph = np.concatenate(
+                    [f_ph, np.full(len(k_lo), pi, np.int32)])
+                f_score = np.concatenate([f_score, k_sc])
     status = UNKNOWN if stuck else UNSAT
     return _done(Verdict(status, best, nodes))

@@ -8,7 +8,14 @@ the 512-device placeholder topology (and only in its own process).
 it is absent the tier-1 suite must still collect and run — only the
 property-fuzz module is skipped (mixed modules import via _hyp_compat and
 degrade their property tests to runtime skips).
+
+Profiles: "repro" (default) disables deadlines for local runs; "ci"
+additionally bounds example counts so fuzz suites are deterministic and
+fast in CI — select it with HYPOTHESIS_PROFILE=ci and pin the run with
+pytest's --hypothesis-seed (see .github/workflows/ci.yml).
 """
+import os
+
 try:
     from hypothesis import HealthCheck, settings
 except ModuleNotFoundError:
@@ -22,4 +29,14 @@ else:
         deadline=None,
         suppress_health_check=[HealthCheck.too_slow],
     )
-    settings.load_profile("repro")
+    # CI twin: same deadline policy, bounded example budget (the seeded
+    # deterministic batteries carry the coverage; hypothesis adds breadth).
+    # Determinism comes from pytest's --hypothesis-seed flag — NOT from
+    # derandomize=True, which would silently ignore that seed.
+    settings.register_profile(
+        "ci",
+        deadline=None,
+        max_examples=15,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "repro"))

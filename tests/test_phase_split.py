@@ -1,0 +1,422 @@
+"""Phase-split (polyphase) encoding — property battery + unit tests.
+
+The phase-split encoder (`repro.smt.encoder.encode_stage_phases`) replaces
+the alignment-blind cuts across stride/upsample stages with one exactly-
+aligned expansion per output-phase residue.  Two properties must hold for
+it to be shippable:
+
+  (a) soundness   — the union-of-phases range contains every value a dense
+                    concrete execution produces (borders included: edge-
+                    clamping only *duplicates* in-range pixels, which the
+                    independent-pixel model over-approximates);
+  (b) tightness   — phase-split bounds are never looser than the
+                    alignment-blind encoding at equal budget.  Asserted on
+                    linear pipelines, where both sides are certified by the
+                    exact affine pass (no search, no anytime noise).
+
+Both run as seeded deterministic batteries (always) and as hypothesis
+properties (when the optional dev dependency is installed — see
+`_hyp_compat`).  The module also pins the acceptance-level facts on the
+extended DUS pyramid (`dus.build_extended`) and covers the multi-phase
+solver engines differentially (batched vs the scalar reference oracle).
+"""
+import math
+import random
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st
+
+from repro.core.graph import Const
+from repro.core.interval import Interval
+from repro.core.range_analysis import analyze
+from repro.dsl.builder import PipelineBuilder, absv, maxv, minv
+from repro.dsl.exec import run_float
+from repro.pipelines import dus, optical_flow
+from repro.smt import SMTConfig, analyze_smt
+from repro.smt import solver as S
+from repro.smt.encoder import (closure_is_sampled, encode_stage,
+                               encode_stage_phases, sampling_lattice)
+from repro.smt.optimize import tighten_stage_phases
+
+_BUDGET = SMTConfig(time_budget_s=5.0)
+_BLIND = SMTConfig(time_budget_s=5.0, phase_split=False)
+
+
+# ---------------------------------------------------------------------------
+# random sampled-pipeline generator (shared by the seeded battery and the
+# hypothesis properties — hypothesis feeds it seeds and shrinks over them)
+# ---------------------------------------------------------------------------
+
+_KERNELS_1D = ([1, 2, 1], [1, 1], [1, 3, 1], [2, 1, 1])
+
+
+def _random_sampled_pipeline(seed: int, linear_only: bool):
+    """2-5 stages over one 8-bit image; every stride/upsample keeps the
+    cumulative grid factor in [1/4, 4] per axis so shapes stay integral and
+    pointwise stages only ever combine equal-rate producers."""
+    rng = random.Random(seed)
+    p = PipelineBuilder(f"fuzz{seed}")
+    handles = [(p.image("img", 0, 255), (Fraction(1), Fraction(1)))]
+    for i in range(rng.randint(2, 5)):
+        name = f"s{i}"
+        h, f = handles[rng.randrange(len(handles))]
+        roll = rng.random()
+        if roll < 0.45:
+            k = list(rng.choice(_KERNELS_1D))
+            y_axis = rng.random() < 0.5
+            weights = [[w] for w in k] if y_axis else [k]
+            scale = 1.0 / sum(k)
+            down_ok = f[0 if y_axis else 1] > Fraction(1, 4)
+            up_ok = f[0 if y_axis else 1] < 4
+            go_down = down_ok and (not up_ok or rng.random() < 0.5)
+            if go_down:
+                s = (2, 1) if y_axis else (1, 2)
+                new = p.downsample(name, h, weights, scale=scale, stride=s)
+                nf = (f[0] / s[0], f[1] / s[1])
+            else:
+                u = (2, 1) if y_axis else (1, 2)
+                new = p.upsample(name, h, weights, scale=scale, factor=u)
+                nf = (f[0] * u[0], f[1] * u[1])
+        else:
+            peers = [e for e in handles if e[1] == f]
+            h2, _ = peers[rng.randrange(len(peers))]
+            if roll < 0.8 or linear_only:
+                c1 = rng.choice([1.0, 2.0, -1.0, 0.5, 3.0])
+                c2 = rng.choice([1.0, -1.0, -2.0, 0.25])
+                c0 = rng.choice([0.0, 10.0, -5.0])
+                new = p.define(name, h * c1 + h2 * c2 + c0)
+            else:
+                op = rng.choice(["mul", "abs", "minmax"])
+                if op == "mul":
+                    new = p.define(
+                        name, (h - 100.0) * ((h2 - 100.0) * (1.0 / 64)))
+                elif op == "abs":
+                    new = p.define(name, absv(h - h2))
+                else:
+                    fn = minv if rng.random() < 0.5 else maxv
+                    new = p.define(name, fn(h, h2))
+            nf = f
+        handles.append((new, nf))
+    return p.build()
+
+
+def _check_sound(seed: int):
+    pipe = _random_sampled_pipeline(seed, linear_only=False)
+    sm = analyze_smt(pipe, config=_BUDGET)
+    rng = np.random.default_rng(seed)
+    images = [rng.integers(0, 256, (16, 16)).astype(float) for _ in range(3)]
+    images += [np.zeros((16, 16)), np.full((16, 16), 255.0)]
+    checker = np.indices((16, 16)).sum(axis=0) % 2 * 255.0
+    images.append(checker)
+    for img in images:
+        env = run_float(pipe, img)
+        for stage, vals in env.items():
+            r = sm[stage].range
+            tol = 1e-7 * max(1.0, abs(r.lo), abs(r.hi))
+            assert r.lo - tol <= float(np.min(vals)), (seed, stage, r)
+            assert float(np.max(vals)) <= r.hi + tol, (seed, stage, r)
+
+
+def _check_not_looser_than_blind(seed: int):
+    pipe = _random_sampled_pipeline(seed, linear_only=True)
+    sm_phase = analyze_smt(pipe, config=_BUDGET)
+    sm_blind = analyze_smt(pipe, config=_BLIND)
+    for stage in pipe.topo_order():
+        b, ph = sm_blind[stage].range, sm_phase[stage].range
+        tol = 1e-9 * max(1.0, abs(b.lo), abs(b.hi))
+        assert ph.lo >= b.lo - tol, (seed, stage, ph, b)
+        assert ph.hi <= b.hi + tol, (seed, stage, ph, b)
+        assert sm_phase[stage].alpha <= sm_blind[stage].alpha, (seed, stage)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_phase_split_sound_vs_dense_execution(seed):
+    """(a) phase-split bounds contain dense concrete execution."""
+    _check_sound(seed)
+
+
+@pytest.mark.parametrize("seed", range(8, 16))
+def test_phase_split_not_looser_than_blind(seed):
+    """(b) phase-split is never looser than alignment-blind, equal budget."""
+    _check_not_looser_than_blind(seed)
+
+
+@given(seed=st.integers(min_value=100, max_value=99999))
+@settings(max_examples=15, deadline=None)
+def test_phase_split_sound_fuzz(seed):
+    _check_sound(seed)
+
+
+@given(seed=st.integers(min_value=100, max_value=99999))
+@settings(max_examples=15, deadline=None)
+def test_phase_split_tightness_fuzz(seed):
+    _check_not_looser_than_blind(seed)
+
+
+# ---------------------------------------------------------------------------
+# sampling lattice
+# ---------------------------------------------------------------------------
+
+def test_lattice_of_dus_tail_is_2x2():
+    p = dus.build()
+    assert sampling_lattice(p, "Uy") == (2, 2)
+    assert sampling_lattice(p, "Ux") == (1, 2)   # x expanded, y still coarse
+    assert sampling_lattice(p, "Dx") == (1, 1)   # pure decimation: integral
+    assert closure_is_sampled(p, "Dx") and not closure_is_sampled(p, "img")
+
+
+def test_lattice_none_on_rate_conflict():
+    # root reads img both directly and through a stride-2 producer: the two
+    # paths give img rates 1 and 2 — no uniform lattice, encoder falls back
+    p = PipelineBuilder("conflict")
+    img = p.image("img", 0, 255)
+    d = p.downsample("d", img, [[1, 1]], scale=0.5, stride=(1, 2))
+    p.define("mix", d + img * 0.5)
+    pipe = p.build()
+    assert sampling_lattice(pipe, "mix") is None
+    bounds = {n: r.range for n, r in analyze(pipe).items()}
+    assert encode_stage_phases(pipe, "mix", bounds) is None
+    # ...and the analysis still runs (blind fallback), staying sound
+    sm = analyze_smt(pipe, config=_BUDGET)
+    ia = analyze(pipe)
+    for s in pipe.topo_order():
+        assert ia[s].range.encloses(sm[s].range), s
+
+
+def test_max_phases_falls_back_to_blind():
+    p = dus.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    assert encode_stage_phases(p, "Uy", bounds, max_phases=3) is None
+    assert len(encode_stage_phases(p, "Uy", bounds, max_phases=4)) == 4
+
+
+def test_phase_csp_shares_through_sampled_producers():
+    # the blind encoder cuts every tap through Ux/Dy/Dx; each phase CSP
+    # must instead reach the shared img pixels with zero sampling cuts
+    p = dus.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    for csp, root in encode_stage_phases(p, "Uy", bounds):
+        kinds = set(csp.kinds)
+        assert "input" in kinds and "cut" not in kinds
+        assert csp.is_linear()
+
+
+# ---------------------------------------------------------------------------
+# uniform known-bound meet (encode_stage fix)
+# ---------------------------------------------------------------------------
+
+def test_known_bound_meet_wraps_const_folded_producers():
+    p = PipelineBuilder("cf")
+    img = p.image("img", 0, 255)
+    k = p.define("k", Const(3.0) + Const(2.0))     # folds to 5.0
+    p.define("out", img * 2.0 + k)
+    pipe = p.build()
+    bounds = {n: r.range for n, r in analyze(pipe).items()}
+    csp, root = encode_stage(pipe, "out", bounds)
+    # the const-folded producer instance is wrapped in an aux var whose
+    # init box met the known stage bound (uniform meet, not VAR-roots-only)
+    wrapped = [i for i, n in enumerate(csp.names) if n == "k[0,0]"]
+    assert wrapped, csp.names
+    i = wrapped[0]
+    assert csp.kinds[i] == "aux"
+    assert (csp.init[i].lo, csp.init[i].hi) == (5.0, 5.0)
+    assert csp.defs[i] is not None
+    # and the analysis end-to-end stays exact
+    sm = analyze_smt(pipe, config=_BUDGET)
+    assert (sm["out"].range.lo, sm["out"].range.hi) == (5.0, 515.0)
+
+
+def test_known_bound_meet_tightens_expansion_root():
+    # an artificially tighter (still sound) producer bound must land in the
+    # expansion root's init box — the "benefit from earlier tightening" path
+    p = PipelineBuilder("mt")
+    img = p.image("img", 0, 255)
+    b = p.define("blur", img * 0.5)
+    p.define("out", b + 1.0)
+    pipe = p.build()
+    bounds = {n: r.range for n, r in analyze(pipe).items()}
+    bounds["blur"] = Interval(10.0, 20.0)          # pretend SMT tightened it
+    csp, _ = encode_stage(pipe, "out", bounds)
+    roots = [i for i, n in enumerate(csp.names) if n == "*"]
+    assert roots and (csp.init[roots[0]].lo, csp.init[roots[0]].hi) == \
+        (10.0, 20.0)
+
+
+# ---------------------------------------------------------------------------
+# extended DUS: the acceptance-level phase-split wins
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dus_ext_res():
+    p = dus.build_extended()
+    return (p, analyze(p), analyze_smt(p, config=SMTConfig(time_budget_s=30)),
+            analyze_smt(p, config=SMTConfig(time_budget_s=30,
+                                            phase_split=False)))
+
+
+def test_dus_ext_band_recovers_two_alpha_bits(dus_ext_res):
+    """The DoG band on the decimated grid: both operands hide behind
+    stride-2 producers, so the alignment-blind encoding cuts them to
+    independent [0, 255] signals (+-255, alpha 9).  The phase-split
+    expansion is exact: +-255 * 60/256 = +-59.77 (alpha 7) — certified by
+    the affine pass alone (the CSP is linear), no search budget involved."""
+    p, ia, phase, blind = dus_ext_res
+    assert ia["band"].alpha == 9 and blind["band"].alpha == 9
+    assert phase["band"].alpha == 7
+    assert math.isclose(phase["band"].range.hi, 255.0 * 60.0 / 256.0)
+    assert math.isclose(phase["band"].range.lo, -255.0 * 60.0 / 256.0)
+
+
+def test_dus_ext_residual_strictly_tighter(dus_ext_res):
+    """Reconstruction residual img - Uy: every output phase shares the
+    center pixel with the down-up chain (union bound +-239.06 < +-255)."""
+    p, ia, phase, blind = dus_ext_res
+    assert blind["res"].range.hi == 255.0 and blind["res"].range.lo == -255.0
+    assert phase["res"].range.hi < 240.0
+    assert phase["res"].range.lo > -240.0
+    # exact union: the loosest phase shares 1/16 of the center tap's mass
+    assert math.isclose(phase["res"].range.hi, 255.0 * 15.0 / 16.0)
+
+
+def test_dus_ext_nesting_and_convex_stages_exact(dus_ext_res):
+    p, ia, phase, blind = dus_ext_res
+    for s in p.topo_order():
+        assert ia[s].range.encloses(blind[s].range), s
+        assert blind[s].range.encloses(phase[s].range), s
+    # the paper's convex chain is already exact at [0, 255]: phase-split
+    # must reproduce, not "improve", the true range
+    for s in ("Dx", "Dy", "Ux", "Uy", "D5"):
+        assert (phase[s].range.lo, phase[s].range.hi) == (0.0, 255.0), s
+
+
+def test_dus_ext_sound_vs_dense_execution(dus_ext_res):
+    p, _, phase, _ = dus_ext_res
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        env = run_float(p, rng.integers(0, 256, (16, 16)).astype(float))
+        for stage, vals in env.items():
+            r = phase[stage].range
+            assert r.lo - 1e-7 <= float(np.min(vals)), stage
+            assert float(np.max(vals)) <= r.hi + 1e-7, stage
+
+
+# ---------------------------------------------------------------------------
+# multi-phase solver engines: batched vs scalar reference oracle
+# ---------------------------------------------------------------------------
+
+def _phase_entries(pipe, stage):
+    bounds = {n: r.range for n, r in analyze(pipe).items()}
+    entries = encode_stage_phases(pipe, stage, bounds)
+    assert entries is not None
+    return entries, bounds[stage]
+
+
+_PHASE_DIFF = [
+    ("dus", lambda: dus.build(), "Uy"),
+    ("dus_ext", lambda: dus.build_extended(), "band"),
+    ("dus_ext", lambda: dus.build_extended(), "res"),
+    ("of_pyr", lambda: optical_flow.build_pyramid(n_iters=1), "cDenom"),
+    ("of_pyr", lambda: optical_flow.build_pyramid(n_iters=1), "Vx1"),
+]
+
+
+@pytest.mark.parametrize("pipe_name,make,stage", _PHASE_DIFF,
+                         ids=[f"{p}-{s}" for p, _, s in _PHASE_DIFF])
+def test_multi_decide_batched_never_contradicts_scalar(pipe_name, make,
+                                                       stage):
+    """Equal-budget differential on the phase-split CSPs: the batched
+    engine's verdicts must never contradict the scalar oracle's, and on
+    these pinned workloads both certify the same UNSATs — `engine="scalar"`
+    stays a trustworthy oracle for phase-split constraint systems."""
+    entries, seed = _phase_entries(make(), stage)
+    bud = S.BPBudget(48, 6)
+    for frac, sense in ((1.5, "ge"), (0.5, "ge"), (1.5, "le"), (0.5, "le")):
+        t = (seed.hi if sense == "ge" else seed.lo) * frac
+        vs = S.decide_scalar_multi(entries, sense, t, bud)
+        vb = S.decide_multi(entries, sense, t, bud)
+        assert {vs.status, vb.status} != {S.SAT, S.UNSAT}, (stage, sense, t)
+        if vs.status == S.UNSAT:
+            assert vb.status == S.UNSAT, (stage, sense, t)
+
+
+@pytest.mark.parametrize("pipe_name,make,stage", _PHASE_DIFF[:3],
+                         ids=[f"{p}-{s}" for p, _, s in _PHASE_DIFF[:3]])
+def test_multi_tighten_linear_phases_engine_identical(pipe_name, make,
+                                                      stage):
+    """All-linear phase systems are certified by the exact affine pass —
+    no search runs, so both engines must return IDENTICAL bounds at any
+    budget (the strongest equal-budget parity statement)."""
+    import time as _t
+    entries, seed = _phase_entries(make(), stage)
+    assert all(c.is_linear() for c, _ in entries)
+    cfg_b = SMTConfig(engine="batched", max_nodes=64, work_budget=4096)
+    cfg_s = SMTConfig(engine="scalar")
+    ivb = tighten_stage_phases(entries, seed, cfg_b, _t.monotonic() + 60.0)
+    ivs = tighten_stage_phases(entries, seed, cfg_s, _t.monotonic() + 60.0)
+    assert (ivb.lo, ivb.hi) == (ivs.lo, ivs.hi), (stage, ivb, ivs)
+
+
+@pytest.mark.parametrize("pipe_name,make,stage", _PHASE_DIFF[3:],
+                         ids=[f"{p}-{s}" for p, _, s in _PHASE_DIFF[3:]])
+def test_multi_tighten_batched_not_looser_than_scalar(pipe_name, make,
+                                                      stage):
+    """On nonlinear phase systems the production-budget batched engine must
+    produce bounds no looser than the scalar reference oracle (the PR-2
+    contract, extended to multi-phase queries).  Node-for-node the two
+    explore different trees (best-first batches vs LIFO), so parity is
+    asserted at each engine's production budget, like `analyze_smt` runs
+    them."""
+    import time as _t
+    entries, seed = _phase_entries(make(), stage)
+    cfg_b = SMTConfig(engine="batched")
+    cfg_s = SMTConfig(engine="scalar")
+    ivb = tighten_stage_phases(entries, seed, cfg_b, _t.monotonic() + 30.0)
+    ivs = tighten_stage_phases(entries, seed, cfg_s, _t.monotonic() + 30.0)
+    tol = 1e-9 * max(1.0, abs(ivs.lo), abs(ivs.hi))
+    assert ivb.lo >= ivs.lo - tol, (stage, ivb, ivs)
+    assert ivb.hi <= ivs.hi + tol, (stage, ivb, ivs)
+
+
+def test_multi_decide_sat_witness_and_budget_sharing():
+    entries, seed = _phase_entries(dus.build(), "Uy")
+    # all four phases are refutable above the convex maximum...
+    assert S.decide_multi(entries, "ge", 255.5).status == S.UNSAT
+    # ...and a witness exists just below it (shared node budget, SAT
+    # short-circuits on whichever phase finds it first)
+    v = S.decide_multi(entries, "ge", 254.0)
+    assert v.status == S.SAT and v.witness >= 254.0
+    vs = S.decide_scalar_multi(entries, "ge", 254.0)
+    assert vs.status == S.SAT and vs.witness >= 254.0
+
+
+def test_multi_decide_single_entry_matches_classic_decide():
+    """decide(csp, ...) is decide_multi([(csp, root)], ...): node
+    accounting and verdicts must be unchanged on a classic workload."""
+    from repro.pipelines import hcd
+    p = hcd.build()
+    bounds = {n: r.range for n, r in analyze(p).items()}
+    csp, root = encode_stage(p, "det", bounds)
+    v1 = S.decide(csp, root, "ge", 2.0 ** 30, S.BPBudget(256, 6))
+    v2 = S.decide_multi([(csp, root)], "ge", 2.0 ** 30, S.BPBudget(256, 6))
+    assert v1.status == v2.status == S.UNKNOWN
+    assert v1.nodes == v2.nodes == 256
+
+
+# ---------------------------------------------------------------------------
+# optical-flow pyramid: sampled deep pipeline end-to-end
+# ---------------------------------------------------------------------------
+
+def test_of_pyramid_nesting_and_coarse_flow_tight():
+    p = optical_flow.build_pyramid(n_iters=1)
+    ia = analyze(p)
+    sm = analyze_smt(p, config=SMTConfig(time_budget_s=45.0))
+    for s in p.topo_order():
+        assert ia[s].range.encloses(sm[s].range), s
+        assert sm[s].alpha <= ia[s].alpha, s
+    # the coarse HS update must keep the flat-OF headline through the
+    # sampling boundary: |cVx0| far below interval's 0.85*255
+    assert sm["cVx0"].alpha < ia["cVx0"].alpha - 2
+    assert sm["Vx1"].alpha < ia["Vx1"].alpha
