@@ -1,16 +1,21 @@
-"""Per-benchmark alpha delta of the committed golden table vs its baseline.
+"""Per-benchmark alpha delta of the committed golden plans vs the baseline.
 
     PYTHONPATH=src python -m benchmarks.alpha_delta [--markdown]
 
-Compares `benchmarks/results/table11_smt_alphas.json` (the committed golden
-table, regenerated whenever the analysis improves) against
-`table11_smt_alphas.baseline.json` (the previous PR's snapshot) and prints
-one summary line per benchmark group plus every per-stage alpha move.  CI
-appends the markdown form to the job summary so encoder/solver changes show
-their recovered (or regressed!) bits at a glance.
+The golden artifact is `benchmarks/results/table11_plans.json` — one
+serialized `BitwidthPlan` per benchmark group, written by the plan driver
+in `paper_tables.table11_smt_alphas` (alphas are read from each plan's
+interval/smt/profile columns).  It is compared against
+`table11_smt_alphas.baseline.json` (the previous PR's snapshot, legacy
+rows format) and prints one summary line per benchmark group plus every
+per-stage alpha move.  CI appends the markdown form to the job summary so
+encoder/solver/pass changes show their recovered (or regressed!) bits at a
+glance.
 
 Exit status is non-zero when any smt alpha regressed (grew) on a stage both
-tables know — the delta report doubles as a cheap golden-regression gate.
+artifacts know — the delta report doubles as a cheap golden-regression
+gate.  Both loaders accept either format, so baselines can stay frozen
+across the plan migration.
 """
 from __future__ import annotations
 
@@ -21,15 +26,30 @@ import sys
 from collections import defaultdict
 
 HERE = os.path.dirname(os.path.abspath(__file__))
-GOLDEN = os.path.join(HERE, "results", "table11_smt_alphas.json")
+GOLDEN_PLANS = os.path.join(HERE, "results", "table11_plans.json")
+GOLDEN_ROWS = os.path.join(HERE, "results", "table11_smt_alphas.json")
 BASELINE = os.path.join(HERE, "results", "table11_smt_alphas.baseline.json")
 
 
 def _load(path):
+    """(group, stage) -> (interval, smt, profile) alphas, either format."""
     with open(path) as f:
         data = json.load(f)
+    if "groups" in data:           # plan JSON (BitwidthPlan per group)
+        out = {}
+        for g, plan in data["groups"].items():
+            cols = plan["columns"]
+            for stage in cols["interval"]:
+                out[(g, stage)] = (int(cols["interval"][stage]["alpha"]),
+                                   int(cols["smt"][stage]["alpha"]),
+                                   int(cols["profile"][stage]["alpha"]))
+        return out
     return {(r[0], r[1]): (int(r[2]), int(r[3]), int(r[4]))
             for r in data["rows"]}
+
+
+def _golden_path():
+    return GOLDEN_PLANS if os.path.exists(GOLDEN_PLANS) else GOLDEN_ROWS
 
 
 def main() -> int:
@@ -37,7 +57,7 @@ def main() -> int:
     ap.add_argument("--markdown", action="store_true",
                     help="emit a GitHub-flavored markdown table")
     args = ap.parse_args()
-    golden = _load(GOLDEN)
+    golden = _load(_golden_path())
     base = _load(BASELINE)
 
     groups = defaultdict(lambda: {"delta": 0, "moves": [], "new": 0})

@@ -7,7 +7,9 @@ the paper measured watts on a Zynq.
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -17,6 +19,9 @@ from repro.core.fixedpoint import FixedPointType
 from repro.core.range_analysis import analyze
 from repro.pipelines import hcd, optical_flow, usm, dus
 from repro.pipelines import workflows as W
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
 
 PAPER_TABLE2 = {"img": 8, "Ix": 8, "Iy": 8, "Ixx": 13, "Ixy": 14, "Iyy": 13,
                 "Sxx": 16, "Sxy": 17, "Syy": 16, "det": 33, "trace": 17,
@@ -150,7 +155,15 @@ def table11_smt_alphas() -> Tuple[List, str]:
     profile <= smt <= interval per stage.  The derived line reports how much
     of the interval->profile gap the solver closes (paper: its Optical Flow
     bounds nearly match the profile-driven ones) and the batched solver's
-    throughput (boxes/sec) over the whole run."""
+    throughput (boxes/sec) over the whole run.
+
+    Each benchmark runs as one `BitwidthPlan` through the pass driver
+    (`BenchmarkSetup.plan`): columns interval/smt/profile plus per-phase
+    sub-columns on phase-split stages.  The plans themselves are written to
+    `results/table11_plans.json` — the artifact `benchmarks/alpha_delta.py`
+    gates on (the legacy `rows` table stays for human eyes and older
+    baselines)."""
+    from repro.analysis import PlanNestingError
     from repro.smt import SMTConfig
     from repro.smt import solver as S
 
@@ -173,24 +186,38 @@ def table11_smt_alphas() -> Tuple[List, str]:
     }
     S.STATS.update(boxes=0, secs=0.0)
     rows: List = []
+    plans: Dict[str, Dict] = {}
     closed_bits = 0
     gap_bits = 0
     nested = True
+    n_phase_cols = 0
     for name, (make, cfg) in makers.items():
         b = make()
-        cols = W.alpha_columns(b, smt_config=cfg)
+        plan = b.plan(smt_config=cfg, phases=True)
+        plans[name] = plan.to_json_dict()
+        ia = plan.columns["interval"]
+        sm = plan.columns["smt"]
+        pr = plan.columns["profile"]
+        try:
+            plan.check_nesting(["profile", "smt", "interval"])
+        except PlanNestingError:
+            nested = False
+        n_phase_cols += len(plan.phases.get("smt", {}))
         for s in b.pipeline.topo_order():
-            c = cols[s]
-            rows.append((name, s, c["interval"], c["smt"], c["profile_max"]))
-            closed_bits += c["interval"] - c["smt"]
-            gap_bits += c["interval"] - c["profile_max"]
-            nested &= (c["profile_max"] <= c["smt"] <= c["interval"])
+            rows.append((name, s, ia[s].alpha, sm[s].alpha, pr[s].alpha))
+            closed_bits += ia[s].alpha - sm[s].alpha
+            gap_bits += ia[s].alpha - pr[s].alpha
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "table11_plans.json"), "w") as f:
+        json.dump({"version": 1, "groups": plans}, f, sort_keys=True,
+                  indent=1)
     pct = 100.0 * closed_bits / max(gap_bits, 1)
     boxes_per_s = S.STATS["boxes"] / max(S.STATS["secs"], 1e-9)
     return rows, (f"profile<=smt<=interval nesting holds: {nested}; SMT "
                   f"recovers {closed_bits}/{gap_bits} interval-vs-profile "
                   f"alpha bits ({pct:.0f}%) across USM/DUS/HCD/OF + "
-                  f"phase-split DUS-ext/OF-pyramid; solver throughput "
+                  f"phase-split DUS-ext/OF-pyramid; {n_phase_cols} per-phase "
+                  f"stage columns in table11_plans.json; solver throughput "
                   f"{S.STATS['boxes']} boxes in "
                   f"{S.STATS['secs']:.1f}s ({boxes_per_s:.0f} boxes/s)")
 

@@ -2,17 +2,20 @@
 
     PYTHONPATH=src python examples/analyze_pipeline.py
 
-Shows the pluggable-analysis framework (paper SS IV-C): the same pipeline is
-analyzed with interval arithmetic, affine arithmetic, and per-pixel abstract
-execution, then profiled and synthesized — the workflow a user follows for
-their own image-processing pipeline.
+Shows the composable analysis-pass architecture (paper SS IV-C / V): the
+same pipeline is analyzed by a declared pass DAG — interval, affine, their
+meet, and the whole-DAG SMT pass — into one `BitwidthPlan` with
+provenance, then profiled, refined, and executed from the plan.  This is
+the workflow a user follows for their own image-processing pipeline; the
+old per-call entry points (`analyze`, `static_alphas`) remain as shims
+over one-pass plans.
 """
 import numpy as np
 
-from repro.core.graph import Pow
+from repro.analysis import ProfilePass, SmtPass, meet, refine, run_plan
 from repro.core.range_analysis import analyze
 from repro.dsl.builder import PipelineBuilder, absv, ite
-from repro.dsl.exec import run_abstract, run_float
+from repro.dsl.exec import run_abstract, run_fixed, run_float
 from repro.pipelines import workflows as W
 from repro.pipelines.data import natural_image
 from repro.pipelines.metrics import psnr
@@ -40,57 +43,69 @@ def main():
     pipe = build_edge_enhance()
     print(f"pipeline: {pipe.topo_order()}")
 
-    print("\n== pluggable domains (paper SS IV-C) ==")
-    results = {}
-    for domain in ("interval", "affine", "smt"):
-        # "smt" dispatches to the whole-DAG solver analysis (repro.smt):
-        # same one-string integration, solver-tightened bounds
-        results[domain] = analyze(pipe, domain=domain)
-        alphas = {k: v.alpha for k, v in results[domain].items()}
-        print(f"   {domain:9s}: {alphas}")
-    per_pix = run_abstract(pipe, (12, 12), "interval")
-    print(f"   per-pixel : out range {per_pix['out']['range']}")
+    print("\n== one pass DAG, one plan (paper SS V architecture) ==")
+    imgs = [natural_image((48, 48), seed=i) for i in range(4)]
+    prof = ProfilePass(imgs)
+    plan = run_plan(pipe, ["interval", "affine", meet("interval", "affine"),
+                           SmtPass(), prof,
+                           refine("interval", prof)])
+    for col in plan.columns:
+        print(f"   {col:24s}: {plan.alphas(col)}")
+    plan.check_nesting(["profile", "smt", "meet(interval,affine)"])
+    print("   nesting profile ⊆ smt ⊆ meet(interval,affine): OK")
+    print(f"   provenance[smt] = {plan.provenance['smt'].spec[:60]}...")
 
     print("\n== whole-DAG SMT analysis vs interval (paper SS V-B) ==")
-    ia = results["interval"]
-    sm = results["smt"]
+    ia = plan.stage_ranges("interval")
+    sm = plan.stage_ranges("smt")
     for k in pipe.topo_order():
         note = "  <- tightened" if (sm[k].range.lo, sm[k].range.hi) != \
             (ia[k].range.lo, ia[k].range.hi) else ""
         print(f"   {k:6s} interval {ia[k].range!s:>18s}   "
               f"smt {sm[k].range!s:>22s}{note}")
+    per_pix = run_abstract(pipe, (12, 12), "interval")
+    print(f"   per-pixel : out range {per_pix['out']['range']}")
 
-    print("\n== phase-split encoding across sampling boundaries ==")
+    print("\n== per-phase alpha columns across sampling boundaries ==")
     # detail stages of a down/up pyramid difference signals across stride-2
-    # producers: the alignment-blind encoding must cut them to independent
-    # [0,255] signals; phase-split recovers the exactly-aligned expansion
+    # producers; the plan keeps one sub-column per output-phase residue, so
+    # the aligned phase's smaller alpha survives the union bound
     from repro.pipelines import dus
-    from repro.smt import SMTConfig, analyze_smt
+    from repro.smt import SMTConfig
     pyr = dus.build_extended()
-    blind = analyze_smt(pyr, config=SMTConfig(phase_split=False))
-    phase = analyze_smt(pyr, config=SMTConfig())
-    for k in ("band", "res"):
-        print(f"   {k:5s} blind {blind[k].range!s:>18s} (alpha "
-              f"{blind[k].alpha})   phase-split {phase[k].range!s:>18s} "
-              f"(alpha {phase[k].alpha})")
+    pplan = run_plan(pyr, ["interval",
+                           SmtPass(config=SMTConfig(), phases=True)],
+                     default_column="smt")
+    sm = pplan.stage_ranges("smt")
+    for k in ("band", "res", "resS"):
+        phases = pplan.phases.get("smt", {}).get(k)
+        ph = ("  phases: " + ", ".join(
+            f"{r}={sr.range!s} (a{sr.alpha})"
+            for r, sr in sorted(phases[1].items()))) if phases else ""
+        print(f"   {k:5s} union {sm[k].range!s:>18s} (alpha {sm[k].alpha})"
+              f"{ph}")
 
-    print("\n== profile + synthesize ==")
-    from repro.core.profile import profile_pipeline
-    imgs = [natural_image((48, 48), seed=i) for i in range(4)]
-    prof = profile_pipeline(pipe, imgs,
-                            lambda im, par: run_float(pipe, im, par))
-    print(f"   alpha^max: {prof.alpha_max}")
+    print("\n== execute the plan (per-phase datapaths where present) ==")
+    img = natural_image((48, 48), seed=99)
+    ref = run_float(pyr, img)
+    fix = run_fixed(pyr, img, pplan)       # plan in, per-phase types applied
+    union_bits = sum(t.width for t in pplan.types().values())
+    phase_bits = union_bits
+    for stage, (lat, tmap) in pplan.phase_types().items():
+        u = pplan.types()[stage].width
+        phase_bits += sum(t.width for t in tmap.values()) / len(tmap) - u
+    print(f"   PSNR(resS fixed vs float): {psnr(ref['resS'], fix['resS']):.1f}"
+          f" dB; mean datapath bits {phase_bits:.1f} vs union {union_bits}")
 
+    print("\n== profile + synthesize (legacy shims still work) ==")
     alphas, signed = W.static_alphas(pipe)
     types = W.types_from_alpha(
-        pipe, prof.alpha_max, signed,
+        pipe, plan.alphas("profile"), signed,
         {n: 4 for n in pipe.stages})
     rep = W.design_report(pipe, types)
+    print(f"   alpha^max: {plan.alphas('profile')}")
     print(f"   modeled power x{rep['improvement']['power']:.1f}, "
           f"LUT x{rep['improvement']['area_lut']:.1f} vs float")
-
-    from repro.dsl.exec import run_fixed
-    img = natural_image((48, 48), seed=99)
     ref = run_float(pipe, img)
     fix = run_fixed(pipe, img, types)
     print(f"   PSNR(fixed vs float): "

@@ -1,0 +1,36 @@
+"""`repro.analysis` — the composable analysis-pass architecture (paper §V).
+
+One pass pipeline, one artifact: analyses (interval / affine / intersect /
+smt / smt-phase-split / profile) are `AnalysisPass`es composed with
+`meet` / `refine` / `widen_to` combinators; `run_plan` executes the
+declared pass DAG once per pipeline with content-hash memoization and
+emits a single `BitwidthPlan` — per-stage range columns with provenance,
+optional per-phase sub-columns (one datapath per sampling-lattice
+residue), beta assignments, and stable JSON serialization.
+
+    from repro.analysis import run_plan, meet
+    plan = run_plan(pipe, ["interval", "affine", meet("interval", "affine"),
+                           "smt"])
+    plan.check_nesting(["smt", "meet(interval,affine)"])
+    types = plan.types("smt")                  # -> dsl.exec.run_fixed
+
+Legacy entry points (`core.range_analysis.analyze`,
+`workflows.static_alphas` / `smt_alphas` / `alpha_columns`) are thin shims
+over one-pass plans — see docs/analysis_api.md for the migration table.
+"""
+from repro.analysis.combinators import (MeetPass, RefinePass, WidenPass,
+                                        meet, refine, widen_to)
+from repro.analysis.driver import (MEMO_STATS, clear_memo, one_pass_ranges,
+                                   pipeline_content_hash, run_plan)
+from repro.analysis.passes import (AnalysisPass, DomainPass, PassResult,
+                                   ProfilePass, SmtPass, make_pass,
+                                   register_pass)
+from repro.analysis.plan import (BitwidthPlan, PlanNestingError, Provenance)
+
+__all__ = [
+    "AnalysisPass", "BitwidthPlan", "DomainPass", "MeetPass", "MEMO_STATS",
+    "PassResult", "PlanNestingError", "ProfilePass", "Provenance",
+    "RefinePass", "SmtPass", "WidenPass", "clear_memo", "make_pass", "meet",
+    "one_pass_ranges", "pipeline_content_hash", "refine", "register_pass",
+    "run_plan", "widen_to",
+]

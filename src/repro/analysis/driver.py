@@ -1,0 +1,124 @@
+"""`run_plan` — execute a declared pass DAG once per pipeline.
+
+The driver turns a list of passes (names or instances, combinators
+included) into one `BitwidthPlan`.  Every pass execution is memoized on
+
+    (pipeline content hash, input-range key, pass content key)
+
+so re-running a plan, sharing a sub-pass between combinators, or the SMT
+pass re-seeding itself through `analyze(pipe, "interval")` all hit the
+cache instead of re-analyzing.  The memo is process-global (plans are also
+serializable for cross-process caching — see `BitwidthPlan.to_json`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.graph import Pipeline
+from repro.core.interval import Interval
+
+from repro.analysis.plan import BitwidthPlan, Provenance
+from repro.analysis.passes import AnalysisPass, PassResult, make_pass
+
+_MEMO: Dict[tuple, PassResult] = {}
+MEMO_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_memo() -> None:
+    _MEMO.clear()
+    MEMO_STATS.update(hits=0, misses=0)
+
+
+def pipeline_content_hash(pipeline: Pipeline) -> str:
+    """Stable content hash over stages, params, and outputs.
+
+    Expression trees are frozen dataclasses with deterministic reprs, so
+    the hash changes iff the pipeline's analyzed content changes (a mutated
+    `Pipeline` object re-hashes — the memo never serves stale results).
+    """
+    h = hashlib.sha256()
+    for name in sorted(pipeline.stages):
+        st = pipeline.stages[name]
+        h.update(repr((st.name, st.inputs, st.stride, st.upsample,
+                       st.is_input, st.input_range, st.expr)).encode())
+    h.update(repr(sorted(pipeline.params.items(),
+                         key=lambda kv: kv[0])).encode())
+    h.update(repr(list(pipeline.outputs)).encode())
+    return h.hexdigest()[:16]
+
+
+def _input_ranges_key(input_ranges: Optional[Dict[str, Interval]]) -> str:
+    if not input_ranges:
+        return ""
+    return ";".join(f"{n}:[{iv.lo!r},{iv.hi!r}]"
+                    for n, iv in sorted(input_ranges.items()))
+
+
+@dataclasses.dataclass
+class _Context:
+    pipeline: Pipeline
+    input_ranges: Optional[Dict[str, Interval]]
+    pipe_hash: str
+
+    def run(self, p: AnalysisPass) -> PassResult:
+        key = (self.pipe_hash, _input_ranges_key(self.input_ranges), p.key())
+        hit = _MEMO.get(key)
+        if hit is not None:
+            MEMO_STATS["hits"] += 1
+            return hit
+        MEMO_STATS["misses"] += 1
+        res = p.run(self)
+        _MEMO[key] = res
+        return res
+
+    def with_input_ranges(self, ir: Dict[str, Interval]) -> "_Context":
+        return dataclasses.replace(self, input_ranges=ir)
+
+
+def run_plan(pipeline: Pipeline, passes: Sequence,
+             input_ranges: Optional[Dict[str, Interval]] = None,
+             betas: Optional[Dict[str, int]] = None,
+             default_column: Optional[str] = None) -> BitwidthPlan:
+    """Execute the declared pass DAG and collect columns into one plan.
+
+    `passes` entries are registry names (``"interval"``, ``"smt"``, ...) or
+    `AnalysisPass` instances (combinators included).  Columns land in the
+    plan under each pass's `column` name, with provenance carrying the
+    pass's memoization key and notes.
+    """
+    resolved: List[AnalysisPass] = [make_pass(p) for p in passes]
+    ctx = _Context(pipeline=pipeline, input_ranges=input_ranges,
+                   pipe_hash=pipeline_content_hash(pipeline))
+    plan = BitwidthPlan(pipeline=pipeline.name, content_hash=ctx.pipe_hash,
+                        betas=dict(betas or {}))
+    for p in resolved:
+        res = ctx.run(p)
+        plan.add_column(p.column, res.stage_ranges(),
+                        Provenance(pass_name=p.name, spec=p.key(),
+                                   notes=list(res.notes)),
+                        phases=res.phase_stage_ranges())
+    if default_column:
+        plan.default_column = default_column
+    return plan
+
+
+def one_pass_ranges(pipeline: Pipeline, domain, input_ranges=None):
+    """Shim backend for `core.range_analysis.analyze`: a one-pass plan.
+
+    String domains map onto registry passes (so results are memoized and
+    plan-consistent); `Domain` instances fall through to the direct walk —
+    they have no stable content key to memoize on.
+    """
+    from repro.core.range_analysis import analyze_direct
+    if not isinstance(domain, str):
+        return analyze_direct(pipeline, domain, input_ranges=input_ranges)
+    try:
+        p = make_pass(domain)
+    except KeyError:
+        # unknown to the pass registry: let the domain registry resolve it
+        # (custom user domains registered via absval.register_domain)
+        return analyze_direct(pipeline, domain, input_ranges=input_ranges)
+    plan = run_plan(pipeline, [p], input_ranges=input_ranges)
+    return plan.stage_ranges(p.column)

@@ -1,0 +1,247 @@
+"""`BitwidthPlan` — the first-class artifact every analysis pass emits into.
+
+The paper's second contribution is a software architecture in which any
+interval/affine-style range analysis plugs into the DSL compiler (§V).  Up
+to PR 3 each analysis had its own ad-hoc result shape (a `StageRange` dict
+here, an `(alphas, signed)` pair there, a `ProfileResult` elsewhere) and
+nothing downstream could consume them interchangeably.  A `BitwidthPlan`
+unifies them:
+
+  * **columns** — one `StageRange` column per analysis pass (``interval``,
+    ``smt``, ``profile``, ``meet(interval,affine)``, ...);
+  * **provenance** — which pass produced each column, with its spec string
+    (the memoization key) and free-form notes (e.g. alpha-clamp events);
+  * **phase columns** — optional per-stage sub-columns keyed by the
+    output-phase residue of the sampling lattice (the PR-3 phase-split
+    wins, now representable as one datapath per residue);
+  * **betas** — fractional-bit assignments from the beta search;
+  * stable JSON (de)serialization, so plans are cacheable artifacts,
+    diffable in review, and CI-gateable (`benchmarks/alpha_delta.py`).
+
+Consumers (`workflows.types_from_alpha`, `dsl.exec.run_fixed`,
+`benchmarks/paper_tables.py`) read the plan instead of re-deriving ranges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.fixedpoint import FixedPointType
+from repro.core.interval import Interval
+from repro.core.range_analysis import StageRange
+
+Residue = Tuple[int, int]
+# per-column phase data: stage -> (lattice (My, Mx), residue -> StageRange)
+PhaseColumn = Dict[str, Tuple[Tuple[int, int], Dict[Residue, StageRange]]]
+
+
+class PlanNestingError(AssertionError):
+    """A plan-level soundness-nesting check failed (see `check_nesting`)."""
+
+
+@dataclasses.dataclass
+class Provenance:
+    """Where a plan column came from."""
+    pass_name: str            # registry name of the producing pass
+    spec: str                 # the pass's content key (parameters included)
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+
+def _sr_to_json(sr: StageRange) -> Dict:
+    return {"lo": sr.range.lo, "hi": sr.range.hi,
+            "alpha": sr.alpha, "signed": sr.signed}
+
+
+def _sr_from_json(d: Dict) -> StageRange:
+    return StageRange(range=Interval(float(d["lo"]), float(d["hi"])),
+                      alpha=int(d["alpha"]), signed=bool(d["signed"]))
+
+
+@dataclasses.dataclass
+class BitwidthPlan:
+    """Per-pipeline bit-width synthesis artifact (columns + provenance)."""
+
+    pipeline: str
+    content_hash: str = ""
+    columns: Dict[str, Dict[str, StageRange]] = \
+        dataclasses.field(default_factory=dict)
+    provenance: Dict[str, Provenance] = dataclasses.field(default_factory=dict)
+    phases: Dict[str, PhaseColumn] = dataclasses.field(default_factory=dict)
+    betas: Dict[str, int] = dataclasses.field(default_factory=dict)
+    default_column: str = ""
+
+    # -- construction -------------------------------------------------------
+    def add_column(self, name: str, ranges: Dict[str, StageRange],
+                   provenance: Provenance,
+                   phases: Optional[PhaseColumn] = None) -> None:
+        if name in self.columns:
+            raise ValueError(f"duplicate plan column {name!r}")
+        self.columns[name] = dict(ranges)
+        self.provenance[name] = provenance
+        if phases:
+            self.phases[name] = phases
+        if not self.default_column:
+            self.default_column = name
+
+    # -- queries ------------------------------------------------------------
+    def _col(self, column: Optional[str]) -> str:
+        name = column or self.default_column
+        if name not in self.columns:
+            raise KeyError(f"plan has no column {name!r}; "
+                           f"columns: {sorted(self.columns)}")
+        return name
+
+    def stage_ranges(self, column: Optional[str] = None) -> Dict[str, StageRange]:
+        return dict(self.columns[self._col(column)])
+
+    def alphas(self, column: Optional[str] = None) -> Dict[str, int]:
+        return {n: r.alpha for n, r in self.columns[self._col(column)].items()}
+
+    def signed(self, column: Optional[str] = None) -> Dict[str, bool]:
+        return {n: r.signed for n, r in self.columns[self._col(column)].items()}
+
+    def stages(self) -> List[str]:
+        return list(self.columns[self._col(None)])
+
+    # -- consumption --------------------------------------------------------
+    def types(self, column: Optional[str] = None,
+              betas: Optional[Dict[str, int]] = None,
+              ) -> Dict[str, FixedPointType]:
+        """Fixed-point type map for one column (the executor's input).
+
+        Zero/negative alphas are clamped to 1 bit (a `FixedPointType` needs
+        at least one field bit); every clamp is recorded in the column's
+        provenance notes and surfaced as a `RuntimeWarning` so zero-range
+        stages stay visible instead of silently widening.
+        """
+        col = self._col(column)
+        bmap = self.betas if betas is None else betas
+        out: Dict[str, FixedPointType] = {}
+        clamped: List[str] = []
+        for n, r in self.columns[col].items():
+            if r.alpha < 1:
+                clamped.append(n)
+            out[n] = FixedPointType(alpha=max(r.alpha, 1),
+                                    beta=bmap.get(n, 0), signed=r.signed)
+        if clamped:
+            note = (f"alpha clamped to 1 on zero-range stage(s): "
+                    f"{', '.join(clamped)}")
+            if note not in self.provenance[col].notes:
+                self.provenance[col].notes.append(note)
+            warnings.warn(f"plan column {col!r}: {note}", RuntimeWarning,
+                          stacklevel=2)
+        return out
+
+    def phase_types(self, column: Optional[str] = None,
+                    betas: Optional[Dict[str, int]] = None,
+                    ) -> Dict[str, Tuple[Tuple[int, int],
+                                         Dict[Residue, FixedPointType]]]:
+        """Per-phase type maps: stage -> (lattice, residue -> type).
+
+        Only stages with phase sub-columns appear; the executor applies the
+        union-column type everywhere else (`dsl.exec.run_fixed`).
+        """
+        col = self._col(column)
+        bmap = self.betas if betas is None else betas
+        out = {}
+        clamped: List[str] = []
+        for stage, (lat, rmap) in self.phases.get(col, {}).items():
+            if any(sr.alpha < 1 for sr in rmap.values()):
+                clamped.append(stage)
+            out[stage] = (lat, {
+                res: FixedPointType(alpha=max(sr.alpha, 1),
+                                    beta=bmap.get(stage, 0), signed=sr.signed)
+                for res, sr in rmap.items()})
+        if clamped:
+            note = (f"alpha clamped to 1 on zero-range phase(s) of: "
+                    f"{', '.join(clamped)}")
+            if note not in self.provenance[col].notes:
+                self.provenance[col].notes.append(note)
+            warnings.warn(f"plan column {col!r}: {note}", RuntimeWarning,
+                          stacklevel=2)
+        return out
+
+    # -- plan-level checks ---------------------------------------------------
+    def check_nesting(self, columns: List[str], strict_alpha: bool = True,
+                      ) -> bool:
+        """Soundness-nesting invariant across columns, tightest first.
+
+        ``check_nesting(["profile", "smt", "meet(interval,affine)"])``
+        asserts per stage that each column's range is enclosed by the next
+        one's (and, with `strict_alpha`, that alphas are non-decreasing) —
+        the plan-level form of the paper's profile ⊆ solver ⊆ static
+        ordering.  Raises `PlanNestingError` listing every violation.
+        """
+        bad: List[str] = []
+        for tight, loose in zip(columns, columns[1:]):
+            a, b = self.columns[self._col(tight)], self.columns[self._col(loose)]
+            for n in a:
+                if n not in b:
+                    continue
+                if not b[n].range.encloses(a[n].range):
+                    bad.append(f"{n}: {tight} {a[n].range} ⊄ "
+                               f"{loose} {b[n].range}")
+                elif strict_alpha and a[n].alpha > b[n].alpha:
+                    bad.append(f"{n}: alpha({tight})={a[n].alpha} > "
+                               f"alpha({loose})={b[n].alpha}")
+        if bad:
+            raise PlanNestingError(
+                f"plan {self.pipeline!r} nesting {' ⊆ '.join(columns)} "
+                f"violated:\n  " + "\n  ".join(bad))
+        return True
+
+    # -- serialization -------------------------------------------------------
+    def to_json_dict(self) -> Dict:
+        return {
+            "version": 1,
+            "pipeline": self.pipeline,
+            "content_hash": self.content_hash,
+            "default_column": self.default_column,
+            "columns": {c: {n: _sr_to_json(r) for n, r in col.items()}
+                        for c, col in self.columns.items()},
+            "provenance": {c: {"pass": p.pass_name, "spec": p.spec,
+                               "notes": list(p.notes)}
+                           for c, p in self.provenance.items()},
+            "phases": {c: {stage: {
+                "lattice": list(lat),
+                "ranges": {f"{ry},{rx}": _sr_to_json(sr)
+                           for (ry, rx), sr in rmap.items()}}
+                for stage, (lat, rmap) in pc.items()}
+                for c, pc in self.phases.items()},
+            "betas": dict(self.betas),
+        }
+
+    def to_json(self) -> str:
+        """Stable text form: sorted keys, fixed indent — diffable in CI."""
+        return json.dumps(self.to_json_dict(), sort_keys=True, indent=1)
+
+    @classmethod
+    def from_json_dict(cls, d: Dict) -> "BitwidthPlan":
+        plan = cls(pipeline=d["pipeline"],
+                   content_hash=d.get("content_hash", ""),
+                   default_column=d.get("default_column", ""))
+        for c, col in d.get("columns", {}).items():
+            plan.columns[c] = {n: _sr_from_json(v) for n, v in col.items()}
+        for c, p in d.get("provenance", {}).items():
+            plan.provenance[c] = Provenance(pass_name=p["pass"],
+                                            spec=p["spec"],
+                                            notes=list(p.get("notes", [])))
+        for c, pc in d.get("phases", {}).items():
+            plan.phases[c] = {}
+            for stage, entry in pc.items():
+                lat = tuple(entry["lattice"])
+                rmap = {}
+                for key, v in entry["ranges"].items():
+                    ry, rx = key.split(",")
+                    rmap[(int(ry), int(rx))] = _sr_from_json(v)
+                plan.phases[c][stage] = (lat, rmap)
+        plan.betas = {n: int(b) for n, b in d.get("betas", {}).items()}
+        if not plan.default_column and plan.columns:
+            plan.default_column = next(iter(plan.columns))
+        return plan
+
+    @classmethod
+    def from_json(cls, text: str) -> "BitwidthPlan":
+        return cls.from_json_dict(json.loads(text))

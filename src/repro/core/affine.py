@@ -207,9 +207,14 @@ class AffineForm:
         iv = self.to_interval().sqrt()
         return AffineForm.from_interval(iv.lo, iv.hi)
 
-    def select(self, then_v: "AffineForm", else_v: "AffineForm") -> "AffineForm":
-        iv = then_v.to_interval().join(else_v.to_interval())
+    def join(self, other: "AffineForm") -> "AffineForm":
+        """Lattice join (interval hull) — correlations across an undecided
+        Select branch pair are not representable, so noise symbols reset."""
+        iv = self.to_interval().join(AffineForm.of(other).to_interval())
         return AffineForm.from_interval(iv.lo, iv.hi)
+
+    def select(self, then_v: "AffineForm", else_v: "AffineForm") -> "AffineForm":
+        return then_v.join(else_v)
 
     def __repr__(self) -> str:
         return f"AA({self.x0:g} ± {self.radius:g}, {len(self.terms)} syms)"

@@ -103,9 +103,12 @@ class IAValue:
         o = IAValue.of(o)
         return self._wrap(self.iv.max_(o.iv), self.af.max_(o.af))
 
+    def join(self, other) -> "IAValue":
+        o = IAValue.of(other)
+        return self._wrap(self.iv.join(o.iv), self.af.join(o.af))
+
     def select(self, t, e):
-        t, e = IAValue.of(t), IAValue.of(e)
-        return self._wrap(t.iv.join(e.iv), t.af.select(t.af, e.af))
+        return IAValue.of(t).join(e)
 
     def __repr__(self):
         return f"IA({self.range()!r})"

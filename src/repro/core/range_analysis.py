@@ -34,6 +34,36 @@ class StageRange:
                           signed=iv.lo < 0)
 
 
+def static_cmp(op: str, l: Interval, r: Interval) -> Optional[bool]:
+    """Decide a comparison statically when the operand ranges separate.
+
+    Returns True when `l op r` holds for *every* pair of values, False when
+    it holds for none, None when both outcomes are possible (the caller
+    must join both Select branches).
+    """
+    if op == "<":
+        if l.hi < r.lo:
+            return True
+        if l.lo >= r.hi:
+            return False
+    elif op == "<=":
+        if l.hi <= r.lo:
+            return True
+        if l.lo > r.hi:
+            return False
+    elif op == ">":
+        if l.lo > r.hi:
+            return True
+        if l.hi <= r.lo:
+            return False
+    elif op == ">=":
+        if l.lo >= r.hi:
+            return True
+        if l.hi < r.lo:
+            return False
+    return None
+
+
 def eval_expr_abstract(e: Expr, domain: Domain,
                        stage_ranges: Dict[str, Interval],
                        params: Dict[str, Interval],
@@ -85,19 +115,31 @@ def eval_expr_abstract(e: Expr, domain: Domain,
             return args[0].max_(args[1])
         raise ValueError(f"unknown call {e.fn}")
     if isinstance(e, Select):
-        # value range of a select is the join of both branches
-        t = rec(e.then)
-        o = rec(e.other)
-        return t.select(t, o) if hasattr(t, "select") else t.join(o)
+        # evaluate the Cmp guard: when the operand ranges separate, only the
+        # taken branch can execute; otherwise the value range is the join of
+        # both branches.  (Pre-PR-4 this called `t.select(t, o)`, passing the
+        # then-value as its own condition — harmless only because every
+        # domain's `select` ignored its receiver.)
+        if isinstance(e.cond, Cmp):
+            taken = static_cmp(e.cond.op,
+                               domain.to_interval(rec(e.cond.left)),
+                               domain.to_interval(rec(e.cond.right)))
+            if taken is True:
+                return rec(e.then)
+            if taken is False:
+                return rec(e.other)
+        t, o = rec(e.then), rec(e.other)
+        # legacy third-party domains may implement select() but not join()
+        return t.join(o) if hasattr(t, "join") else t.select(t, o)
     if isinstance(e, Cmp):
         raise ValueError("bare comparison outside Select")
     raise TypeError(f"unknown expr node {type(e)}")
 
 
-def analyze(pipeline: Pipeline, domain: str | Domain = "interval",
-            input_ranges: Optional[Dict[str, Interval]] = None,
-            ) -> Dict[str, StageRange]:
-    """alpha-analysis over the whole DAG (topological order).
+def analyze_direct(pipeline: Pipeline, domain: str | Domain = "interval",
+                   input_ranges: Optional[Dict[str, Interval]] = None,
+                   ) -> Dict[str, StageRange]:
+    """alpha-analysis over the whole DAG (topological order) — direct walk.
 
     `input_ranges` overrides the declared ranges of input stages (used by the
     profile-refined re-analysis).
@@ -106,6 +148,10 @@ def analyze(pipeline: Pipeline, domain: str | Domain = "interval",
     a per-stage expression walk — the whole pipeline is analyzed at once via
     the domain's `analyze_pipeline` hook, which returns the same per-stage
     `StageRange` mapping.
+
+    This is the unmemoized backend the `repro.analysis` pass architecture
+    wraps; application code should call `analyze` (the one-pass-plan shim)
+    or build a `BitwidthPlan` via `repro.analysis.run_plan`.
     """
     dom = get_domain(domain) if isinstance(domain, str) else domain
     if getattr(dom, "whole_dag", False):
@@ -127,6 +173,21 @@ def analyze(pipeline: Pipeline, domain: str | Domain = "interval",
         ranges[name] = iv
         out[name] = StageRange.from_interval(iv)
     return out
+
+
+def analyze(pipeline: Pipeline, domain: str | Domain = "interval",
+            input_ranges: Optional[Dict[str, Interval]] = None,
+            ) -> Dict[str, StageRange]:
+    """alpha-analysis entry point — a shim over a one-pass `BitwidthPlan`.
+
+    Kept for compatibility: new code should declare a pass pipeline with
+    `repro.analysis.run_plan` and consume the resulting plan (see
+    docs/analysis_api.md).  This shim routes string domains through the
+    pass driver (results are content-hash memoized and byte-identical to
+    the direct walk) and returns the legacy per-stage `StageRange` dict.
+    """
+    from repro.analysis import one_pass_ranges
+    return one_pass_ranges(pipeline, domain, input_ranges=input_ranges)
 
 
 def alpha_table(pipeline: Pipeline, **kw) -> Dict[str, int]:

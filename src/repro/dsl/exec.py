@@ -30,8 +30,14 @@ from repro.core.fixedpoint import FixedPointType, fix_round
 from repro.core.graph import (BinOp, Call, Cmp, Const, Expr, ParamRef,
                               Pipeline, Pow, Ref, Select, Stage)
 from repro.core.interval import Interval
+from repro.core.range_analysis import static_cmp
 
 Array = Any
+
+# per-phase fixed-point selection: stage -> ((My, Mx), residue -> type);
+# the shape `BitwidthPlan.phase_types` produces (one datapath per
+# sampling-lattice residue — the §IV homogeneity clusters in hardware)
+PhaseTypeMap = Dict[str, Any]
 
 
 # ---------------------------------------------------------------------------
@@ -101,9 +107,18 @@ def _stage_out_shape(stage: Stage, in_shape):
     return H, W
 
 
+def _snap(out, t: FixedPointType, xp):
+    """Round onto the (alpha, beta) grid with saturation (backend-matched)."""
+    if xp is jnp:
+        return fix_round(out, t)
+    step = 2.0 ** t.beta
+    return np.clip(np.rint(out * step), t.int_min, t.int_max) / step
+
+
 def _run_concrete(pipeline: Pipeline, image, params: Dict[str, float],
                   types: Optional[Dict[str, Optional[FixedPointType]]],
-                  xp=jnp, where=None) -> Dict[str, Array]:
+                  xp=jnp, where=None,
+                  phase_types: Optional[PhaseTypeMap] = None) -> Dict[str, Array]:
     if where is None:
         where = jnp.where if xp is jnp else np.where
     env: Dict[str, Array] = {}
@@ -133,12 +148,26 @@ def _run_concrete(pipeline: Pipeline, image, params: Dict[str, float],
                 out = out[::sy, ::sx]
         if types is not None:
             t = types.get(name)
+            raw = out
             if t is not None:
-                if xp is jnp:
-                    out = fix_round(out, t)
-                else:
-                    step = 2.0 ** t.beta
-                    out = np.clip(np.rint(out * step), t.int_min, t.int_max) / step
+                out = _snap(raw, t, xp)
+            if phase_types is not None and name in phase_types:
+                # per-phase datapaths: each output-phase residue of the
+                # sampling lattice gets its own (alpha, beta) type, exactly
+                # like the per-residue line buffers a phase-split design
+                # would synthesize.  Residues missing from the map keep the
+                # union-column type applied above.  Each residue's strided
+                # subarray is snapped on its own — no full-array pass per
+                # phase.
+                (my, mx), tmap = phase_types[name]
+                if xp is not jnp:
+                    out = np.array(out, copy=True)
+                for (ry, rx), t_ph in sorted(tmap.items()):
+                    q = _snap(raw[ry::my, rx::mx], t_ph, xp)
+                    if xp is jnp:
+                        out = out.at[ry::my, rx::mx].set(q)
+                    else:
+                        out[ry::my, rx::mx] = q
         env[name] = out
         shapes[name] = tuple(out.shape)
     return env
@@ -151,12 +180,26 @@ def run_float(pipeline: Pipeline, image, params: Dict[str, float] | None = None,
     return _run_concrete(pipeline, image, params or {}, None, xp=xp)
 
 
-def run_fixed(pipeline: Pipeline, image, types: Dict[str, Optional[FixedPointType]],
+def run_fixed(pipeline: Pipeline, image, types,
               params: Dict[str, float] | None = None,
-              backend: str = "numpy") -> Dict[str, Array]:
-    """Bit-accurate fixed-point design (saturating, round-to-nearest-even)."""
+              backend: str = "numpy",
+              column: Optional[str] = None) -> Dict[str, Array]:
+    """Bit-accurate fixed-point design (saturating, round-to-nearest-even).
+
+    `types` is either a plain per-stage type map or a
+    `repro.analysis.BitwidthPlan`: a plan supplies its `column` (default:
+    the plan's default column) type map plus per-phase sub-types where the
+    plan carries phase columns — each sampling-lattice residue is then
+    quantized with its own datapath type.
+    """
     xp = np if backend == "numpy" else jnp
-    return _run_concrete(pipeline, image, params or {}, types, xp=xp)
+    phase_types = None
+    if hasattr(types, "phase_types"):          # BitwidthPlan (duck-typed to
+        plan = types                           # keep dsl import-light)
+        phase_types = plan.phase_types(column) or None
+        types = plan.types(column)
+    return _run_concrete(pipeline, image, params or {}, types, xp=xp,
+                         phase_types=phase_types)
 
 
 def make_jitted_fixed(pipeline: Pipeline,
@@ -195,8 +238,6 @@ def run_abstract(pipeline: Pipeline, image_shape, domain: str | Domain = "interv
     env: Dict[str, np.ndarray] = {}
     ranges: Dict[str, Interval] = {}
     param_cache: Dict[str, Any] = {}   # one shared signal per scalar parameter
-
-    join_sel = np.frompyfunc(lambda t, o: t.select(t, o), 2, 1)
 
     def abs_u(a): return np.frompyfunc(lambda v: v.abs(), 1, 1)(a)
     def sqrt_u(a): return np.frompyfunc(lambda v: v.sqrt(), 1, 1)(a)
@@ -250,8 +291,26 @@ def run_abstract(pipeline: Pipeline, image_shape, domain: str | Domain = "interv
                         return min_u(args[0], args[1])
                     return max_u(args[0], args[1])
                 if isinstance(n, Select):
-                    # abstract select: join both branches pixel-wise
-                    return join_sel(go(n.then), go(n.other))
+                    # abstract select: decide the guard pixel-wise where the
+                    # operand ranges separate, join both branches otherwise
+                    # (mirrors range_analysis.eval_expr_abstract, so the
+                    # combined analysis stays an enclosure of this one)
+                    op = n.cond.op
+
+                    def pick(lv, rv, tv, ov):
+                        taken = static_cmp(op, dom.to_interval(lv),
+                                           dom.to_interval(rv))
+                        if taken is True:
+                            return tv
+                        if taken is False:
+                            return ov
+                        # legacy domains: select() hook without join()
+                        return tv.join(ov) if hasattr(tv, "join") \
+                            else tv.select(tv, ov)
+
+                    return np.frompyfunc(pick, 4, 1)(
+                        go(n.cond.left), go(n.cond.right),
+                        go(n.then), go(n.other))
                 if isinstance(n, Cmp):
                     raise ValueError("bare Cmp in abstract eval")
                 raise TypeError(type(n))

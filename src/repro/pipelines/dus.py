@@ -19,6 +19,7 @@ from repro.dsl.builder import PipelineBuilder
 
 BIN3 = [1, 2, 1]
 BIN5 = [1, 4, 6, 4, 1]
+SHARP3 = [1, 6, 1]     # center-heavy tent: >1/2 of the mass on the sample
 
 
 def build() -> Pipeline:
@@ -49,6 +50,13 @@ def build_extended() -> Pipeline:
         (Laplacian detail).  Every output phase correlates with the center
         tap of the down-up chain, tightening +-255 to +-239.06 (exact
         union over the four phases).
+      * ``DyS``/``UyS``/``resS`` — a y-only down-up channel with the
+        center-heavy ``SHARP3`` kernel and its residual.  Its two output
+        phases *differ by an alpha bit*: the aligned phase keeps more than
+        half the center pixel's mass (exact +-87.7, 8 bits) while the
+        off-grid phase interpolates (+-223.1, 9 bits).  The union bound
+        erases that split — this is the stage the per-phase alpha columns
+        of `repro.analysis` exist for (one datapath per lattice residue).
     """
     p = PipelineBuilder("dus_ext")
     img = p.image("img", 0, 255)
@@ -60,6 +68,12 @@ def build_extended() -> Pipeline:
                       scale=1.0 / 256, stride=(2, 2))
     band = p.define("band", Dy - D5)
     res = p.define("res", img - Uy)
+    DyS = p.downsample("DyS", img, [[w] for w in SHARP3], scale=1.0 / 8,
+                       stride=(2, 1))
+    UyS = p.upsample("UyS", DyS, [[w] for w in SHARP3], scale=1.0 / 8,
+                     factor=(2, 1))
+    resS = p.define("resS", img - UyS)
     p.output(band)
     p.output(res)
+    p.output(resS)
     return p.build()

@@ -4,21 +4,28 @@ For each benchmark this wires together:  static alpha-analysis -> profile
 alpha refinement -> beta search against the application quality metric ->
 fixed-point design + cost comparison vs the float reference.
 
+Analyses run through the `repro.analysis` pass architecture: a
+`BenchmarkSetup.plan()` is the standard interval/smt/profile
+`BitwidthPlan` (with per-phase sub-columns on phase-split stages), and the
+historical entry points (`static_alphas`, `smt_alphas`, `alpha_columns`)
+are thin shims over one-pass plans — byte-identical alphas, now memoized.
+
 Used by tests, benchmarks/, and examples/ so the methodology lives in one
 place.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis import BitwidthPlan, ProfilePass, SmtPass, run_plan
 from repro.core import beta_search, cost_model, policy
 from repro.core.fixedpoint import FixedPointType
 from repro.core.graph import Pipeline
 from repro.core.profile import ProfileResult, profile_pipeline
-from repro.core.range_analysis import analyze
 from repro.dsl.exec import run_fixed, run_float
 from repro.pipelines import data as pdata
 from repro.pipelines import dus, hcd, metrics, optical_flow, usm
@@ -28,6 +35,18 @@ TypeMap = Dict[str, Optional[FixedPointType]]
 
 def types_from_alpha(pipeline: Pipeline, alphas: Dict[str, int],
                      signed: Dict[str, bool], betas: Dict[str, int]) -> TypeMap:
+    """Per-stage fixed-point types from (alpha, signed, beta) columns.
+
+    Alphas below 1 are clamped (a `FixedPointType` needs at least one field
+    bit); the clamp is surfaced as a `RuntimeWarning` so zero-range stages
+    stay visible instead of silently widening.  Plan-based flows record the
+    same event in provenance — see `BitwidthPlan.types`.
+    """
+    clamped = sorted(n for n in pipeline.stages if alphas[n] < 1)
+    if clamped:
+        warnings.warn(
+            f"alpha clamped to 1 on zero-range stage(s): "
+            f"{', '.join(clamped)}", RuntimeWarning, stacklevel=2)
     return {
         n: FixedPointType(alpha=max(alphas[n], 1), beta=betas.get(n, 0),
                           signed=signed[n])
@@ -38,20 +57,20 @@ def types_from_alpha(pipeline: Pipeline, alphas: Dict[str, int],
 def static_alphas(pipeline: Pipeline, domain: str = "interval"):
     """Per-stage (alpha, signed) columns of the synthesis flow.
 
+    Deprecation shim: a one-pass `BitwidthPlan` column (`repro.analysis`).
     `domain` selects the static analysis: "interval" (Algorithm 1),
     "affine", "intersect", or "smt" (whole-DAG solver-style analysis,
-    `repro.smt` — lazily imported by the registry)."""
-    res = analyze(pipeline, domain=domain)
-    return ({n: r.alpha for n, r in res.items()},
-            {n: r.signed for n, r in res.items()})
+    `repro.smt`)."""
+    plan = run_plan(pipeline, [domain])
+    return plan.alphas(), plan.signed()
 
 
 def smt_alphas(pipeline: Pipeline, config=None):
-    """SMT-column twin of `static_alphas` with explicit budget control."""
-    from repro.smt import analyze_smt
-    res = analyze_smt(pipeline, config=config)
-    return ({n: r.alpha for n, r in res.items()},
-            {n: r.signed for n, r in res.items()})
+    """SMT-column twin of `static_alphas` with explicit budget control.
+
+    Deprecation shim over a one-pass plan (`SmtPass(config)`)."""
+    plan = run_plan(pipeline, [SmtPass(config=config)])
+    return plan.alphas("smt"), plan.signed("smt")
 
 
 def alpha_columns(setup: "BenchmarkSetup", smt_config=None,
@@ -60,19 +79,31 @@ def alpha_columns(setup: "BenchmarkSetup", smt_config=None,
 
     This is the paper's §VI comparison axis: static interval bounds,
     solver-tightened static bounds, and profile-driven lower bounds —
-    sound analyses must nest as profile ⊆ smt ⊆ interval per stage."""
-    from repro.smt import analyze_smt
-    ia = analyze(setup.pipeline)
-    sm = analyze_smt(setup.pipeline, config=smt_config)
-    prof = setup.profile() if profile is None else profile
+    sound analyses must nest as profile ⊆ smt ⊆ interval per stage.
+
+    Deprecation shim: the columns are one three-pass `BitwidthPlan`
+    (see `BenchmarkSetup.plan` for the plan itself)."""
+    passes = ["interval", SmtPass(config=smt_config)]
+    if profile is None:
+        passes.append(setup.profile_pass())
+    plan = run_plan(setup.pipeline, passes)
+    ia = plan.columns["interval"]
+    sm = plan.columns["smt"]
+    if profile is None:
+        pr = plan.columns["profile"]
+        prof_alpha = {n: r.alpha for n, r in pr.items()}
+        prof_range = {n: r.range for n, r in pr.items()}
+    else:
+        prof_alpha = profile.alpha_max
+        prof_range = profile.observed_range
     return {
         n: {
             "interval": ia[n].alpha,
             "smt": sm[n].alpha,
-            "profile_max": prof.alpha_max[n],
+            "profile_max": prof_alpha[n],
             "interval_range": ia[n].range,
             "smt_range": sm[n].range,
-            "profile_range": prof.observed_range[n],
+            "profile_range": prof_range[n],
         }
         for n in setup.pipeline.topo_order()
     }
@@ -111,6 +142,24 @@ class BenchmarkSetup:
             return run_float(self.pipeline, image, params)
         return profile_pipeline(self.pipeline, self.train_images, runner,
                                 self.params)
+
+    def profile_pass(self) -> ProfilePass:
+        """The profile analysis as a memoizable plan pass (same executor
+        and sample set as `profile`, keyed on the image content hash)."""
+        return ProfilePass(self.train_images, params=self.params)
+
+    def plan(self, smt_config=None, phases: bool = True,
+             include_profile: bool = True,
+             betas: Optional[Dict[str, int]] = None) -> BitwidthPlan:
+        """The benchmark's standard `BitwidthPlan`: interval + smt (with
+        per-phase sub-columns on phase-split stages) + profile columns,
+        default column "smt" — the artifact `run_fixed`, `design_report`,
+        and `benchmarks/paper_tables.py` consume."""
+        passes = ["interval", SmtPass(config=smt_config, phases=phases)]
+        if include_profile:
+            passes.append(self.profile_pass())
+        return run_plan(self.pipeline, passes, betas=betas,
+                        default_column="smt")
 
     def beta_quality_fn(self, alphas, signed, images=None, refs=None):
         imgs = self.train_images if images is None else images
@@ -227,8 +276,12 @@ ALL_BENCHMARKS = {"hcd": make_hcd, "usm": make_usm, "dus": make_dus,
 # cost comparison — the paper's Tables III/VI/VII/X axis
 # ---------------------------------------------------------------------------
 
-def design_report(pipeline: Pipeline, types: TypeMap,
-                  image_width: int = 1920) -> Dict:
+def design_report(pipeline: Pipeline, types,
+                  image_width: int = 1920, column: Optional[str] = None) -> Dict:
+    """Fixed-vs-float cost report; `types` is a TypeMap or a `BitwidthPlan`
+    (whose `column` — default column when None — supplies the types)."""
+    if isinstance(types, BitwidthPlan):
+        types = types.types(column)
     fixed = cost_model.design_cost(pipeline, types, image_width)
     flt = cost_model.design_cost(pipeline, cost_model.float_design(pipeline),
                                  image_width)

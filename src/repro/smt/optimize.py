@@ -32,7 +32,7 @@ from repro.core.range_analysis import StageRange, analyze
 
 from repro.smt import solver as S
 from repro.smt.encoder import (CSP, closure_is_sampled, encode_stage,
-                               encode_stage_phases)
+                               encode_stage_phases, sampling_lattice)
 
 _INF = math.inf
 
@@ -328,9 +328,32 @@ def tighten_stage_phases(entries, seed: Interval, cfg: SMTConfig,
     return Interval(lo, hi)
 
 
+def _certified_phase_hull(csp: CSP, root: int, bound: Interval,
+                          cfg: SMTConfig) -> Interval:
+    """Certified (search-free) sound hull of one phase's root variable.
+
+    The phase's true range is contained in both its own contracted hull
+    (HC4 + affine relaxation on the full box) and the stage's final union
+    bound, so their meet is sound per phase.  All-linear cut-free phase
+    CSPs make the hull exact (affine sweep = exact range hull).
+    """
+    box = list(csp.init)
+    m = S._meet(box[root], bound)
+    if m is None:
+        return bound
+    box[root] = m
+    if not (S.hc4(csp, box, cfg.hc4_rounds) and S.affine_sweep(csp, box)
+            and S.hc4(csp, box, 2)):
+        return bound            # contraction emptied: keep the union bound
+    m = S._meet(box[root], bound)
+    return m if m is not None else bound
+
+
 def analyze_smt(pipeline: Pipeline,
                 input_ranges: Optional[Dict[str, Interval]] = None,
-                config: Optional[SMTConfig] = None) -> Dict[str, StageRange]:
+                config: Optional[SMTConfig] = None,
+                collect_phases: Optional[Dict] = None,
+                ) -> Dict[str, StageRange]:
     """Whole-DAG range analysis — drop-in for `range_analysis.analyze` with
     `domain="smt"`, returning the same per-stage 3-tuples.
 
@@ -339,6 +362,12 @@ def analyze_smt(pipeline: Pipeline,
     already-tightened SMT ranges bounding budget/sampling cut points.  Every
     result is the meet of the tightening with the interval seed, so
     `smt ⊆ interval` holds per stage by construction.
+
+    `collect_phases`, when a dict, is filled with per-phase certified
+    sub-ranges for every phase-split stage:  ``{stage: ((My, Mx),
+    {(ry, rx): Interval})}``.  Collection is read-only — the union bounds
+    this function returns are identical with or without it; the sub-ranges
+    feed `BitwidthPlan` phase columns (one datapath per lattice residue).
     """
     cfg = config or SMTConfig()
     seed = analyze(pipeline, "interval", input_ranges=input_ranges)
@@ -351,6 +380,7 @@ def analyze_smt(pipeline: Pipeline,
     out: Dict[str, StageRange] = {}
     for name in topo:
         iv = bounds[name]
+        phase_entries = None
         now = time.monotonic()
         if name in work and now < deadline:
             # fair-share time slicing: with the batched engine's large
@@ -397,10 +427,20 @@ def analyze_smt(pipeline: Pipeline,
             tiv = tighten_stage_phases(entries, iv, cfg, stage_deadline)
             m = S._meet(iv, tiv)
             iv = m if m is not None else iv
+            if len(entries) > 1:
+                phase_entries = entries
         if name in work:
             n_left -= 1
         bounds[name] = iv
         out[name] = StageRange.from_interval(iv)
+        if collect_phases is not None and phase_entries is not None:
+            lat = sampling_lattice(pipeline, name)
+            if lat is not None:
+                my, mx = lat
+                residues = [(ry, rx) for ry in range(my) for rx in range(mx)]
+                collect_phases[name] = (lat, {
+                    res: _certified_phase_hull(csp, root, iv, cfg)
+                    for res, (csp, root) in zip(residues, phase_entries)})
     return out
 
 

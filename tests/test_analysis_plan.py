@@ -1,0 +1,429 @@
+"""The `repro.analysis` pass architecture: plans, passes, combinators.
+
+Covers the PR-4 satellites: `BitwidthPlan` round-trip serialization, pass
+memoization hits, the soundness-nesting invariant as a plan-level check,
+the `Select` abstract-evaluation fix, the `types_from_alpha` clamp
+warning, per-phase alpha columns on the extended DUS benchmark, and the
+legacy entry points as byte-identical shims over one-pass plans.
+"""
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.analysis import (BitwidthPlan, MEMO_STATS, PlanNestingError,
+                            ProfilePass, SmtPass, clear_memo, meet,
+                            pipeline_content_hash, refine, run_plan,
+                            widen_to)
+from repro.core.interval import Interval
+from repro.core.range_analysis import (StageRange, analyze, analyze_direct,
+                                       static_cmp)
+from repro.dsl.builder import PipelineBuilder, absv, ite
+from repro.dsl.exec import run_abstract, run_fixed, run_float
+from repro.pipelines import dus, usm
+from repro.pipelines import workflows as W
+from repro.smt import SMTConfig, analyze_smt
+
+_CFG = SMTConfig(time_budget_s=5.0)
+
+
+def _profile_images(n=2, shape=(12, 12)):
+    rng = np.random.default_rng(7)
+    return [rng.integers(0, 256, size=shape).astype(np.float64)
+            for _ in range(n)]
+
+
+def _usm_plan(betas=None):
+    p = usm.build()
+    prof = ProfilePass(_profile_images(), params=usm.DEFAULT_PARAMS)
+    return run_plan(p, ["interval", "affine", meet("interval", "affine"),
+                        SmtPass(config=_CFG), prof],
+                    betas=betas, default_column="smt")
+
+
+# ---------------------------------------------------------------------------
+# BitwidthPlan round-trip serialization
+# ---------------------------------------------------------------------------
+
+def test_plan_roundtrip_serialization():
+    plan = _usm_plan(betas={"masked": 4})
+    text = plan.to_json()
+    back = BitwidthPlan.from_json(text)
+    assert back == plan
+    # stable text form: serializing the round-tripped plan is byte-identical
+    assert back.to_json() == text
+    # provenance and betas survive
+    assert back.provenance["smt"].pass_name == "smt"
+    assert back.betas == {"masked": 4}
+
+
+def test_plan_phase_columns_roundtrip():
+    p = dus.build_extended()
+    plan = run_plan(p, ["interval", SmtPass(config=_CFG, phases=True)],
+                    default_column="smt")
+    assert plan.phases["smt"], "phase-split stages expected on dus_ext"
+    back = BitwidthPlan.from_json(plan.to_json())
+    assert back.phases == plan.phases
+    assert back.to_json() == plan.to_json()
+
+
+# ---------------------------------------------------------------------------
+# memoization
+# ---------------------------------------------------------------------------
+
+def test_run_plan_memoizes_per_pass():
+    clear_memo()
+    p = usm.build()
+    run_plan(p, ["interval", "affine"])
+    misses = MEMO_STATS["misses"]
+    assert MEMO_STATS["hits"] == 0 and misses == 2
+    # identical plan on an identical (re-built) pipeline: all hits
+    run_plan(usm.build(), ["interval", "affine"])
+    assert MEMO_STATS["hits"] == 2 and MEMO_STATS["misses"] == misses
+
+
+def test_combinator_shares_subpass_results():
+    clear_memo()
+    p = usm.build()
+    # meet() runs interval+affine through ctx.run; requesting the plain
+    # columns in the same plan must not re-execute them
+    run_plan(p, ["interval", "affine", meet("interval", "affine")])
+    assert MEMO_STATS["misses"] == 3  # interval, affine, meet itself
+    assert MEMO_STATS["hits"] == 2    # meet's two sub-pass lookups
+
+
+def test_content_hash_tracks_mutation():
+    p = usm.build()
+    h0 = pipeline_content_hash(p)
+    assert pipeline_content_hash(usm.build()) == h0
+    p.params["weight"] = Interval(0.0, 2.0)
+    assert pipeline_content_hash(p) != h0
+
+
+# ---------------------------------------------------------------------------
+# soundness nesting as a plan-level check
+# ---------------------------------------------------------------------------
+
+def test_plan_nesting_invariant_profile_smt_meet():
+    plan = _usm_plan()
+    assert plan.check_nesting(["profile", "smt", "meet(interval,affine)"])
+    assert plan.check_nesting(["smt", "interval"])
+
+
+def test_plan_nesting_violation_raises():
+    plan = _usm_plan()
+    # tamper: shrink the interval column below the smt column
+    plan.columns["interval"]["sharpen"] = StageRange(
+        range=Interval(0.0, 1.0), alpha=1, signed=False)
+    with pytest.raises(PlanNestingError, match="sharpen"):
+        plan.check_nesting(["smt", "interval"])
+
+
+# ---------------------------------------------------------------------------
+# satellite: Select abstract evaluation (guard decided statically)
+# ---------------------------------------------------------------------------
+
+def _select_pipe(thresh: float):
+    p = PipelineBuilder("selp")
+    img = p.image("img", 0, 255)
+    out = p.define("out", ite(img < thresh, img * 2.0, img - 300.0))
+    p.output(out)
+    return p.build()
+
+
+@pytest.mark.parametrize("domain", ["interval", "affine", "intersect"])
+def test_select_guard_decided_statically(domain):
+    # guard img < 300 is always true on [0, 255]: only the then-branch range
+    res = analyze(_select_pipe(300.0), domain=domain)
+    assert res["out"].range.lo == 0.0 and res["out"].range.hi == 510.0
+    # guard img < -1 is always false: only the else-branch range
+    res = analyze(_select_pipe(-1.0), domain=domain)
+    assert res["out"].range.lo == -300.0 and res["out"].range.hi == -45.0
+
+
+@pytest.mark.parametrize("domain", ["interval", "affine", "intersect"])
+def test_select_guard_undecided_joins(domain):
+    res = analyze(_select_pipe(100.0), domain=domain)
+    assert res["out"].range.lo == -300.0 and res["out"].range.hi == 510.0
+
+
+def test_select_static_cmp_table():
+    a, b = Interval(0.0, 1.0), Interval(2.0, 3.0)
+    assert static_cmp("<", a, b) is True
+    assert static_cmp(">", a, b) is False
+    assert static_cmp("<=", b, a) is False
+    assert static_cmp(">=", b, a) is True
+    assert static_cmp("<", a, Interval(0.5, 2.0)) is None
+    # boundary: touching ranges decide only the non-strict comparison
+    assert static_cmp("<=", Interval(0.0, 1.0), Interval(1.0, 2.0)) is True
+    assert static_cmp("<", Interval(0.0, 1.0), Interval(1.0, 2.0)) is None
+
+
+def test_select_perpixel_matches_combined_enclosure():
+    """The per-pixel executor decides guards pixel-wise; combined analysis
+    must remain an enclosure of it (regression for the shared fix)."""
+    p = _select_pipe(300.0)
+    comb = analyze(p)
+    per = run_abstract(p, (6, 6), "interval")
+    for k in p.topo_order():
+        assert comb[k].range.encloses(per[k]["range"]), k
+
+
+# ---------------------------------------------------------------------------
+# satellite: types_from_alpha clamp warning + plan provenance record
+# ---------------------------------------------------------------------------
+
+def test_types_from_alpha_warns_on_clamp():
+    p = usm.build()
+    alphas, signed = W.static_alphas(p)
+    alphas = dict(alphas, blurx=0)          # synthetic zero-range stage
+    with pytest.warns(RuntimeWarning, match="blurx"):
+        t = W.types_from_alpha(p, alphas, signed, {})
+    assert t["blurx"].alpha == 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # no clamp -> no warning
+        W.types_from_alpha(p, dict(alphas, blurx=8), signed, {})
+
+
+def test_plan_types_records_clamp_in_provenance():
+    plan = _usm_plan()
+    plan.columns["smt"]["blurx"] = StageRange(
+        range=Interval(0.0, 0.0), alpha=0, signed=False)
+    with pytest.warns(RuntimeWarning, match="blurx"):
+        t = plan.types("smt")
+    assert t["blurx"].alpha == 1
+    assert any("blurx" in n for n in plan.provenance["smt"].notes)
+    # the note travels with the serialized plan
+    back = BitwidthPlan.from_json(plan.to_json())
+    assert any("blurx" in n for n in back.provenance["smt"].notes)
+
+
+# ---------------------------------------------------------------------------
+# combinators
+# ---------------------------------------------------------------------------
+
+def test_meet_is_sound_and_tightest():
+    plan = run_plan(usm.build(), ["interval", "affine",
+                                  meet("interval", "affine")])
+    m = plan.columns["meet(interval,affine)"]
+    ia = plan.columns["interval"]
+    af = plan.columns["affine"]
+    for n in m:
+        assert ia[n].range.encloses(m[n].range), n
+        assert af[n].range.encloses(m[n].range), n
+
+
+def test_refine_clamps_input_ranges():
+    p = usm.build()
+    prof = ProfilePass(_profile_images(), params=usm.DEFAULT_PARAMS)
+    plan = run_plan(p, ["interval", refine("interval", prof)])
+    ref = plan.columns["refine(interval,profile)"]
+    ia = plan.columns["interval"]
+    for n in ref:
+        assert ia[n].range.encloses(ref[n].range), n
+    assert any("profiled input distribution" in note
+               for note in plan.provenance["refine(interval,profile)"].notes)
+
+
+def test_widen_to_bit_boundaries_and_budget_note():
+    p = usm.build()
+    plan = run_plan(p, ["interval", widen_to("interval", 9)])
+    col = plan.columns["widen(interval,9)"]
+    ia = plan.columns["interval"]
+    for n in col:
+        assert col[n].alpha == ia[n].alpha, n        # widening keeps alpha
+        assert col[n].range.encloses(ia[n].range), n
+        lo, hi = col[n].range.lo, col[n].range.hi
+        assert float(lo).is_integer() and float(hi).is_integer()
+    # sharpen (alpha 10) exceeds the 9-bit budget -> reported, not clamped
+    assert any("sharpen" in note
+               for note in plan.provenance["widen(interval,9)"].notes)
+
+
+def test_widen_to_forwards_phase_columns():
+    sub = SmtPass(config=_CFG, phases=True)
+    plan = run_plan(dus.build_extended(),
+                    [sub, widen_to(sub, 16, column="widened")])
+    assert "resS" in plan.phases["widened"]
+    _, rmap = plan.phases["widened"]["resS"]
+    # the aligned phase's alpha-bit win survives widening
+    assert rmap[(0, 0)].alpha == 8
+    assert float(rmap[(0, 0)].range.hi).is_integer()
+
+
+def test_smt_phase_split_registry_name_coexists_with_smt():
+    plan = run_plan(dus.build_extended(),
+                    ["smt", "smt-phase-split"])
+    assert "smt" in plan.columns and "smt-phase-split" in plan.columns
+    assert "resS" in plan.phases["smt-phase-split"]
+
+
+def test_meet_forwards_phase_columns():
+    sub = SmtPass(config=_CFG, phases=True)
+    plan = run_plan(dus.build_extended(),
+                    [meet(sub, "interval", column="met")])
+    assert "resS" in plan.phases["met"]
+    _, rmap = plan.phases["met"]["resS"]
+    assert rmap[(0, 0)].alpha == 8      # per-phase win survives the meet
+
+
+def test_profile_passes_with_different_runners_do_not_collide():
+    imgs = _profile_images()
+    default = ProfilePass(imgs, params=usm.DEFAULT_PARAMS)
+
+    def halved_runner(image, params):
+        return {k: v * 0.5
+                for k, v in run_float(usm.build(), image, params).items()}
+
+    halved = ProfilePass(imgs, runner=halved_runner,
+                         params=usm.DEFAULT_PARAMS, column="profile-halved")
+    assert default.key() != halved.key()
+    plan = run_plan(usm.build(), [default, halved])
+    a, b = plan.columns["profile"], plan.columns["profile-halved"]
+    assert any(b[n].range.hi < a[n].range.hi for n in a)
+
+
+# ---------------------------------------------------------------------------
+# legacy entry points are byte-identical shims over one-pass plans
+# ---------------------------------------------------------------------------
+
+def test_analyze_shim_matches_direct_walk():
+    for domain in ("interval", "affine", "intersect"):
+        p = usm.build()
+        via_shim = analyze(p, domain=domain)
+        direct = analyze_direct(p, domain=domain)
+        assert via_shim == direct
+
+
+def test_static_alphas_shim_matches_plan():
+    p = usm.build()
+    alphas, signed = W.static_alphas(p)
+    plan = run_plan(p, ["interval"])
+    assert alphas == plan.alphas("interval")
+    assert signed == plan.signed("interval")
+    direct = analyze_direct(p)
+    assert alphas == {n: r.alpha for n, r in direct.items()}
+
+
+def test_smt_alphas_shim_matches_analyze_smt():
+    p = usm.build()
+    alphas, signed = W.smt_alphas(p, config=_CFG)
+    direct = analyze_smt(p, config=_CFG)
+    assert alphas == {n: r.alpha for n, r in direct.items()}
+    assert signed == {n: r.signed for n, r in direct.items()}
+
+
+def test_alpha_columns_shim_matches_plan():
+    b = W.make_usm(2, 2, (16, 16))
+    cols = W.alpha_columns(b, smt_config=_CFG)
+    plan = run_plan(b.pipeline, ["interval", SmtPass(config=_CFG),
+                                 b.profile_pass()])
+    for n in b.pipeline.topo_order():
+        assert cols[n]["interval"] == plan.columns["interval"][n].alpha
+        assert cols[n]["smt"] == plan.columns["smt"][n].alpha
+        assert cols[n]["profile_max"] == plan.columns["profile"][n].alpha
+        assert cols[n]["smt_range"] == plan.columns["smt"][n].range
+
+
+# ---------------------------------------------------------------------------
+# per-phase alpha columns (the PR-3 wins, now representable) + execution
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dus_ext_plan():
+    return run_plan(dus.build_extended(),
+                    ["interval", SmtPass(config=_CFG, phases=True)],
+                    betas={n: 4 for n in dus.build_extended().stages},
+                    default_column="smt")
+
+
+def test_phase_columns_strictly_tighter_than_union(dus_ext_plan):
+    plan = dus_ext_plan
+    phases = plan.phases["smt"]
+    union = plan.columns["smt"]
+    # every phase sub-range is enclosed by its union bound
+    for stage, (lat, rmap) in phases.items():
+        for res, sr in rmap.items():
+            assert union[stage].range.encloses(sr.range), (stage, res)
+            assert sr.alpha <= union[stage].alpha, (stage, res)
+    # the sharp residual channel: the aligned phase drops a whole alpha bit
+    (my, mx), rmap = phases["resS"]
+    assert (my, mx) == (2, 1)
+    assert union["resS"].alpha == 9
+    assert rmap[(0, 0)].alpha == 8
+    assert rmap[(1, 0)].alpha == 9
+    # strictly tighter range on at least one phase of the plain residual too
+    (_, _), res_map = phases["res"]
+    assert any(sr.range.hi < union["res"].range.hi - 1.0
+               for sr in res_map.values())
+
+
+def test_phase_collection_does_not_move_union_bounds():
+    p = dus.build_extended()
+    with_phases = analyze_smt(p, config=_CFG, collect_phases={})
+    without = analyze_smt(p, config=_CFG)
+    assert {n: r.range for n, r in with_phases.items()} == \
+        {n: r.range for n, r in without.items()}
+
+
+def test_run_fixed_accepts_plan_with_phase_types(dus_ext_plan):
+    plan = dus_ext_plan
+    p = dus.build_extended()
+    rng = np.random.default_rng(3)
+    img = rng.integers(0, 256, size=(16, 16)).astype(np.float64)
+    env_plan = run_fixed(p, img, plan)
+    env_union = run_fixed(p, img, plan.types())
+    # exact per-phase ranges: saturation never engages, so per-phase
+    # datapaths are bit-identical to the union design on real data...
+    for n in p.topo_order():
+        np.testing.assert_allclose(env_plan[n], env_union[n], err_msg=n)
+    # ...while the aligned resS phase carries one fewer integral bit
+    ptypes = plan.phase_types()
+    assert ptypes["resS"][1][(0, 0)].width < plan.types()["resS"].width
+    # sanity: the fixed run stays close to float
+    ref = run_float(p, img)
+    err = np.max(np.abs(env_plan["resS"] - ref["resS"]))
+    assert err < 1.0
+
+
+def test_plan_executes_on_jax_backend(dus_ext_plan):
+    p = dus.build_extended()
+    rng = np.random.default_rng(5)
+    img = rng.integers(0, 256, size=(8, 8)).astype(np.float32)
+    env = run_fixed(p, img, dus_ext_plan, backend="jax")
+    assert np.isfinite(np.asarray(env["resS"])).all()
+
+
+def test_dus_ext_union_smt_alpha_unchanged_by_sharp_channel():
+    """The added DyS/UyS/resS stages are convex/residual channels: they do
+    not move any pre-existing stage's bounds (golden-table compatibility)."""
+    p = dus.build_extended()
+    res = analyze_smt(p, config=_CFG)
+    for s in ("Dx", "Dy", "Ux", "Uy", "D5", "DyS", "UyS"):
+        assert res[s].alpha == 8, s
+        assert (res[s].range.lo, res[s].range.hi) == (0.0, 255.0), s
+    assert res["band"].alpha == 7
+    assert res["res"].alpha == 9
+    assert res["resS"].alpha == 9
+    assert math.isclose(res["resS"].range.hi, 255.0 * 56 / 64, rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# plan JSON artifact format (what benchmarks/alpha_delta.py consumes)
+# ---------------------------------------------------------------------------
+
+def test_alpha_delta_loader_reads_plan_json(tmp_path):
+    from benchmarks.alpha_delta import _load
+    plan = _usm_plan()
+    # profile column alphas are per-pixel statistics; columns are complete
+    blob = {"version": 1, "groups": {"usm": plan.to_json_dict()}}
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps(blob))
+    loaded = _load(str(path))
+    for n in plan.columns["interval"]:
+        ia, sa, pa = loaded[("usm", n)]
+        assert ia == plan.columns["interval"][n].alpha
+        assert sa == plan.columns["smt"][n].alpha
+        assert pa == plan.columns["profile"][n].alpha
