@@ -137,6 +137,118 @@ def _smt_throughput():
                   f"({speedup:.1f}x)")
 
 
+def _pipeline_throughput():
+    """End-to-end fixed-pipeline throughput: interpreter vs plan-lowered.
+
+    Runs USM / HCD / DUS-ext through the three executors of the
+    plan-driven compile path (docs/execution_backends.md):
+
+      * interpreter — per-stage `run_fixed` numpy oracle
+      * lowered-jnp — one fused jit program (`repro.lowering`, backend
+        "jnp"); the acceptance bar is >=3x over the interpreter on at
+        least one benchmark
+      * pallas      — the fused line-buffer kernel; *interpret mode* on
+        CPU (a pure-python emulation, reported for completeness but not a
+        performance number; on a real TPU pass interpret=False)
+
+    Every backend's outputs are checked bit-for-bit against the oracle
+    before timing.  Emits BENCH_pipeline_throughput.json at the repo root
+    (uploaded as a CI artifact) in addition to the harness row JSON.
+
+    Env knobs: REPRO_BENCH_ROWS (default 512 — small sizes measure jax
+    dispatch overhead, not the datapath), REPRO_BENCH_REPS (default 8),
+    REPRO_BENCH_PALLAS=0 to skip pallas timing (it is interpret-mode
+    slow; correctness is still checked at a small size).
+    """
+    import warnings
+
+    import numpy as np
+
+    from repro.dsl.exec import run_fixed
+    from repro.lowering import LoweringError, compile_pipeline
+    from repro.pipelines import dus, hcd, usm
+    from repro.pipelines import workflows as W
+
+    rows_n = int(os.environ.get("REPRO_BENCH_ROWS", 512))
+    reps = int(os.environ.get("REPRO_BENCH_REPS", 8))
+    time_pallas = os.environ.get("REPRO_BENCH_PALLAS", "1") != "0"
+    shape = (rows_n, rows_n)
+    rows, blob = [], {"shape": list(shape), "reps": reps, "benchmarks": {}}
+    for name, pipe, params in (
+            ("usm", usm.build(), dict(usm.DEFAULT_PARAMS)),
+            ("hcd", hcd.build(), {}),
+            ("dus_ext", dus.build_extended(), {})):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            alphas, signed = W.static_alphas(pipe)
+            types = W.types_from_alpha(pipe, alphas, signed,
+                                       {n: 4 for n in pipe.stages})
+        img = np.random.default_rng(0).integers(
+            0, 256, shape).astype(np.float64)
+        oracle = run_fixed(pipe, img, types, params)
+
+        def bench(fn, n):
+            fn()                       # warm (compile included, untimed)
+            t0 = time.perf_counter()
+            for _ in range(n):
+                fn()
+            return (time.perf_counter() - t0) / n
+
+        t_int = bench(lambda: run_fixed(pipe, img, types, params),
+                      max(reps // 3, 2))
+        entry = {"interp_ms": t_int * 1e3}
+
+        run_jnp = compile_pipeline(pipe, types, params=params, backend="jnp")
+        got = run_jnp(img)
+        exact = all(np.array_equal(np.asarray(oracle[k]), got[k])
+                    for k in got)
+        entry["lowered_jnp_ms"] = bench(lambda: run_jnp(img), reps) * 1e3
+        entry["lowered_exact"] = bool(exact)
+        entry["speedup_lowered"] = t_int * 1e3 / entry["lowered_jnp_ms"]
+
+        try:
+            run_pl = compile_pipeline(pipe, types, params=params,
+                                      backend="pallas")
+            small = img[:32, :32]
+            o_small = run_fixed(pipe, small, types, params)
+            g_small = run_pl(small)
+            entry["pallas_exact"] = bool(all(
+                np.array_equal(np.asarray(o_small[k]), g_small[k])
+                for k in g_small))
+            if time_pallas:
+                entry["pallas_interpret_ms"] = bench(
+                    lambda: run_pl(img), max(reps // 5, 1)) * 1e3
+        except LoweringError as e:
+            entry["pallas_exact"] = None
+            entry["pallas_error"] = str(e)
+
+        blob["benchmarks"][name] = entry
+        rows.append((name, round(entry["interp_ms"], 2),
+                     round(entry["lowered_jnp_ms"], 2),
+                     round(entry.get("pallas_interpret_ms", float("nan")), 2),
+                     round(entry["speedup_lowered"], 2),
+                     entry["lowered_exact"], entry["pallas_exact"]))
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    out_path = os.path.join(os.path.dirname(here),
+                            "BENCH_pipeline_throughput.json")
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1)
+    best = max(blob["benchmarks"].items(),
+               key=lambda kv: kv[1]["speedup_lowered"])
+    broken = [n for n, e in blob["benchmarks"].items()
+              if not (e["lowered_exact"] and e["pallas_exact"] in (True, None))]
+    if broken:
+        # a perf number for a wrong answer is worthless — fail the run
+        # (and the CI step) outright
+        raise AssertionError(
+            f"lowered/pallas outputs diverged from the run_fixed oracle on "
+            f"{broken}; see {out_path}")
+    return rows, (f"lowered-jnp best {best[1]['speedup_lowered']:.1f}x over "
+                  f"interpreter on {best[0]} at {rows_n}x{rows_n} "
+                  f"(bit-exact); pallas interpret-mode checked")
+
+
 BENCHES = {}
 
 
@@ -159,6 +271,7 @@ def _register():
         "lm_quant": _lm_quant_bench,
         "lm_beta_sweep": _lm_beta_sweep,
         "smt_throughput": _smt_throughput,
+        "pipeline_throughput": _pipeline_throughput,
     })
 
 

@@ -97,6 +97,19 @@ def main():
     print(f"   PSNR(resS fixed vs float): {psnr(ref['resS'], fix['resS']):.1f}"
           f" dB; mean datapath bits {phase_bits:.1f} vs union {union_bits}")
 
+    print("\n== lower the plan (fused executors, docs/execution_backends.md) ==")
+    from repro.lowering import compile_pipeline, lower
+    lp = lower(pyr, pplan)
+    kinds = lp.kinds()
+    n_int = sum(1 for k in kinds.values() if k == "intlinear")
+    print(f"   {n_int} integer-datapath stages / "
+          f"{sum(1 for k in kinds.values() if k == 'expr')} f64-replay "
+          f"stages")
+    fused = compile_pipeline(pyr, pplan, backend="jnp")
+    low = fused(img)
+    exact = all(np.array_equal(np.asarray(fix[k]), low[k]) for k in low)
+    print(f"   fused jnp outputs bit-identical to the oracle: {exact}")
+
     print("\n== profile + synthesize (legacy shims still work) ==")
     alphas, signed = W.static_alphas(pipe)
     types = W.types_from_alpha(

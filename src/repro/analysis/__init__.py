@@ -20,15 +20,17 @@ over one-pass plans — see docs/analysis_api.md for the migration table.
 """
 from repro.analysis.combinators import (MeetPass, RefinePass, WidenPass,
                                         meet, refine, widen_to)
-from repro.analysis.driver import (MEMO_STATS, clear_memo, one_pass_ranges,
-                                   pipeline_content_hash, run_plan)
+from repro.analysis.driver import (DISK_CACHE_STATS, MEMO_STATS, clear_memo,
+                                   one_pass_ranges, pipeline_content_hash,
+                                   run_plan)
 from repro.analysis.passes import (AnalysisPass, DomainPass, PassResult,
                                    ProfilePass, SmtPass, make_pass,
                                    register_pass)
 from repro.analysis.plan import (BitwidthPlan, PlanNestingError, Provenance)
 
 __all__ = [
-    "AnalysisPass", "BitwidthPlan", "DomainPass", "MeetPass", "MEMO_STATS",
+    "AnalysisPass", "BitwidthPlan", "DISK_CACHE_STATS", "DomainPass",
+    "MeetPass", "MEMO_STATS",
     "PassResult", "PlanNestingError", "ProfilePass", "Provenance",
     "RefinePass", "SmtPass", "WidenPass", "clear_memo", "make_pass", "meet",
     "one_pass_ranges", "pipeline_content_hash", "refine", "register_pass",

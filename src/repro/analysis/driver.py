@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.graph import Pipeline
@@ -24,11 +26,14 @@ from repro.analysis.passes import AnalysisPass, PassResult, make_pass
 
 _MEMO: Dict[tuple, PassResult] = {}
 MEMO_STATS = {"hits": 0, "misses": 0}
+# disk-backed plan cache (`run_plan(cache_dir=...)`)
+DISK_CACHE_STATS = {"hits": 0, "misses": 0, "writes": 0, "skips": 0}
 
 
 def clear_memo() -> None:
     _MEMO.clear()
     MEMO_STATS.update(hits=0, misses=0)
+    DISK_CACHE_STATS.update(hits=0, misses=0, writes=0, skips=0)
 
 
 def pipeline_content_hash(pipeline: Pipeline) -> str:
@@ -77,20 +82,71 @@ class _Context:
         return dataclasses.replace(self, input_ranges=ir)
 
 
+def _disk_cache_key(pipe_hash: str, resolved: Sequence[AnalysisPass],
+                    input_ranges, betas, default_column) -> Optional[str]:
+    """Stable cross-process cache key, or None when a pass key is only
+    process-local (custom profile runners get a per-process `runner#N`
+    identity — caching those on disk would collide across processes)."""
+    keys = [p.key() for p in resolved]
+    if any(":runner#" in k for k in keys):
+        return None
+    h = hashlib.sha256()
+    h.update(pipe_hash.encode())
+    h.update(_input_ranges_key(input_ranges).encode())
+    for k in keys:
+        h.update(b"|")
+        h.update(k.encode())
+    h.update(repr(sorted((betas or {}).items())).encode())
+    h.update((default_column or "").encode())
+    return h.hexdigest()[:20]
+
+
 def run_plan(pipeline: Pipeline, passes: Sequence,
              input_ranges: Optional[Dict[str, Interval]] = None,
              betas: Optional[Dict[str, int]] = None,
-             default_column: Optional[str] = None) -> BitwidthPlan:
+             default_column: Optional[str] = None,
+             cache_dir: Optional[str] = None) -> BitwidthPlan:
     """Execute the declared pass DAG and collect columns into one plan.
 
     `passes` entries are registry names (``"interval"``, ``"smt"``, ...) or
     `AnalysisPass` instances (combinators included).  Columns land in the
     plan under each pass's `column` name, with provenance carrying the
     pass's memoization key and notes.
+
+    `cache_dir` opts into the disk-backed plan cache: plans serialize
+    stably (`BitwidthPlan.to_json`), so CI and benchmark runs reuse
+    cross-run analysis results keyed on `pipeline_content_hash` + every
+    pass's content key (+ input ranges, betas, default column).  Passes
+    with process-local identities (custom profile runners) skip the disk
+    cache with a `RuntimeWarning`; the in-process memo still applies.
     """
     resolved: List[AnalysisPass] = [make_pass(p) for p in passes]
+    pipe_hash = pipeline_content_hash(pipeline)
+    cache_path = None
+    if cache_dir is not None:
+        key = _disk_cache_key(pipe_hash, resolved, input_ranges, betas,
+                              default_column)
+        if key is None:
+            DISK_CACHE_STATS["skips"] += 1
+            warnings.warn(
+                "plan disk cache skipped: a pass key is process-local "
+                "(custom profile runner); pass key_suffix= for a stable "
+                "identity", RuntimeWarning, stacklevel=2)
+        else:
+            cache_path = os.path.join(
+                cache_dir, f"{pipeline.name}-{pipe_hash}-{key}.plan.json")
+            if os.path.exists(cache_path):
+                try:
+                    with open(cache_path) as f:
+                        plan = BitwidthPlan.from_json(f.read())
+                    if plan.content_hash == pipe_hash:
+                        DISK_CACHE_STATS["hits"] += 1
+                        return plan
+                except (OSError, ValueError, KeyError):
+                    pass          # corrupt entry: fall through and rewrite
+            DISK_CACHE_STATS["misses"] += 1
     ctx = _Context(pipeline=pipeline, input_ranges=input_ranges,
-                   pipe_hash=pipeline_content_hash(pipeline))
+                   pipe_hash=pipe_hash)
     plan = BitwidthPlan(pipeline=pipeline.name, content_hash=ctx.pipe_hash,
                         betas=dict(betas or {}))
     for p in resolved:
@@ -101,6 +157,13 @@ def run_plan(pipeline: Pipeline, passes: Sequence,
                         phases=res.phase_stage_ranges())
     if default_column:
         plan.default_column = default_column
+    if cache_path is not None:
+        os.makedirs(cache_dir, exist_ok=True)
+        tmp = cache_path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(plan.to_json())
+        os.replace(tmp, cache_path)
+        DISK_CACHE_STATS["writes"] += 1
     return plan
 
 

@@ -120,19 +120,57 @@ def _expr_cost(e: Expr, w_in: Dict[str, int], w_out: int, is_float: bool,
     return bit_ops, lut, dsp
 
 
+def phase_mean_width(phase_entry, union_width: float) -> float:
+    """Duty-cycle-weighted datapath width of a phase-split stage.
+
+    `phase_entry` is one `BitwidthPlan.phase_types` value —
+    ``((My, Mx), residue -> FixedPointType)``.  A phase-split streaming
+    design synthesizes one datapath per sampling-lattice residue (the
+    paper §IV homogeneity clusters in silicon); each handles exactly
+    1/(My*Mx) of the pixels, so both the switched bits (power) and the
+    polyphase-folded structure (area) track the residue *mean* width, with
+    residues missing from the map falling back to the union width.
+    """
+    (my, mx), tmap = phase_entry
+    n_res = max(my * mx, 1)
+    total = sum(_w(t) for t in tmap.values())
+    total += union_width * (n_res - len(tmap))
+    return total / n_res
+
+
 def stage_cost(pipeline: Pipeline, name: str,
                types: Dict[str, Optional[FixedPointType]],
-               image_width: int = 1920) -> StageCost:
+               image_width: int = 1920,
+               eff_widths: Optional[Dict[str, float]] = None) -> StageCost:
+    """Cost of one stage's datapath.
+
+    `eff_widths` (optional) overrides the *operand* width of named
+    producer stages — the hook `design_cost` uses to price per-phase
+    datapaths: a phase-split producer feeds this stage's operators (and
+    its line buffers) at the residue-mean width instead of the union
+    width (`phase_mean_width`).
+    """
     st = pipeline.stages[name]
     w_out = _w(types.get(name))
     if st.is_input or st.expr is None:
         return StageCost(0.0, 0.0, 0.0, 0.0, w_out)
     is_float = types.get(name) is None
-    w_in = {i: _w(types.get(i)) for i in st.inputs}
+    eff = eff_widths or {}
+    w_in = {i: eff.get(i, _w(types.get(i))) for i in st.inputs}
     bit_ops, lut, dsp = _expr_cost(st.expr, w_in, w_out, is_float)
-    halo = st.halo()
-    # line buffers: 2*halo full image rows per input, at the input's width
-    bram = sum(2 * halo * image_width * w_in[i] for i in st.inputs) if halo else 0.0
+    # output stage: every stream stage ends in a register (switches w_out
+    # bits per pixel) and, in fixed point, a quantize/saturate clamp
+    # (compare-select of width w_out).  Priced at the residue-mean width
+    # for phase-split stages — this is where one-datapath-per-residue
+    # narrows the silicon even on pipeline outputs.
+    w_store = eff.get(name, w_out)
+    bit_ops += w_store
+    if not is_float:
+        lut += w_store
+    hy, _hx = st.halo_yx()
+    # line buffers: 2*hy full image rows per input, at the input's width —
+    # per-axis: a horizontal-only stencil (hy = 0) streams with no BRAM
+    bram = sum(2 * hy * image_width * w_in[i] for i in st.inputs) if hy else 0.0
     return StageCost(bit_ops=bit_ops, lut_bits=lut, dsp_bits=dsp,
                      bram_bits=float(bram), storage_bits=w_out)
 
@@ -159,16 +197,36 @@ class DesignCost:
 
 def design_cost(pipeline: Pipeline,
                 types: Dict[str, Optional[FixedPointType]],
-                image_width: int = 1920) -> DesignCost:
+                image_width: int = 1920,
+                phase_types: Optional[Dict] = None) -> DesignCost:
+    """Whole-design cost.  `phase_types` (the `BitwidthPlan.phase_types`
+    shape, ``stage -> ((My, Mx), residue -> type)``) prices per-phase
+    datapaths: a phase-split stage feeds its consumers (operators and line
+    buffers) at the residue-mean width, and its storage traffic is the
+    residue mean of the per-residue container bytes — the quantity the
+    union-width model erases (closing the ROADMAP per-phase cost item).
+    """
     from repro.core.policy import container_bytes
+    phase_types = phase_types or {}
+    eff: Dict[str, float] = {
+        n: phase_mean_width(entry, _w(types.get(n)))
+        for n, entry in phase_types.items() if types.get(n) is not None}
     power = lut = dsp = bram = tbytes = 0.0
     for name in pipeline.topo_order():
-        c = stage_cost(pipeline, name, types, image_width)
+        c = stage_cost(pipeline, name, types, image_width, eff_widths=eff)
         power += c.bit_ops
         lut += c.lut_bits
         dsp += c.dsp_bits
         bram += c.bram_bits
-        tbytes += container_bytes(types.get(name))
+        entry = phase_types.get(name)
+        if entry is not None and types.get(name) is not None:
+            (my, mx), tmap = entry
+            n_res = max(my * mx, 1)
+            b = sum(container_bytes(t) for t in tmap.values())
+            b += container_bytes(types.get(name)) * (n_res - len(tmap))
+            tbytes += b / n_res
+        else:
+            tbytes += container_bytes(types.get(name))
     return DesignCost(power_proxy=power, lut_bits=lut, dsp_bits=dsp,
                       bram_bits=bram, bytes_per_pixel_tpu=tbytes)
 

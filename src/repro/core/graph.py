@@ -171,12 +171,25 @@ class Stage:
     def refs(self) -> List[Ref]:
         return expr_refs(self.expr) if self.expr is not None else []
 
-    def halo(self) -> int:
-        """Max |offset| over taps — the stencil halo this stage reads."""
+    def halo_yx(self) -> Tuple[int, int]:
+        """Per-axis stencil halo (hy, hx) this stage reads.
+
+        A 1-D separable stencil has a zero halo on its orthogonal axis: a
+        horizontal 5-tap blur needs no line buffer at all (hy = 0) and a
+        vertical one pads no columns (hx = 0).  Executors and the cost
+        model must use the per-axis values — the old isotropic
+        ``max(|dy|, |dx|)`` over-padded (and over-priced line buffers on)
+        every separable stage.
+        """
         rs = self.refs()
         if not rs:
-            return 0
-        return max(max(abs(r.dy), abs(r.dx)) for r in rs)
+            return (0, 0)
+        return (max(abs(r.dy) for r in rs), max(abs(r.dx) for r in rs))
+
+    def halo(self) -> int:
+        """Isotropic halo — max over both axes of `halo_yx` (legacy)."""
+        hy, hx = self.halo_yx()
+        return max(hy, hx)
 
 
 class Pipeline:

@@ -18,10 +18,8 @@ output; upsampling stages nearest-expand their inputs before evaluation.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -45,23 +43,31 @@ PhaseTypeMap = Dict[str, Any]
 # ---------------------------------------------------------------------------
 
 def _pad_inputs(env: Dict[str, Array], stage: Stage, xp) -> Dict[str, Array]:
-    """Edge-pad each input of `stage` by its halo; upsample-expand first."""
-    h = stage.halo()
+    """Edge-pad each input of `stage` by its per-axis halo; upsample-expand
+    first.  1-D separable stencils pad only their own axis (hy, hx)."""
+    hy, hx = stage.halo_yx()
     uy, ux = stage.upsample
     padded = {}
     for name in stage.inputs:
         a = env[name]
         if uy > 1 or ux > 1:
             a = xp.repeat(xp.repeat(a, uy, axis=0), ux, axis=1)
-        if h > 0:
-            a = xp.pad(a, ((h, h), (h, h)), mode="edge")
+        if hy > 0 or hx > 0:
+            a = xp.pad(a, ((hy, hy), (hx, hx)), mode="edge")
         padded[name] = a
     return padded
 
 
-def _eval_concrete(e: Expr, padded: Dict[str, Array], halo: int,
-                   out_shape, params: Dict[str, float], xp, where):
-    H, W = out_shape
+def eval_expr(e: Expr, ref: Callable, params: Dict[str, float], xp, where):
+    """Evaluate an expression tree with a pluggable `Ref` resolver.
+
+    `ref(stage, dy, dx)` returns the tap's array.  This is the ONE
+    definition of concrete evaluation order — the per-stage interpreter
+    resolves refs by padded-array slicing, while `repro.lowering` backends
+    resolve them by (banded, clamped) gathers.  Both must route through
+    this function: bit-exactness between backends relies on every floating
+    op being issued in the identical order.
+    """
 
     def go(n: Expr):
         if isinstance(n, Const):
@@ -69,8 +75,7 @@ def _eval_concrete(e: Expr, padded: Dict[str, Array], halo: int,
         if isinstance(n, ParamRef):
             return params[n.name]
         if isinstance(n, Ref):
-            a = padded[n.stage]
-            return a[halo + n.dy: halo + n.dy + H, halo + n.dx: halo + n.dx + W]
+            return ref(n.stage, n.dy, n.dx)
         if isinstance(n, BinOp):
             l, r = go(n.left), go(n.right)
             if n.op == "+":
@@ -99,6 +104,18 @@ def _eval_concrete(e: Expr, padded: Dict[str, Array], halo: int,
         raise TypeError(type(n))
 
     return go(e)
+
+
+def _eval_concrete(e: Expr, padded: Dict[str, Array], halo: Tuple[int, int],
+                   out_shape, params: Dict[str, float], xp, where):
+    H, W = out_shape
+    hy, hx = halo
+
+    def ref(stage, dy, dx):
+        a = padded[stage]
+        return a[hy + dy: hy + dy + H, hx + dx: hx + dx + W]
+
+    return eval_expr(e, ref, params, xp, where)
 
 
 def _stage_out_shape(stage: Stage, in_shape):
@@ -141,7 +158,7 @@ def _run_concrete(pipeline: Pipeline, image, params: Dict[str, float],
             in_shape = shapes[st.inputs[0]]
             out_shape = _stage_out_shape(st, in_shape)
             padded = _pad_inputs(env, st, xp)
-            out = _eval_concrete(st.expr, padded, st.halo(), out_shape,
+            out = _eval_concrete(st.expr, padded, st.halo_yx(), out_shape,
                                  params, xp, where)
             sy, sx = st.stride
             if sy > 1 or sx > 1:
@@ -180,6 +197,37 @@ def run_float(pipeline: Pipeline, image, params: Dict[str, float] | None = None,
     return _run_concrete(pipeline, image, params or {}, None, xp=xp)
 
 
+# compiled-executor memo for the lowered run_fixed backends: repeated
+# calls (per-image loops like BenchmarkSetup.fixed_envs) must reuse one
+# fused program instead of re-lowering + re-jitting per call.  Keyed on
+# content, not identity, so mutated pipelines / type maps never hit stale
+# entries.  Small FIFO cap — executors pin jit caches.
+_LOWERED_MEMO: Dict[tuple, Callable] = {}
+_LOWERED_MEMO_CAP = 16
+
+
+def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
+                      backend: str, column: Optional[str]) -> Callable:
+    from repro.analysis.driver import pipeline_content_hash
+    if hasattr(types, "to_json"):          # BitwidthPlan: stable serialized
+        types_key = types.to_json()
+    else:
+        types_key = repr(sorted((k, str(v)) for k, v in types.items()))
+    key = (pipeline_content_hash(pipeline), types_key,
+           repr(sorted(params.items())), backend, column)
+    fn = _LOWERED_MEMO.get(key)
+    if fn is None:
+        from repro.lowering import compile_pipeline
+        be = "jnp" if backend == "lowered" else "pallas"
+        outs = list(pipeline.stages) if be == "jnp" else None
+        fn = compile_pipeline(pipeline, types, params=params,
+                              backend=be, outputs=outs, column=column)
+        while len(_LOWERED_MEMO) >= _LOWERED_MEMO_CAP:
+            _LOWERED_MEMO.pop(next(iter(_LOWERED_MEMO)))
+        _LOWERED_MEMO[key] = fn
+    return fn
+
+
 def run_fixed(pipeline: Pipeline, image, types,
               params: Dict[str, float] | None = None,
               backend: str = "numpy",
@@ -191,7 +239,21 @@ def run_fixed(pipeline: Pipeline, image, types,
     the plan's default column) type map plus per-phase sub-types where the
     plan carries phase columns — each sampling-lattice residue is then
     quantized with its own datapath type.
+
+    Backends:
+      * ``"numpy"`` — the per-stage f64 interpreter (THE bit-exactness
+        oracle every other executor is pinned against);
+      * ``"jax"``   — the same per-stage walk in f32 jnp (legacy);
+      * ``"lowered"`` / ``"pallas"`` — the plan-driven compile path
+        (`repro.lowering`): one fused jit program / the fused line-buffer
+        Pallas kernel.  Both are bit-identical to ``"numpy"``;
+        ``"lowered"`` returns the full stage env, ``"pallas"`` only the
+        pipeline outputs (intermediates never leave VMEM).
     """
+    if backend in ("lowered", "pallas"):
+        run = _lowered_executor(pipeline, types, params or {}, backend,
+                                column)
+        return run(image)
     xp = np if backend == "numpy" else jnp
     phase_types = None
     if hasattr(types, "phase_types"):          # BitwidthPlan (duck-typed to
@@ -206,15 +268,15 @@ def make_jitted_fixed(pipeline: Pipeline,
                       types: Dict[str, Optional[FixedPointType]],
                       params: Dict[str, float],
                       outputs: Optional[list[str]] = None) -> Callable:
-    """jit-compiled fixed-point executor returning the output stages only."""
-    outs = outputs or pipeline.outputs
+    """jit-compiled fixed-point executor returning the output stages only.
 
-    @jax.jit
-    def fn(image):
-        env = _run_concrete(pipeline, image, params, types, xp=jnp)
-        return {k: env[k] for k in outs}
-
-    return fn
+    Thin wrapper over the plan-driven lowering's fused jnp backend
+    (`repro.lowering.compile_pipeline`) — one fused XLA program instead of
+    the old per-stage f32 walk, now bit-identical to the numpy oracle.
+    """
+    from repro.lowering import compile_pipeline
+    return compile_pipeline(pipeline, types, params=params,
+                            backend="jnp", outputs=outputs or None)
 
 
 # ---------------------------------------------------------------------------
@@ -257,7 +319,7 @@ def run_abstract(pipeline: Pipeline, image_shape, domain: str | Domain = "interv
             oh = shp[0] * st.upsample[0]
             ow = shp[1] * st.upsample[1]
             padded = _pad_inputs(env, st, np)
-            halo = st.halo()
+            hy, hx = st.halo_yx()
 
             def go(n: Expr):
                 if isinstance(n, Const):
@@ -268,8 +330,8 @@ def run_abstract(pipeline: Pipeline, image_shape, domain: str | Domain = "interv
                     return param_cache[n.name]
                 if isinstance(n, Ref):
                     a = padded[n.stage]
-                    return a[halo + n.dy: halo + n.dy + oh,
-                             halo + n.dx: halo + n.dx + ow]
+                    return a[hy + n.dy: hy + n.dy + oh,
+                             hx + n.dx: hx + n.dx + ow]
                 if isinstance(n, BinOp):
                     l, r = go(n.left), go(n.right)
                     if n.op == "+":

@@ -1,66 +1,107 @@
-"""Fixed-point 2-D stencil Pallas kernel — the paper's core datapath on TPU.
+"""Fixed-point stencil Pallas kernels — the paper's core datapath on TPU.
 
 FPGA adaptation (DESIGN.md §2): the paper's designs stream pixels through
 *line buffers* so each output pixel sees its stencil window without HBM
 re-reads.  The TPU analogue keeps a band of rows (the tile + halo) resident
 in VMEM: the input stays in HBM (`pl.ANY`), each grid step copies one
-(TH + 2*halo)-row band, and the taps become static shifted slices combined
+(TH + 2*hy)-row band, and the taps become static shifted slices combined
 with integer multiply-accumulate in VREGs.
 
-Arithmetic is the paper's saturating fixed point, exactly:
+Two entry points live here:
 
-    out_q = clip( (sum_k w_q[k] * in_q[y+dy_k, x+dx_k] + round_bias) >> shift,
-                  qmin, qmax )
+  * `fixedpoint_stencil` — the single-stage kernel (one linear stencil,
+    unit stride), with per-axis halos: a horizontal-only stencil copies a
+    band of TH rows (no row halo at all — the line-buffer-free case).
+    Arithmetic is the paper's saturating fixed point, exactly:
 
-with `in_q` the (alpha_in, beta_in) scaled integers, `w_q` the stencil
-weights quantized at `w_beta` fractional bits, and
-`shift = beta_in + w_beta - beta_out`.  All integer math is exact in int32
-(ops.py checks the width budget), so kernel == oracle bit-for-bit.
+        out_q = clip((sum_k w_q[k] * in_q[y+dy_k, x+dx_k] + bias) >> shift,
+                     qmin, qmax)
+
+    with `shift = beta_in + w_beta - beta_out` (round-half-up; all integer
+    math exact in int32 — ops.py checks the width budget).
+
+  * `fused_pipeline` — the multi-stage generalization the plan-driven
+    lowering (`repro.lowering.pallas_backend`) compiles into: one grid
+    walks a band schedule over the whole stage DAG, every intermediate
+    stage's rows stay in VMEM, and taps are resolved by clamped gathers
+    that handle non-unit stride, upsampling, multi-input stages, and
+    edge-replicate padding without materializing anything to HBM.  The
+    kernel body here owns the *geometry* (band loads, tap index algebra);
+    the caller supplies each stage's datapath as a closure
+    ``fn(tap, rows_abs) -> tile`` so this module stays IR-agnostic.
+
+Stage descriptors for `fused_pipeline` are plain dicts:
+
+    kind      "input" | "compute"
+    name      stage key
+    step      output rows per grid tile
+    lo, L     row-span start (relative to i*step) and length
+    H, W      full stage height/width
+    dtype     tile/output dtype
+    in_slot   (inputs) operand index of the pallas_call
+    stride, upsample, fn   (compute) vertical/horizontal rates + datapath
+    out_slot  optional output index
+
+Tap resolution implements the executor's exact sampling semantics: output
+row `y` of a stage reads its input at row `floor((y*sy + dy) / uy)`
+(upsample-expand, shift, decimate), clamped to the valid grid — which is
+provably identical to edge-padding the expanded array like
+`dsl.exec._pad_inputs` does.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 Tap = Tuple[int, int, int]   # (dy, dx, w_q)
+Halo = Union[int, Tuple[int, int]]
 
 
-def _stencil_kernel(x_ref, o_ref, *, taps: Sequence[Tap], halo: int,
+def _halo_yx(halo: Halo) -> Tuple[int, int]:
+    if isinstance(halo, tuple):
+        return halo
+    return (int(halo), int(halo))
+
+
+def _stencil_kernel(x_ref, o_ref, *, taps: Sequence[Tap], halo: Tuple[int, int],
                     shift: int, qmin: int, qmax: int, tile_h: int, width: int):
     i = pl.program_id(0)
-    # one VMEM-resident band of rows: the line-buffer analogue
-    band = x_ref[pl.ds(i * tile_h, tile_h + 2 * halo), :]
+    hy, hx = halo
+    # one VMEM-resident band of rows: the line-buffer analogue (hy rows of
+    # halo only — a horizontal stencil's band is just its own tile rows)
+    band = x_ref[pl.ds(i * tile_h, tile_h + 2 * hy), :]
     acc = jnp.zeros((tile_h, width), jnp.int32)
     for dy, dx, wq in taps:
         if wq == 0:
             continue
-        sl = band[halo + dy: halo + dy + tile_h,
-                  halo + dx: halo + dx + width]
+        sl = band[hy + dy: hy + dy + tile_h,
+                  hx + dx: hx + dx + width]
         acc = acc + wq * sl
     if shift > 0:
         acc = (acc + (1 << (shift - 1))) >> shift     # round-half-up
     o_ref[...] = jnp.clip(acc, qmin, qmax)            # saturation mode
 
 
-def fixedpoint_stencil(x_q: jax.Array, taps: Sequence[Tap], halo: int,
+def fixedpoint_stencil(x_q: jax.Array, taps: Sequence[Tap], halo: Halo,
                        shift: int, qmin: int, qmax: int,
                        tile_h: int = 8, interpret: bool = True) -> jax.Array:
     """Apply the quantized stencil to a pre-padded scaled-int image.
 
-    x_q: int32 (H + 2*halo, W + 2*halo), edge-padded
+    x_q: int32 (H + 2*hy, W + 2*hx), edge-padded per axis
     returns int32 (H, W) at the output type's scale.
     """
+    hy, hx = _halo_yx(halo)
     Hp, Wp = x_q.shape
-    H, W = Hp - 2 * halo, Wp - 2 * halo
+    H, W = Hp - 2 * hy, Wp - 2 * hx
     if H % tile_h != 0:
         raise ValueError(f"H={H} not divisible by tile_h={tile_h}")
-    kern = functools.partial(_stencil_kernel, taps=tuple(taps), halo=halo,
-                             shift=shift, qmin=qmin, qmax=qmax,
-                             tile_h=tile_h, width=W)
+    kern = functools.partial(_stencil_kernel, taps=tuple(taps),
+                             halo=(hy, hx), shift=shift, qmin=qmin,
+                             qmax=qmax, tile_h=tile_h, width=W)
     return pl.pallas_call(
         kern,
         grid=(H // tile_h,),
@@ -69,3 +110,77 @@ def fixedpoint_stencil(x_q: jax.Array, taps: Sequence[Tap], halo: int,
         out_shape=jax.ShapeDtypeStruct((H, W), jnp.int32),
         interpret=interpret,
     )(x_q)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-stage band kernel
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(*refs, program: Sequence[Dict], n_in: int):
+    in_refs, out_refs = refs[:n_in], refs[n_in:]
+    i = pl.program_id(0)
+    by_name = {d["name"]: d for d in program}
+    tiles: Dict[str, jax.Array] = {}
+    for d in program:
+        start = i * d["step"] + d["lo"]
+        L, H = d["L"], d["H"]
+        if d["kind"] == "input":
+            ref = in_refs[d["in_slot"]]
+            # contiguous band load (the line-buffer copy), then reorder
+            # with clamped indices for the edge-replicate rows
+            b = jnp.clip(start, 0, H - L)
+            band = ref[pl.ds(b, L), :]
+            idx = jnp.clip(start + jnp.arange(L), 0, H - 1) - b
+            tiles[d["name"]] = jnp.take(band, idx, axis=0)
+        else:
+            rows_abs = jnp.clip(start + jnp.arange(L), 0, H - 1)
+            sy, sx = d["stride"]
+            uy, ux = d["upsample"]
+            W = d["W"]
+
+            def tap(pname, dy, dx, *, rows_abs=rows_abs, sy=sy, sx=sx,
+                    uy=uy, ux=ux, W=W):
+                pd = by_name[pname]
+                p_start = i * pd["step"] + pd["lo"]
+                src = jnp.floor_divide(rows_abs * sy + dy, uy) - p_start
+                t = jnp.take(tiles[pname], src, axis=0)
+                cols = jnp.clip(jnp.floor_divide(jnp.arange(W) * sx + dx, ux),
+                                0, pd["W"] - 1)
+                return jnp.take(t, cols, axis=1)
+
+            tiles[d["name"]] = d["fn"](tap, rows_abs)
+    for d in program:
+        slot = d.get("out_slot")
+        if slot is not None:
+            tile = tiles[d["name"]]
+            out_refs[slot][...] = tile[-d["lo"]: -d["lo"] + d["step"]]
+
+
+def fused_pipeline(program: Sequence[Dict], grid: int,
+                   interpret: bool = True) -> Callable:
+    """Compile a band-scheduled stage program into one pallas_call.
+
+    Returns ``f(*input_arrays) -> tuple(output_arrays)``; see the module
+    docstring for the descriptor contract.
+    """
+    n_in = sum(1 for d in program if d["kind"] == "input")
+    outs = sorted((d for d in program if d.get("out_slot") is not None),
+                  key=lambda d: d["out_slot"])
+    kern = functools.partial(_fused_kernel, program=tuple(program),
+                             n_in=n_in)
+    call = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_in,
+        out_specs=[pl.BlockSpec((d["step"], d["W"]), lambda i: (i, 0))
+                   for d in outs],
+        out_shape=[jax.ShapeDtypeStruct((d["H"], d["W"]), d["dtype"])
+                   for d in outs],
+        interpret=interpret,
+    )
+
+    def run(*arrays):
+        out = call(*arrays)
+        return out if isinstance(out, (tuple, list)) else (out,)
+
+    return run

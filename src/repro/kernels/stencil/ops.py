@@ -1,8 +1,12 @@
 """jit'd public wrapper: float image -> fixed-point stencil -> float image.
 
 Handles weight quantization (exact where the weights are dyadic — all the
-paper's stencils are w/2^k), input/output (alpha, beta) scaling, edge
-padding, and the int32 width budget check.
+paper's stencils are w/2^k), input/output (alpha, beta) scaling, per-axis
+edge padding, and the int32 width budget check.
+
+Tap extraction is the single-stencil specialization of the general
+linear-form machinery in `repro.lowering.ir` (`dyadic_weights`), with a
+lossy rounding fallback at the beta cap for non-dyadic weights.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import jax.numpy as jnp
 from repro.core.fixedpoint import FixedPointType
 from repro.kernels.stencil.kernel import fixedpoint_stencil
 from repro.kernels.stencil.ref import fixedpoint_stencil_ref
+from repro.lowering.ir import dyadic_weights
 
 
 def quantize_weights(weights: Sequence[Sequence[float]], scale: float,
@@ -26,12 +31,8 @@ def quantize_weights(weights: Sequence[Sequence[float]], scale: float,
     cols = max(len(r) for r in weights)
     cy, cx = rows // 2, cols // 2
     vals = [scale * w for r in weights for w in r]
-    for w_beta in range(max_beta + 1):
-        if all(abs(v * (1 << w_beta) - round(v * (1 << w_beta))) < 1e-9
-               for v in vals):
-            break
-    else:
-        w_beta = max_beta
+    exact = dyadic_weights(vals, max_beta=max_beta)
+    w_beta = exact[1] if exact is not None else max_beta
     taps = []
     for r, row in enumerate(weights):
         for c, w in enumerate(row):
@@ -39,6 +40,14 @@ def quantize_weights(weights: Sequence[Sequence[float]], scale: float,
             if wq != 0:
                 taps.append((r - cy, c - cx, wq))
     return taps, w_beta
+
+
+def tap_halo(taps) -> tuple:
+    """Per-axis (hy, hx) halo of a tap list."""
+    if not taps:
+        return (0, 0)
+    return (max(abs(dy) for dy, _, _ in taps),
+            max(abs(dx) for _, dx, _ in taps))
 
 
 def check_width_budget(t_in: FixedPointType, taps, w_beta: int) -> None:
@@ -56,17 +65,17 @@ def check_width_budget(t_in: FixedPointType, taps, w_beta: int) -> None:
                                              "interpret"))
 def _stencil_fixed(img, taps, t_in: FixedPointType, t_out: FixedPointType,
                    w_beta: int, tile_h: int, use_ref: bool, interpret: bool):
-    halo = max(max(abs(dy), abs(dx)) for dy, dx, _ in taps)
+    hy, hx = tap_halo(taps)
     shift = t_in.beta + w_beta - t_out.beta
     if shift < 0:
         raise ValueError("negative shift: raise w_beta or lower beta_out")
     # quantize input to scaled ints (int32 carrier)
     q = jnp.clip(jnp.rint(img * (1 << t_in.beta)), t_in.int_min,
                  t_in.int_max).astype(jnp.int32)
-    q = jnp.pad(q, ((halo, halo), (halo, halo)), mode="edge")
+    q = jnp.pad(q, ((hy, hy), (hx, hx)), mode="edge")
     fn = fixedpoint_stencil_ref if use_ref else functools.partial(
         fixedpoint_stencil, tile_h=tile_h, interpret=interpret)
-    out_q = fn(q, taps, halo, shift, t_out.int_min, t_out.int_max)
+    out_q = fn(q, taps, (hy, hx), shift, t_out.int_min, t_out.int_max)
     return out_q.astype(jnp.float32) * (2.0 ** -t_out.beta)
 
 

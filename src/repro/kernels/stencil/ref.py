@@ -1,24 +1,26 @@
 """Pure-jnp oracle for the fixed-point stencil kernel (bit-exact)."""
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
 Tap = Tuple[int, int, int]
 
 
-def fixedpoint_stencil_ref(x_q, taps: Sequence[Tap], halo: int, shift: int,
+def fixedpoint_stencil_ref(x_q, taps: Sequence[Tap],
+                           halo: Union[int, Tuple[int, int]], shift: int,
                            qmin: int, qmax: int):
     """Identical integer math to kernel.py, expressed with whole-array slices."""
+    hy, hx = (halo, halo) if isinstance(halo, int) else halo
     Hp, Wp = x_q.shape
-    H, W = Hp - 2 * halo, Wp - 2 * halo
+    H, W = Hp - 2 * hy, Wp - 2 * hx
     acc = jnp.zeros((H, W), jnp.int32)
     for dy, dx, wq in taps:
         if wq == 0:
             continue
-        acc = acc + wq * x_q[halo + dy: halo + dy + H,
-                             halo + dx: halo + dx + W].astype(jnp.int32)
+        acc = acc + wq * x_q[hy + dy: hy + dy + H,
+                             hx + dx: hx + dx + W].astype(jnp.int32)
     if shift > 0:
         acc = (acc + (1 << (shift - 1))) >> shift
     return jnp.clip(acc, qmin, qmax)

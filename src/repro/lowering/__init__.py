@@ -1,0 +1,26 @@
+"""Plan-driven lowering: `(Pipeline, BitwidthPlan)` -> typed program -> backend.
+
+The compile path the analysis plans exist for (docs/execution_backends.md):
+
+    from repro.lowering import compile_pipeline
+    run = compile_pipeline(pipe, plan, params, backend="pallas")
+    outs = run(image)          # {output stage: float64 ndarray}
+
+Backends: ``interp`` (the per-stage run_fixed oracle), ``jnp`` (one fused
+jit program), ``pallas`` (fused line-buffer kernel).  All three are
+bit-for-bit identical on every pipeline — the differential battery in
+tests/test_lowering.py pins it.
+"""
+from repro.lowering.ir import (IntTap, LoweredPipeline, LoweredStage,
+                               LoweringError, PhaseSnap, Tap, dyadic_scale,
+                               dyadic_weights, lower, match_linear)
+from repro.lowering.backends import (BACKENDS, compile_backend,
+                                     compile_pipeline, register_backend)
+from repro.lowering.schedule import Schedule, StageSched, build_schedule
+
+__all__ = [
+    "IntTap", "LoweredPipeline", "LoweredStage", "LoweringError",
+    "PhaseSnap", "Tap", "dyadic_scale", "dyadic_weights", "lower",
+    "match_linear", "BACKENDS", "compile_backend", "compile_pipeline",
+    "register_backend", "Schedule", "StageSched", "build_schedule",
+]

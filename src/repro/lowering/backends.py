@@ -1,0 +1,325 @@
+"""Execution backends over the lowered IR.
+
+A backend compiles a `LoweredPipeline` into an executor
+``fn(image_or_dict) -> {stage: float64 ndarray}``.  Registered backends:
+
+  * ``interp``  — the per-stage `dsl.exec.run_fixed` oracle (numpy f64),
+                  kept bit-identical by definition;
+  * ``jnp``     — one fused jit program: integer multiply-accumulate
+                  datapaths for provably-exact linear stages, f64 replay
+                  for the rest, all under an x64 scope.  Bit-identical to
+                  the oracle (see `repro.lowering.ir` for the argument);
+  * ``pallas``  — the fused line-buffer kernel (`pallas_backend`).
+
+Shared here are the datapath finishing helpers both fused backends use:
+round-half-even integer shifts (== `rint` on the exact dyadic value) and
+per-residue saturation grids for phase-split stages.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.fixedpoint import FixedPointType
+from repro.lowering.ir import (LoweredPipeline, LoweredStage, LoweringError,
+                               PhaseSnap, lower)
+
+Executor = Callable[..., Dict[str, np.ndarray]]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# shared datapath pieces (jnp-traceable; work under jit and inside pallas)
+# ---------------------------------------------------------------------------
+
+def rhe_shift(p, t: int):
+    """Round-half-even of `p / 2^t` on integer arrays (t may be <= 0).
+
+    Bit-identical to `rint` of the exact dyadic rational — the oracle's
+    `_snap` on an exact float value — including the tie-to-even cases the
+    single-stage kernel's legacy round-half-up misses.
+    """
+    import jax.numpy as jnp
+    if t <= 0:
+        return p << (-t)
+    base = p >> t                      # arithmetic shift == floor division
+    rem = p - (base << t)
+    half = 1 << (t - 1)
+    inc = (rem > half) | ((rem == half) & ((base & 1) == 1))
+    return base + inc.astype(p.dtype)
+
+
+def residue_bounds(phase: PhaseSnap, t: FixedPointType, rows_abs, W: int):
+    """(qmin, qmax) saturation grids for a phase-split stage tile.
+
+    `rows_abs` is the (possibly traced) absolute-row index vector of the
+    tile; columns are static.  Residues absent from the phase map keep the
+    union-column bounds."""
+    import jax.numpy as jnp
+    my, mx = phase.lattice
+    # scalar-only construction (no captured constant arrays — the same
+    # code traces inside a pallas kernel)
+    rr = (rows_abs % my).reshape(-1, 1)
+    cc = (jnp.arange(W) % mx).reshape(1, -1)
+    qmin = jnp.full((rows_abs.shape[0], W), t.int_min, dtype=jnp.int64)
+    qmax = jnp.full((rows_abs.shape[0], W), t.int_max, dtype=jnp.int64)
+    for (ry, rx), t_ph in sorted(phase.types.items()):
+        mask = (rr == ry % my) & (cc == rx % mx)
+        qmin = jnp.where(mask, t_ph.int_min, qmin)
+        qmax = jnp.where(mask, t_ph.int_max, qmax)
+    return qmin, qmax
+
+
+def carrier_dtype(name: str):
+    import jax.numpy as jnp
+    return jnp.int32 if name == "int32" else jnp.int64
+
+
+def store_dtype(ls: LoweredStage):
+    """Tile dtype a fused backend materializes for this stage."""
+    import jax.numpy as jnp
+    if ls.store_float:
+        return jnp.float64
+    if ls.kind == "intlinear":
+        return carrier_dtype(ls.carrier)
+    return jnp.int32 if ls.t.width <= 31 else jnp.int64
+
+
+def snap_float(raw, t: FixedPointType, xp):
+    """The oracle's `_snap` (numpy branch) in any xp: rint, clip, rescale."""
+    step = 2.0 ** t.beta
+    return xp.clip(xp.rint(raw * step), t.int_min, t.int_max) / step
+
+
+def quantize_input(x, t: Optional[FixedPointType], dtype, xp):
+    """Image -> scaled-int tile on `t`'s grid (oracle input snapping)."""
+    if t is None:
+        return x
+    q = xp.clip(xp.rint(x * (2.0 ** t.beta)), t.int_min, t.int_max)
+    return q.astype(dtype)
+
+
+def finish_intlinear(ls: LoweredStage, acc, rows_abs, W: int):
+    """Accumulator -> saturated scaled-int tile (union + per-residue)."""
+    import jax.numpy as jnp
+    if ls.dyadic:
+        q = rhe_shift(acc * ls.sm if ls.sm != 1 else acc, ls.t_shift)
+    else:
+        q = jnp.rint(acc.astype(jnp.float64) * ls.cscale)
+    if ls.phase is not None:
+        qmin, qmax = residue_bounds(ls.phase, ls.t, rows_abs, W)
+        q = jnp.clip(q, qmin, qmax)
+    else:
+        q = jnp.clip(q, ls.t.int_min, ls.t.int_max)
+    return q.astype(store_dtype(ls))
+
+
+def snap_expr(ls: LoweredStage, raw, rows_abs, W: int):
+    """Raw f64 stage tile -> stored tile (int grid or oracle-float)."""
+    import jax.numpy as jnp
+    t = ls.t
+    if t is None:
+        return raw
+    if ls.phase is not None and not ls.phase.int_ok:
+        # residues carry different betas: store the float composite the
+        # oracle stores (union snap, then per-residue re-snap of raw)
+        out = snap_float(raw, t, jnp)
+        my, mx = ls.phase.lattice
+        rows = (rows_abs % my).reshape(-1, 1)
+        cols = (jnp.arange(W) % mx).reshape(1, -1)
+        for (ry, rx), t_ph in sorted(ls.phase.types.items()):
+            mask = (rows == ry % my) & (cols == rx % mx)
+            out = jnp.where(mask, snap_float(raw, t_ph, jnp), out)
+        return out
+    if ls.store_float:                  # wide type: keep the oracle floats
+        return snap_float(raw, t, jnp)
+    q = jnp.rint(raw * (2.0 ** t.beta))
+    if ls.phase is not None:
+        qmin, qmax = residue_bounds(ls.phase, t, rows_abs, W)
+        q = jnp.clip(q, qmin, qmax)
+    else:
+        q = jnp.clip(q, t.int_min, t.int_max)
+    return q.astype(store_dtype(ls))
+
+
+def dequant(ls: LoweredStage, tile):
+    """Stored tile -> the f64 stage value the oracle's env carries."""
+    import jax.numpy as jnp
+    if ls.store_float:
+        return tile
+    return tile.astype(jnp.float64) * (2.0 ** -ls.t.beta)
+
+
+def needed_stages(lp: LoweredPipeline, outputs: Sequence[str]) -> List[str]:
+    """Ancestors of `outputs` in topo order (prune dead stages)."""
+    need = set()
+    stack = list(outputs)
+    while stack:
+        n = stack.pop()
+        if n in need:
+            continue
+        need.add(n)
+        stack.extend(lp.pipeline.stages[n].inputs)
+    return [n for n in lp.order if n in need]
+
+
+def normalize_images(lp: LoweredPipeline, image):
+    """run_fixed's input convention: dict / tuple / single array."""
+    input_names = lp.pipeline.input_stages()
+    if isinstance(image, dict):
+        return [image[n] for n in input_names], input_names
+    if isinstance(image, (tuple, list)):
+        return list(image), input_names
+    return [image], input_names
+
+
+# ---------------------------------------------------------------------------
+# fused jnp backend
+# ---------------------------------------------------------------------------
+
+def compile_jnp(lp: LoweredPipeline,
+                outputs: Optional[Sequence[str]] = None) -> Executor:
+    """One jitted x64 program with the oracle's padded-grid geometry.
+
+    Integer linear stages run as int32/int64 multiply-accumulates; every
+    other stage replays the oracle's f64 expression tree
+    (`dsl.exec.eval_expr`) on dequantized operands.  Output dict values
+    are the same float64 arrays `run_fixed(backend="numpy")` produces.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from repro.dsl.exec import _pad_inputs, _stage_out_shape, eval_expr
+
+    outs = list(outputs or lp.pipeline.outputs)
+    order = needed_stages(lp, outs)
+    params = dict(lp.params)
+
+    def forward(*images):
+        tiles: Dict[str, object] = {}      # stored tiles (int grid or f64)
+        vals: Dict[str, object] = {}       # f64 env values (lazy-ish)
+        shapes: Dict[str, tuple] = {}
+        input_names = lp.pipeline.input_stages()
+        img_of = dict(zip(input_names, images))
+        for name in order:
+            ls = lp.stages[name]
+            st = ls.stage
+            if st.is_input:
+                x = img_of[name].astype(jnp.float64)
+                if ls.t is None:
+                    tiles[name] = x
+                else:
+                    tiles[name] = quantize_input(x, ls.t, store_dtype(ls), jnp)
+                vals[name] = dequant(ls, tiles[name])
+                shapes[name] = x.shape
+                continue
+            in_shape = shapes[st.inputs[0]]
+            out_shape = _stage_out_shape(st, in_shape)
+            H, W = out_shape
+            hy, hx = ls.halo
+            if ls.kind == "intlinear":
+                cdt = carrier_dtype(ls.carrier)
+                padded = _pad_inputs(
+                    {i: tiles[i].astype(cdt) for i in st.inputs}, st, jnp)
+                sy, sx = st.stride
+                # stride folded into the tap slices: decimated pixels are
+                # never computed (the interpreter computes-then-drops)
+                Hs, Ws = _ceil_div(H, sy), _ceil_div(W, sx)
+                acc = jnp.zeros((Hs, Ws), cdt)
+                for tp in ls.int_taps:
+                    a = padded[tp.stage]
+                    sl = a[hy + tp.dy: hy + tp.dy + H: sy,
+                           hx + tp.dx: hx + tp.dx + W: sx]
+                    acc = acc + tp.W * sl
+                rows_abs = jnp.arange(acc.shape[0])
+                q = finish_intlinear(ls, acc, rows_abs, acc.shape[1])
+                tiles[name] = q
+            else:
+                padded = _pad_inputs({i: vals[i] for i in st.inputs}, st, jnp)
+
+                def ref(stage, dy, dx, padded=padded, H=H, W=W,
+                        hy=hy, hx=hx):
+                    a = padded[stage]
+                    return a[hy + dy: hy + dy + H, hx + dx: hx + dx + W]
+
+                raw = eval_expr(st.expr, ref, params, jnp, jnp.where)
+                sy, sx = st.stride
+                if sy > 1 or sx > 1:
+                    raw = raw[::sy, ::sx]
+                rows_abs = jnp.arange(raw.shape[0])
+                tiles[name] = snap_expr(ls, raw, rows_abs, raw.shape[1])
+            vals[name] = dequant(ls, tiles[name])
+            shapes[name] = tuple(vals[name].shape)
+        return {k: vals[k] for k in outs}
+
+    jitted = jax.jit(forward)
+
+    def run(image, params_override=None):
+        if params_override is not None and dict(params_override) != params:
+            raise ValueError("params are baked at compile time; re-lower "
+                             "with the new params")
+        imgs, _ = normalize_images(lp, image)
+        with enable_x64():
+            arrs = tuple(jnp.asarray(np.asarray(im), dtype=jnp.float64)
+                         for im in imgs)
+            out = jitted(*arrs)
+            return {k: np.asarray(v) for k, v in out.items()}
+
+    run.lowered = lp          # introspection hook for tests/benchmarks
+    return run
+
+
+# ---------------------------------------------------------------------------
+# interpreter (oracle) backend + registry
+# ---------------------------------------------------------------------------
+
+def compile_interp(lp: LoweredPipeline,
+                   outputs: Optional[Sequence[str]] = None) -> Executor:
+    """The per-stage numpy f64 oracle, as a backend (the reference)."""
+    outs = list(outputs or lp.pipeline.outputs)
+    phase_types = {n: (ls.phase.lattice, dict(ls.phase.types))
+                   for n, ls in lp.stages.items() if ls.phase is not None}
+
+    def run(image, params_override=None):
+        from repro.dsl.exec import _run_concrete
+        env = _run_concrete(lp.pipeline, image,
+                            dict(params_override or lp.params), lp.types,
+                            xp=np, phase_types=phase_types or None)
+        return {k: np.asarray(env[k]) for k in outs}
+
+    run.lowered = lp
+    return run
+
+
+BACKENDS = {
+    "interp": compile_interp,
+    "jnp": compile_jnp,
+}
+
+
+def register_backend(name: str, factory) -> None:
+    BACKENDS[name] = factory
+
+
+def compile_pipeline(pipeline, types, params=None, backend: str = "jnp",
+                     outputs=None, column=None, **kw) -> Executor:
+    """Lower + compile in one call (the `repro.lowering` front door)."""
+    lp = lower(pipeline, types, params=params, column=column)
+    return compile_backend(lp, backend, outputs=outputs, **kw)
+
+
+def compile_backend(lp: LoweredPipeline, backend: str = "jnp",
+                    outputs=None, **kw) -> Executor:
+    if backend == "pallas":
+        from repro.lowering import pallas_backend  # registers itself
+    try:
+        factory = BACKENDS[backend]
+    except KeyError:
+        raise LoweringError(
+            f"unknown lowering backend {backend!r}; "
+            f"registered: {sorted(BACKENDS)}") from None
+    return factory(lp, outputs=outputs, **kw)

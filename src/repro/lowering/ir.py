@@ -1,0 +1,322 @@
+"""Typed per-stage program IR for plan-driven lowering.
+
+`lower()` (see `repro.lowering.lower_pipeline`) turns `(Pipeline,
+BitwidthPlan)` into a `LoweredPipeline`: one `LoweredStage` per stage
+carrying everything a backend needs to synthesize the stage's datapath —
+quantized integer taps, beta-alignment shifts, the finishing rule
+(dyadic round-half-even shift or one f64 scale multiply), per-axis halos,
+sampling rates, saturation bounds, and per-phase datapaths (one set of
+bounds per sampling-lattice residue, the paper §IV homogeneity clusters).
+
+Datapath-kind selection is the load-bearing decision.  The bit-exactness
+contract with the `run_fixed` per-pixel oracle (numpy f64) rests on two
+facts:
+
+  * an ``expr`` stage re-issues the oracle's IEEE-754 double ops in the
+    identical order (`dsl.exec.eval_expr` is shared), so it is equal by
+    construction;
+  * an ``intlinear`` stage replaces the oracle's float tree with integer
+    multiply-accumulates, which is equal **iff the oracle's float math was
+    exact**: all taps are dyadic multiples of on-grid inputs and every
+    partial sum stays below 2^53.  `_plan_intlinear` proves that bound
+    from the input types before electing the integer path; anything it
+    cannot prove falls back to ``expr``.
+
+The finishing step after an integer accumulation:
+
+  value = s * acc / 2^(w_beta + bmax),   q_out = rint(value * 2^beta_out)
+
+  * dyadic s = sm/2^se  ->  q_out = round_half_even(acc * sm, t) with
+    t = se + w_beta + bmax - beta_out (pure integer datapath);
+  * otherwise  q_out = rint(f64(acc) * cscale) with cscale =
+    s * 2^(beta_out - w_beta - bmax), exact because scaling a double by a
+    power of two is lossless — one IEEE multiply, the same one the oracle
+    issues.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from fractions import Fraction
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.fixedpoint import FixedPointType
+from repro.core.graph import BinOp, Const, Expr, Pipeline, Ref, Stage
+
+Residue = Tuple[int, int]
+
+
+class LoweringError(ValueError):
+    """The pipeline (or shape) cannot be lowered by the requested backend."""
+
+
+# ---------------------------------------------------------------------------
+# linear-form matching (generalizes kernels/stencil/ops.py tap extraction)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Tap:
+    """One structural stencil tap: `w * input[(i+dy, j+dx)]`."""
+    stage: str
+    dy: int
+    dx: int
+    w: float
+
+
+def match_linear(expr: Expr) -> Optional[Tuple[Tuple[Tap, ...], float]]:
+    """Match `[Const(s) *] (sum/difference of [Const(w) *] Ref taps)`.
+
+    This is exactly the shape `core.graph.stencil_expr` emits (plus bare
+    linear point-wise stages like ``img2 - img1``), multi-input included.
+    Returns (taps, scale) or None when the stage is not a linear stencil.
+    """
+    scale = 1.0
+    body = expr
+    if isinstance(body, BinOp) and body.op == "*" \
+            and isinstance(body.left, Const) \
+            and not isinstance(body.right, (Ref, Const)):
+        scale = float(body.left.value)
+        body = body.right
+    taps: List[Tap] = []
+
+    def go(n: Expr, sign: int) -> bool:
+        if isinstance(n, BinOp) and n.op == "+":
+            return go(n.left, sign) and go(n.right, sign)
+        if isinstance(n, BinOp) and n.op == "-":
+            return go(n.left, sign) and go(n.right, -sign)
+        if isinstance(n, BinOp) and n.op == "*" \
+                and isinstance(n.left, Const) and isinstance(n.right, Ref):
+            r = n.right
+            taps.append(Tap(r.stage, r.dy, r.dx, sign * float(n.left.value)))
+            return True
+        if isinstance(n, Ref):
+            taps.append(Tap(n.stage, n.dy, n.dx, float(sign)))
+            return True
+        return False
+
+    if not go(body, 1) or not taps:
+        return None
+    return tuple(taps), scale
+
+
+def dyadic_weights(vals: Sequence[float], max_beta: int = 24
+                   ) -> Optional[Tuple[List[int], int]]:
+    """Smallest w_beta with every `v * 2^w_beta` an exact integer, else None.
+
+    The exact-only core of `kernels.stencil.ops.quantize_weights` (which
+    additionally accepts lossy rounding at its beta cap)."""
+    for w_beta in range(max_beta + 1):
+        sc = 1 << w_beta
+        if all(float(v) * sc == int(v * sc) for v in vals):
+            return [int(v * sc) for v in vals], w_beta
+    return None
+
+
+def dyadic_scale(s: float, max_num: int = 1 << 20,
+                 max_exp: int = 64) -> Optional[Tuple[int, int]]:
+    """`s == sm / 2^se` with a small odd-ish integer sm, else None."""
+    if s == 0 or not math.isfinite(s):
+        return None
+    f = Fraction(s)          # exact: every float is p/2^k
+    den = f.denominator
+    if den & (den - 1) != 0:         # not a power of two (cannot happen for
+        return None                  # floats, but keep the guard explicit)
+    se = den.bit_length() - 1
+    sm = f.numerator
+    if abs(sm) > max_num or se > max_exp:
+        return None
+    return sm, se
+
+
+# ---------------------------------------------------------------------------
+# lowered stages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IntTap:
+    """Beta-aligned integer tap: `W * q_in[(i+dy, j+dx)]` on scaled ints."""
+    stage: str
+    dy: int
+    dx: int
+    W: int
+
+
+@dataclasses.dataclass
+class PhaseSnap:
+    """Per-phase datapaths: one output type per sampling-lattice residue.
+
+    `int_ok` marks the common case where every residue shares the union
+    column's beta — the residue split then only changes the saturation
+    bounds, so the integer datapath re-clips per residue.  Mixed betas
+    (possible with hand-built type maps) force the float path: the oracle
+    re-snaps each residue's raw value onto a different grid.
+    """
+    lattice: Tuple[int, int]                     # (My, Mx)
+    types: Dict[Residue, FixedPointType]
+    int_ok: bool = True
+
+
+@dataclasses.dataclass
+class LoweredStage:
+    name: str
+    kind: str                        # "input" | "intlinear" | "expr"
+    stage: Stage                     # original IR node (expr/stride/upsample)
+    t: Optional[FixedPointType]      # union-column output type (None = float)
+    halo: Tuple[int, int]            # per-axis (hy, hx)
+    # -- intlinear datapath ---------------------------------------------------
+    int_taps: Tuple[IntTap, ...] = ()
+    sm: int = 1                      # dyadic finishing numerator
+    t_shift: int = 0                 # dyadic finishing right-shift (may be <0)
+    dyadic: bool = True
+    cscale: float = 1.0              # f64 finishing multiplier (non-dyadic)
+    carrier: str = "int64"           # accumulator dtype ("int32" | "int64")
+    acc_bound: int = 0               # proved |accumulator| bound
+    # -- saturation -----------------------------------------------------------
+    phase: Optional[PhaseSnap] = None
+    # backends keep this stage's tile as f64 values instead of scaled ints
+    # (untyped, wider than a double's mantissa, or residue-mixed-beta)
+    store_float: bool = False
+
+
+@dataclasses.dataclass
+class LoweredPipeline:
+    """Topologically ordered typed program — what backends compile."""
+    pipeline: Pipeline
+    stages: Dict[str, LoweredStage]          # in topo order
+    order: List[str]
+    params: Dict[str, float]
+    types: Dict[str, Optional[FixedPointType]]
+    column: Optional[str] = None             # plan column, if plan-derived
+
+    def outputs(self) -> List[str]:
+        return list(self.pipeline.outputs)
+
+    def kinds(self) -> Dict[str, str]:
+        return {n: s.kind for n, s in self.stages.items()}
+
+
+# ---------------------------------------------------------------------------
+# datapath planning
+# ---------------------------------------------------------------------------
+
+F64_EXACT = 1 << 53      # integer sums below this are exact IEEE doubles
+INT32_BUDGET = 1 << 30
+
+
+def _qabs(t: FixedPointType) -> int:
+    return max(abs(t.int_min), t.int_max)
+
+
+def _plan_intlinear(st: Stage, taps: Tuple[Tap, ...], scale: float,
+                    t_out: FixedPointType,
+                    in_types: Dict[str, Optional[FixedPointType]]):
+    """Integer-datapath parameters, or None when exactness is unprovable."""
+    if any(in_types.get(tp.stage) is None for tp in taps):
+        return None
+    w = dyadic_weights([tp.w for tp in taps])
+    if w is None:
+        return None
+    wq, w_beta = w
+    bmax = max(in_types[tp.stage].beta for tp in taps)
+    int_taps = []
+    bound = 0
+    for tp, q in zip(taps, wq):
+        t_in = in_types[tp.stage]
+        W = q << (bmax - t_in.beta)
+        if W == 0:
+            continue
+        int_taps.append(IntTap(tp.stage, tp.dy, tp.dx, W))
+        bound += abs(W) * _qabs(t_in)
+    if bound >= F64_EXACT:
+        # the oracle's own float sum may round — only `expr` replays that
+        return None
+    ds = dyadic_scale(scale)
+    if ds is not None:
+        sm, se = ds
+        t_shift = se + w_beta + bmax - t_out.beta
+        # the oracle computes fl(s * sum): exact only while |sm * acc|
+        # fits a double's mantissa — beyond that the float tree rounds and
+        # only the `expr` kind can replay it.  The carrier must hold the
+        # *finished* value too: a negative t_shift left-shifts the product
+        # (beta_out deeper than the input grid), so bound the post-shift
+        # magnitude, not just the accumulator.
+        prod = bound * abs(sm)
+        if t_shift < 0:
+            fin = prod << (-t_shift)
+        else:
+            fin = prod + (1 << max(t_shift - 1, 0))
+        if fin >= F64_EXACT:
+            return None
+        carrier = "int32" if fin < INT32_BUDGET else "int64"
+        return dict(int_taps=tuple(int_taps), sm=sm, t_shift=t_shift,
+                    dyadic=True, cscale=1.0, carrier=carrier,
+                    acc_bound=bound)
+    # non-dyadic scale: one f64 multiply finishes the stage, bit-equal to
+    # the oracle's fl(scale * sum) (power-of-two rescale is lossless)
+    cscale = scale * 2.0 ** (t_out.beta - w_beta - bmax)
+    carrier = "int32" if bound < INT32_BUDGET else "int64"
+    return dict(int_taps=tuple(int_taps), sm=1, t_shift=0, dyadic=False,
+                cscale=cscale, carrier=carrier, acc_bound=bound)
+
+
+def _phase_snap(t_union: FixedPointType, entry) -> PhaseSnap:
+    (my, mx), tmap = entry
+    return PhaseSnap(lattice=(my, mx), types=dict(tmap),
+                     int_ok=all(t.beta == t_union.beta
+                                for t in tmap.values()))
+
+
+def lower(pipeline: Pipeline, types, params: Optional[Dict[str, float]] = None,
+          column: Optional[str] = None) -> LoweredPipeline:
+    """Lower `(Pipeline, BitwidthPlan-or-TypeMap)` into a typed program.
+
+    Mirrors `dsl.exec.run_fixed`'s duck-typed plan handling: a plan
+    supplies its `column` types plus per-phase sub-types; a plain dict is
+    a per-stage union type map.
+    """
+    phase_types = {}
+    col = column
+    if hasattr(types, "phase_types"):            # BitwidthPlan (duck-typed)
+        plan = types
+        phase_types = plan.phase_types(column) or {}
+        col = column or getattr(plan, "default_column", None)
+        types = plan.types(column)
+    tmap: Dict[str, Optional[FixedPointType]] = {
+        n: types.get(n) for n in pipeline.stages}
+    stages: Dict[str, LoweredStage] = {}
+    order = pipeline.topo_order()
+    # stages whose values backends must keep as floats (no single scaled-int
+    # grid): untyped, wider than a double's mantissa, or residue-mixed-beta.
+    # Their consumers cannot take the integer path.
+    float_stored: set = set()
+    for name in order:
+        st = pipeline.stages[name]
+        t_out = tmap.get(name)
+        halo = st.halo_yx()
+        phase = None
+        if name in phase_types and t_out is not None:
+            phase = _phase_snap(t_out, phase_types[name])
+        sf = (t_out is None or t_out.width > 52
+              or (phase is not None and not phase.int_ok))
+        if sf:
+            float_stored.add(name)
+        if st.is_input:
+            stages[name] = LoweredStage(name=name, kind="input", stage=st,
+                                        t=t_out, halo=(0, 0), store_float=sf)
+            continue
+        lin = match_linear(st.expr) if t_out is not None else None
+        plan_int = None
+        if lin is not None and not sf \
+                and not any(i in float_stored for i in st.inputs):
+            plan_int = _plan_intlinear(st, lin[0], lin[1], t_out,
+                                       {i: tmap.get(i) for i in st.inputs})
+        if plan_int is not None:
+            stages[name] = LoweredStage(name=name, kind="intlinear", stage=st,
+                                        t=t_out, halo=halo, phase=phase,
+                                        **plan_int)
+        else:
+            stages[name] = LoweredStage(name=name, kind="expr", stage=st,
+                                        t=t_out, halo=halo, phase=phase,
+                                        store_float=sf)
+    return LoweredPipeline(pipeline=pipeline, stages=stages, order=order,
+                           params=dict(params or {}), types=tmap, column=col)

@@ -1,0 +1,136 @@
+"""Fused line-buffer Pallas backend over the lowered IR.
+
+Compiles a `LoweredPipeline` + image shape into ONE `pallas_call`
+(`kernels.stencil.kernel.fused_pipeline`): a band of every stage's rows
+walks down the image, intermediates never touch HBM, and each stage's
+datapath is synthesized from its `LoweredStage`:
+
+  * `intlinear` — integer multiply-accumulate over clamped tap gathers,
+    finished by a round-half-even shift (dyadic scale) or one f64
+    multiply + rint, saturated per lattice residue where the plan carries
+    phase types (one datapath per §IV homogeneity cluster);
+  * `expr`      — the oracle's f64 expression tree replayed on
+    dequantized gathers (`dsl.exec.eval_expr`), then snapped.
+
+Both are bit-identical to `run_fixed(backend="numpy")` (see
+`repro.lowering.ir` for the exactness argument; the band geometry is
+value-equal to the oracle's padded full-array geometry by the clamp
+equivalence spelled out in `kernels.stencil.kernel`).
+
+Everything runs under an x64 scope; `interpret=True` (the default) runs
+on CPU, `interpret=False` requires a real TPU — note f64/int64 stages
+only lower on targets with 64-bit support, so off-TPU CI uses interpreter
+mode throughout.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.lowering import backends as B
+from repro.lowering.ir import LoweredPipeline, LoweredStage, LoweringError
+from repro.lowering.schedule import Schedule, build_schedule
+
+
+def _input_descriptor(name: str, ls: LoweredStage, ss, slot: int):
+    return dict(kind="input", name=name, step=ss.step, lo=ss.lo, L=ss.L,
+                H=ss.H, W=ss.W, dtype=B.store_dtype(ls), in_slot=slot)
+
+
+def _compute_descriptor(lp: LoweredPipeline, name: str, ss):
+    import jax.numpy as jnp
+    from repro.dsl.exec import eval_expr
+
+    ls = lp.stages[name]
+    st = ls.stage
+    params = lp.params
+
+    if ls.kind == "intlinear":
+        cdt = B.carrier_dtype(ls.carrier)
+
+        def fn(tap, rows_abs, ls=ls, cdt=cdt, W=ss.W):
+            acc = jnp.zeros((rows_abs.shape[0], W), cdt)
+            for tp in ls.int_taps:
+                acc = acc + tp.W * tap(tp.stage, tp.dy, tp.dx).astype(cdt)
+            return B.finish_intlinear(ls, acc, rows_abs, W)
+    else:
+        def fn(tap, rows_abs, ls=ls, W=ss.W):
+            def ref(stage, dy, dx):
+                g = tap(stage, dy, dx)
+                return B.dequant(lp.stages[stage], g)
+
+            raw = eval_expr(st.expr, ref, params, jnp, jnp.where)
+            return B.snap_expr(ls, raw, rows_abs, W)
+
+    return dict(kind="compute", name=name, step=ss.step, lo=ss.lo, L=ss.L,
+                H=ss.H, W=ss.W, dtype=B.store_dtype(ls),
+                stride=st.stride, upsample=st.upsample,
+                inputs=tuple(st.inputs), fn=fn)
+
+
+def compile_pallas(lp: LoweredPipeline,
+                   outputs: Optional[Sequence[str]] = None,
+                   interpret: bool = True,
+                   tile_rows: Optional[int] = None) -> B.Executor:
+    """Shape-specialized executor: the schedule + kernel are built (and
+    cached) per input shape on first call."""
+    from repro.kernels.stencil.kernel import fused_pipeline
+
+    outs = list(outputs or lp.pipeline.outputs)
+    order = B.needed_stages(lp, outs)
+    input_names = [n for n in order if lp.stages[n].stage.is_input]
+    cache: Dict[tuple, object] = {}
+
+    def build(in_shape):
+        sched: Schedule = build_schedule(lp, in_shape, order=order,
+                                         outputs=outs, tile_rows=tile_rows)
+        program = []
+        slot = {n: i for i, n in enumerate(input_names)}
+        for n in sched.order:
+            ls = lp.stages[n]
+            ss = sched.stages[n]
+            if ls.stage.is_input:
+                program.append(_input_descriptor(n, ls, ss, slot[n]))
+            else:
+                program.append(_compute_descriptor(lp, n, ss))
+        for out_slot, n in enumerate(outs):
+            for d in program:
+                if d["name"] == n:
+                    d["out_slot"] = out_slot
+        return fused_pipeline(program, grid=sched.grid, interpret=interpret)
+
+    def run(image, params_override=None):
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+        if params_override is not None and \
+                dict(params_override) != lp.params:
+            raise ValueError("params are baked at compile time; re-lower "
+                             "with the new params")
+        imgs, _ = B.normalize_images(lp, image)
+        img_of = dict(zip(lp.pipeline.input_stages(), imgs))
+        with enable_x64():
+            arrays = []
+            shape = None
+            for n in input_names:
+                x = jnp.asarray(np.asarray(img_of[n]), dtype=jnp.float64)
+                if shape is None:
+                    shape = tuple(x.shape)
+                elif tuple(x.shape) != shape:
+                    raise LoweringError("all pipeline inputs must share one "
+                                        f"shape; got {shape} vs {x.shape}")
+                arrays.append(B.quantize_input(
+                    x, lp.stages[n].t, B.store_dtype(lp.stages[n]), jnp))
+            key = shape
+            if key not in cache:
+                cache[key] = build(shape)
+            out_arrays = cache[key](*arrays)
+            res = {n: np.asarray(B.dequant(lp.stages[n], arr))
+                   for n, arr in zip(outs, out_arrays)}
+        return res
+
+    run.lowered = lp
+    return run
+
+
+B.register_backend("pallas", compile_pallas)

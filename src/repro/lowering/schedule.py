@@ -1,0 +1,181 @@
+"""Row-band tile schedule for the fused line-buffer (pallas) backend.
+
+The fused kernel walks the whole stage DAG once per band of output rows,
+keeping every intermediate stage's band resident in VMEM (the TPU
+analogue of the paper's FPGA line buffers).  For that to be a static
+program, every stage's per-tile row window must be a *translation* of the
+same window: tile `i` of stage `s` covers rows
+
+    [i * step_s + lo_s,  i * step_s + hi_s)        (clamped at the edges)
+
+which works exactly when every per-stage row rate `r_s` (output rows per
+root-image row, an exact rational through stride/upsample chains) times
+the root tile height `T` is an integer.  `build_schedule` picks the
+smallest such `T` dividing the image height, then runs one backward span
+pass computing (lo, hi) per stage from its consumers' needs — the
+tap-shifted, rate-scaled union:
+
+    lo_p = min over consumer taps  floor((sy*lo_c + dy) / uy)
+    hi_p = max over consumer taps  floor((sy*(hi_c - 1) + dy) / uy) + 1
+
+`floor((i*step_c*sy + k) / uy) == i*step_p + floor(k / uy)` holds because
+`step_c * sy / uy = step_p` is an integer by construction — the whole
+point of the lattice-aligned tile height (the same divisibility argument
+`smt.encoder.sampling_lattice` makes for phase-split CSPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+from math import gcd
+from typing import Dict, List, Optional, Tuple
+
+from repro.lowering.ir import LoweredPipeline, LoweringError
+
+
+@dataclasses.dataclass
+class StageSched:
+    step: int          # output rows this stage advances per grid tile
+    lo: int            # row-span start, relative to i*step
+    hi: int            # row-span end (exclusive), relative to i*step
+    H: int             # full stage height
+    W: int             # full stage width
+
+    @property
+    def L(self) -> int:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass
+class Schedule:
+    grid: int                         # number of row tiles
+    tile_rows: int                    # T: root-image rows per tile
+    stages: Dict[str, StageSched]     # materialized stages only (topo order)
+    order: List[str]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def stage_shapes(lp: LoweredPipeline, in_shape: Tuple[int, int]
+                 ) -> Dict[str, Tuple[int, int]]:
+    """Exact executor shapes: expand by upsample, then `[::s]` decimation."""
+    shapes: Dict[str, Tuple[int, int]] = {}
+    for name in lp.order:
+        st = lp.stages[name].stage
+        if st.is_input:
+            shapes[name] = in_shape
+            continue
+        h, w = shapes[st.inputs[0]]
+        h, w = h * st.upsample[0], w * st.upsample[1]
+        shapes[name] = (_ceil_div(h, st.stride[0]),
+                        _ceil_div(w, st.stride[1]))
+    return shapes
+
+
+def row_rates(lp: LoweredPipeline) -> Dict[str, Fraction]:
+    """Output rows per root row, per stage; LoweringError on rate conflicts."""
+    rates: Dict[str, Fraction] = {}
+    for name in lp.order:
+        st = lp.stages[name].stage
+        if st.is_input:
+            rates[name] = Fraction(1)
+            continue
+        rs = {rates[i] for i in st.inputs}
+        if len(rs) != 1:
+            raise LoweringError(
+                f"stage {name!r} mixes inputs at different row rates "
+                f"{sorted(map(str, rs))}; no uniform band schedule exists")
+        rates[name] = rs.pop() * st.upsample[0] / st.stride[0]
+    return rates
+
+
+def build_schedule(lp: LoweredPipeline, in_shape: Tuple[int, int],
+                   order: Optional[List[str]] = None,
+                   outputs: Optional[List[str]] = None,
+                   tile_rows: Optional[int] = None,
+                   min_tile: int = 8) -> Schedule:
+    """Static band schedule for `in_shape` images over `order` stages.
+
+    `order` defaults to every stage (callers prune to output ancestors);
+    `outputs` to the pipeline outputs.  Raises `LoweringError` when no
+    lattice-aligned tile height exists — the caller falls back to the
+    un-banded jnp backend.
+    """
+    order = list(order or lp.order)
+    outputs = list(outputs or lp.pipeline.outputs)
+    H0, _ = in_shape
+    shapes = stage_shapes(lp, in_shape)
+    rates = row_rates(lp)
+    for name in order:
+        st = lp.stages[name].stage
+        if not st.is_input:
+            exp = rates[name] * H0
+            if exp != shapes[name][0]:
+                raise LoweringError(
+                    f"stage {name!r}: height {shapes[name][0]} is not "
+                    f"rate-exact ({exp}); pad the image so every "
+                    f"stride divides its stage height")
+    base = 1
+    for name in order:
+        d = rates[name].denominator
+        base = base * d // gcd(base, d)
+
+    def try_tile(T: int) -> Optional[Schedule]:
+        steps = {n: int(rates[n] * T) for n in order}
+        lo: Dict[str, Optional[int]] = {
+            n: 0 if n in outputs else None for n in order}
+        hi: Dict[str, Optional[int]] = {
+            n: steps[n] if n in outputs else None for n in order}
+        for c in reversed(order):
+            if lo[c] is None:        # dead stage w.r.t. outputs: skip
+                continue
+            st = lp.stages[c].stage
+            if st.is_input:
+                continue
+            sy, uy = st.stride[0], st.upsample[0]
+            for r in st.refs():
+                a = (sy * lo[c] + r.dy) // uy
+                b = (sy * (hi[c] - 1) + r.dy) // uy + 1
+                p = r.stage
+                lo[p] = a if lo[p] is None else min(lo[p], a)
+                hi[p] = b if hi[p] is None else max(hi[p], b)
+        stages = {}
+        for n in order:
+            if lo[n] is None:
+                continue
+            s = StageSched(step=steps[n], lo=lo[n], hi=hi[n],
+                           H=shapes[n][0], W=shapes[n][1])
+            if s.step < 1 or s.L > s.H:
+                return None
+            stages[n] = s
+        return Schedule(grid=H0 // T, tile_rows=T, stages=stages,
+                        order=[n for n in order if n in stages])
+
+    if tile_rows is not None:
+        if tile_rows % base or H0 % tile_rows:
+            raise LoweringError(
+                f"tile_rows={tile_rows} must be a multiple of {base} "
+                f"and divide H={H0}")
+        sched = try_tile(tile_rows)
+        if sched is None:
+            raise LoweringError(
+                f"tile_rows={tile_rows}: a stage's band would exceed its "
+                f"full height; use a larger tile")
+        return sched
+
+    candidates = sorted(T for T in range(base, H0 + 1, base) if H0 % T == 0)
+    best = None
+    for T in candidates:
+        sched = try_tile(T)
+        if sched is None:
+            continue
+        best = sched
+        if T >= min(min_tile, H0):
+            break
+    if best is None:
+        raise LoweringError(
+            f"no lattice-aligned tile height divides H={H0} "
+            f"(phase modulus {base}, halos too deep for every candidate)")
+    return best

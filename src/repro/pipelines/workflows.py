@@ -126,9 +126,19 @@ class BenchmarkSetup:
         imgs = self.test_images if images is None else images
         return [run_float(self.pipeline, im, self.params) for im in imgs]
 
-    def fixed_envs(self, types: TypeMap, images=None):
+    def fixed_envs(self, types: TypeMap, images=None, backend: str = "numpy"):
         imgs = self.test_images if images is None else images
-        return [run_fixed(self.pipeline, im, types, self.params) for im in imgs]
+        return [run_fixed(self.pipeline, im, types, self.params,
+                          backend=backend) for im in imgs]
+
+    def executor(self, types, backend: str = "jnp", outputs=None,
+                 column: Optional[str] = None):
+        """Compiled fixed-point executor over the plan-driven lowering
+        (`repro.lowering`): reusable across images, one fused program."""
+        from repro.lowering import compile_pipeline
+        return compile_pipeline(self.pipeline, types, params=self.params,
+                                backend=backend, outputs=outputs,
+                                column=column)
 
     def mean_quality(self, types: TypeMap, images=None, refs=None) -> float:
         imgs = self.test_images if images is None else images
@@ -150,16 +160,18 @@ class BenchmarkSetup:
 
     def plan(self, smt_config=None, phases: bool = True,
              include_profile: bool = True,
-             betas: Optional[Dict[str, int]] = None) -> BitwidthPlan:
+             betas: Optional[Dict[str, int]] = None,
+             cache_dir: Optional[str] = None) -> BitwidthPlan:
         """The benchmark's standard `BitwidthPlan`: interval + smt (with
         per-phase sub-columns on phase-split stages) + profile columns,
         default column "smt" — the artifact `run_fixed`, `design_report`,
-        and `benchmarks/paper_tables.py` consume."""
+        and `benchmarks/paper_tables.py` consume.  `cache_dir` enables the
+        disk-backed plan cache (`repro.analysis.run_plan`)."""
         passes = ["interval", SmtPass(config=smt_config, phases=phases)]
         if include_profile:
             passes.append(self.profile_pass())
         return run_plan(self.pipeline, passes, betas=betas,
-                        default_column="smt")
+                        default_column="smt", cache_dir=cache_dir)
 
     def beta_quality_fn(self, alphas, signed, images=None, refs=None):
         imgs = self.train_images if images is None else images
@@ -279,17 +291,34 @@ ALL_BENCHMARKS = {"hcd": make_hcd, "usm": make_usm, "dus": make_dus,
 def design_report(pipeline: Pipeline, types,
                   image_width: int = 1920, column: Optional[str] = None) -> Dict:
     """Fixed-vs-float cost report; `types` is a TypeMap or a `BitwidthPlan`
-    (whose `column` — default column when None — supplies the types)."""
+    (whose `column` — default column when None — supplies the types).
+
+    A plan with per-phase sub-columns additionally yields the phase-split
+    design costs (`fixed_phase` / `phase_improvement`): one datapath per
+    sampling-lattice residue, priced at the residue-mean width
+    (`cost_model.design_cost(phase_types=...)`) — the area/power the union
+    column over-reports on stages like `dus_ext.resS`.
+    """
+    phase_types = None
     if isinstance(types, BitwidthPlan):
-        types = types.types(column)
+        plan = types
+        phase_types = plan.phase_types(column) or None
+        types = plan.types(column)
     fixed = cost_model.design_cost(pipeline, types, image_width)
     flt = cost_model.design_cost(pipeline, cost_model.float_design(pipeline),
                                  image_width)
     legal = policy.legalize_design(types)
-    return {
+    report = {
         "fixed": fixed,
         "float": flt,
         "improvement": fixed.ratios_vs(flt),
         "containers": {k: v.container for k, v in legal.items()},
         "total_bits": sum(t.width if t else 32 for t in types.values()),
     }
+    if phase_types:
+        fixed_ph = cost_model.design_cost(pipeline, types, image_width,
+                                          phase_types=phase_types)
+        report["fixed_phase"] = fixed_ph
+        # >1 where the per-residue datapaths beat the union-width design
+        report["phase_improvement"] = fixed_ph.ratios_vs(fixed)
+    return report

@@ -427,3 +427,98 @@ def test_alpha_delta_loader_reads_plan_json(tmp_path):
         assert ia == plan.columns["interval"][n].alpha
         assert sa == plan.columns["smt"][n].alpha
         assert pa == plan.columns["profile"][n].alpha
+
+
+# ---------------------------------------------------------------------------
+# disk-backed plan cache (run_plan(cache_dir=...))
+# ---------------------------------------------------------------------------
+
+def test_disk_cache_round_trip_and_hit(tmp_path):
+    from repro.analysis import DISK_CACHE_STATS
+    p = usm.build()
+    betas = {n: 3 for n in p.stages}
+    clear_memo()
+    plan = run_plan(p, ["interval"], betas=betas, cache_dir=str(tmp_path))
+    assert DISK_CACHE_STATS["misses"] == 1
+    assert DISK_CACHE_STATS["writes"] == 1
+    files = list(tmp_path.glob("*.plan.json"))
+    assert len(files) == 1
+    # second run: loaded from disk, byte-identical plan, no pass executes
+    clear_memo()
+    plan2 = run_plan(p, ["interval"], betas=betas, cache_dir=str(tmp_path))
+    assert DISK_CACHE_STATS["hits"] == 1
+    assert MEMO_STATS["misses"] == 0          # nothing re-analyzed
+    assert plan2.to_json() == plan.to_json()
+
+
+def test_disk_cache_key_covers_passes_betas_and_content(tmp_path):
+    p = usm.build()
+    run_plan(p, ["interval"], cache_dir=str(tmp_path))
+    run_plan(p, ["affine"], cache_dir=str(tmp_path))
+    run_plan(p, ["interval"], betas={"blurx": 2}, cache_dir=str(tmp_path))
+    # different pipeline content -> different file
+    p2 = usm.build()
+    p2.stages["masked"].stride = (2, 2)
+    run_plan(p2, ["interval"], cache_dir=str(tmp_path))
+    assert len(list(tmp_path.glob("*.plan.json"))) == 4
+
+
+def test_disk_cache_skips_process_local_profile_runners(tmp_path):
+    from repro.analysis import DISK_CACHE_STATS
+    p = usm.build()
+    clear_memo()
+    prof = ProfilePass(_profile_images(),
+                       runner=lambda im, par: run_float(p, im, par),
+                       params=usm.DEFAULT_PARAMS)
+    with pytest.warns(RuntimeWarning, match="process-local"):
+        run_plan(p, [prof], cache_dir=str(tmp_path))
+    assert DISK_CACHE_STATS["skips"] == 1
+    assert not list(tmp_path.glob("*.plan.json"))
+
+
+def test_benchmark_setup_plan_cache_dir(tmp_path):
+    from repro.analysis import DISK_CACHE_STATS
+    setup = W.make_usm(n_train=1, n_test=1, shape=(16, 16))
+    clear_memo()
+    plan = setup.plan(smt_config=_CFG, cache_dir=str(tmp_path))
+    assert DISK_CACHE_STATS["writes"] == 1
+    clear_memo()
+    plan2 = setup.plan(smt_config=_CFG, cache_dir=str(tmp_path))
+    assert DISK_CACHE_STATS["hits"] == 1
+    assert plan2.to_json() == plan.to_json()
+
+
+# ---------------------------------------------------------------------------
+# per-phase datapath pricing (cost_model + design_report)
+# ---------------------------------------------------------------------------
+
+def test_phase_mean_width_duty_cycle():
+    from repro.core.cost_model import phase_mean_width
+    from repro.core.fixedpoint import FixedPointType
+    entry = ((2, 1), {(0, 0): FixedPointType(8, 0, True)})
+    # one residue at 8 bits, the missing one at the 10-bit union
+    assert phase_mean_width(entry, 10) == 9.0
+
+
+def test_design_report_shows_phase_split_win(dus_ext_plan):
+    rep = W.design_report(dus.build_extended(), dus_ext_plan)
+    assert "fixed_phase" in rep and "phase_improvement" in rep
+    imp = rep["phase_improvement"]
+    # per-residue datapaths are never pricier than the union design, and
+    # the resS alpha-bit split must show up as a strict win somewhere
+    assert all(v >= 1.0 - 1e-12 for v in imp.values()), imp
+    assert any(v > 1.0 for v in imp.values()), imp
+    # union-design entries are untouched (back-compat)
+    assert rep["fixed"].power_proxy >= rep["fixed_phase"].power_proxy
+
+
+def test_design_cost_phase_types_reduce_tpu_bytes():
+    from repro.core import cost_model
+    from repro.core.fixedpoint import FixedPointType
+    p = dus.build_extended()
+    types = {n: FixedPointType(10, 0, True) for n in p.stages}
+    ph = {"resS": ((2, 1), {(0, 0): FixedPointType(8, 0, True),
+                           (1, 0): FixedPointType(8, 0, True)})}
+    base = cost_model.design_cost(p, types)
+    split = cost_model.design_cost(p, types, phase_types=ph)
+    assert split.bytes_per_pixel_tpu < base.bytes_per_pixel_tpu
