@@ -48,6 +48,28 @@ def _load(path):
             for r in data["rows"]}
 
 
+# provenance note SmtPass writes when analyze_smt's time budget ran out on a
+# stage and the interval seed was kept (see repro.smt.optimize)
+_STARVED_NOTE = "budget-exhausted (seed kept): "
+
+
+def _starved(path):
+    """group -> [stage, ...] whose smt alphas are interval seeds because the
+    SMT time budget was exhausted (from plan provenance notes; empty for the
+    legacy rows format, which carries no provenance)."""
+    with open(path) as f:
+        data = json.load(f)
+    out = {}
+    for g, plan in data.get("groups", {}).items():
+        for prov in plan.get("provenance", {}).values():
+            for note in prov.get("notes", []):
+                if note.startswith(_STARVED_NOTE):
+                    stages = [s.strip()
+                              for s in note[len(_STARVED_NOTE):].split(",")]
+                    out.setdefault(g, []).extend(s for s in stages if s)
+    return out
+
+
 def _golden_path():
     return GOLDEN_PLANS if os.path.exists(GOLDEN_PLANS) else GOLDEN_ROWS
 
@@ -59,6 +81,7 @@ def main() -> int:
     args = ap.parse_args()
     golden = _load(_golden_path())
     base = _load(BASELINE)
+    starved = _starved(_golden_path())
 
     groups = defaultdict(lambda: {"delta": 0, "moves": [], "new": 0})
     regressed = []
@@ -80,18 +103,28 @@ def main() -> int:
 
     if args.markdown:
         print("### table11 smt alpha delta vs baseline\n")
-        print("| benchmark | alpha bits moved | stages | new stages |")
-        print("|---|---|---|---|")
+        print("| benchmark | alpha bits moved | stages | new stages "
+              "| budget-starved |")
+        print("|---|---|---|---|---|")
         for g in sorted(set(k[0] for k in golden)):
             info = groups[g]
             moves = ", ".join(info["moves"]) or "—"
-            print(f"| {g} | {info['delta']:+d} | {moves} | {info['new']} |")
+            kept = ", ".join(sorted(set(starved.get(g, [])))) or "—"
+            print(f"| {g} | {info['delta']:+d} | {moves} | {info['new']} "
+                  f"| {kept} |")
     else:
         for g in sorted(set(k[0] for k in golden)):
             info = groups[g]
             moves = ", ".join(info["moves"]) or "none"
-            print(f"{g}: delta {info['delta']:+d} bits "
-                  f"({moves}; {info['new']} new stages)")
+            line = (f"{g}: delta {info['delta']:+d} bits "
+                    f"({moves}; {info['new']} new stages)")
+            kept = sorted(set(starved.get(g, [])))
+            if kept:
+                # these smt alphas are interval seeds, not converged values —
+                # re-run with a bigger time_budget_s before reading deltas
+                line += ("  [budget-exhausted, seed kept: "
+                         + ", ".join(kept) + "]")
+            print(line)
 
     if regressed:
         print(f"\nALPHA REGRESSION on {len(regressed)} stage(s): "

@@ -2,10 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.run             # all benchmarks
     PYTHONPATH=src python -m benchmarks.run --only table2_hcd_ranges,kernels
+    PYTHONPATH=src python -m benchmarks.run --only pipeline_throughput \
+        --trace trace_out                               # traced run
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
 benchmark body; derived = the benchmark's headline result).  Detailed rows
 go to benchmarks/results/<name>.json.
+
+``--trace <dir>`` runs every selected benchmark under a fresh `repro.obs`
+tracer with runtime range telemetry on, and writes two artifacts per
+benchmark into <dir>: ``<name>.trace.json`` (Chrome trace-event JSON —
+load in ui.perfetto.dev or chrome://tracing) and ``<name>.jsonl`` (the
+event stream ``python -m repro.obs.report`` summarizes).  Tracing changes
+no benchmark outputs (telemetry is read-only post-processing) but does
+add measurement overhead — don't compare traced timings against untraced
+ones.
 """
 from __future__ import annotations
 
@@ -279,6 +290,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names")
+    ap.add_argument("--trace", default="", metavar="DIR",
+                    help="run each benchmark under a repro.obs tracer "
+                         "(runtime range telemetry on) and write "
+                         "DIR/<name>.trace.json + DIR/<name>.jsonl")
     args = ap.parse_args()
     _register()
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
@@ -286,12 +301,23 @@ def main() -> None:
     here = os.path.dirname(os.path.abspath(__file__))
     outdir = os.path.join(here, "results")
     os.makedirs(outdir, exist_ok=True)
+    if args.trace:
+        from repro import obs
+        os.makedirs(args.trace, exist_ok=True)
 
     print("name,us_per_call,derived")
     for name in names:
         fn = BENCHES[name]
         t0 = time.perf_counter()
-        rows, derived = fn()
+        if args.trace:
+            with obs.tracing(runtime_ranges=True) as tr:
+                rows, derived = fn()
+            obs.write_jsonl(tr, os.path.join(args.trace, f"{name}.jsonl"))
+            obs.write_chrome_trace(
+                tr, os.path.join(args.trace, f"{name}.trace.json"),
+                process_name=f"repro:{name}")
+        else:
+            rows, derived = fn()
         us = (time.perf_counter() - t0) * 1e6
         print(f"{name},{us:.0f},\"{derived}\"", flush=True)
         with open(os.path.join(outdir, f"{name}.json"), "w") as f:

@@ -124,6 +124,34 @@ def main():
     print(f"   PSNR(fixed vs float): "
           f"{psnr(ref['out'], fix['out']):.1f} dB")
 
+    print("\n== traced compile + execution (docs/observability.md) ==")
+    # the whole compile path emits spans into one repro.obs trace; with
+    # runtime_ranges=True the executed stages also report observed range,
+    # saturation, and alpha headroom (plan bits this input did not need)
+    from repro import obs
+    from repro.obs import report
+    from repro.pipelines import usm
+
+    upipe = usm.build()
+    with obs.tracing(runtime_ranges=True) as tr:
+        uplan = run_plan(upipe, ["interval", SmtPass()],
+                         default_column="smt")
+        run_fixed(upipe, natural_image((48, 48), seed=5), uplan,
+                  usm.DEFAULT_PARAMS, backend="lowered")
+    total_us = sum(s.t1 - s.t0 for s in tr.spans("analysis.pass")) * 1e6
+    print(f"   plan time breakdown ({total_us:.0f} us across "
+          f"{len(tr.spans('analysis.pass'))} passes):")
+    for s in tr.spans("analysis.pass"):
+        print(f"     {s.attrs['pass']:10s} {(s.t1 - s.t0) * 1e6:8.0f} us  "
+              f"memo={s.attrs['memo']}")
+    summary = report.summarize(obs.to_jsonl_records(tr))
+    table = report.render({"passes": [], "smt_stages": [],
+                           "runtime": summary["runtime"]})
+    print("   " + table.replace("\n", "\n   ").rstrip())
+    # export for perfetto (ui.perfetto.dev) / the report CLI:
+    #   obs.write_chrome_trace(tr, "usm.trace.json")
+    #   obs.write_jsonl(tr, "usm.jsonl")
+
 
 if __name__ == "__main__":
     main()

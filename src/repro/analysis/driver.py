@@ -18,6 +18,7 @@ import os
 import warnings
 from typing import Dict, List, Optional, Sequence
 
+from repro import obs
 from repro.core.graph import Pipeline
 from repro.core.interval import Interval
 
@@ -25,15 +26,18 @@ from repro.analysis.plan import BitwidthPlan, Provenance
 from repro.analysis.passes import AnalysisPass, PassResult, make_pass
 
 _MEMO: Dict[tuple, PassResult] = {}
-MEMO_STATS = {"hits": 0, "misses": 0}
+# Registered obs counter groups (locked `.add()`, explicit `.reset()`) that
+# remain byte-compatible dicts for every legacy reader.
+MEMO_STATS = obs.CounterGroup("analysis.memo", hits=0, misses=0)
 # disk-backed plan cache (`run_plan(cache_dir=...)`)
-DISK_CACHE_STATS = {"hits": 0, "misses": 0, "writes": 0, "skips": 0}
+DISK_CACHE_STATS = obs.CounterGroup("analysis.disk_cache",
+                                    hits=0, misses=0, writes=0, skips=0)
 
 
 def clear_memo() -> None:
     _MEMO.clear()
-    MEMO_STATS.update(hits=0, misses=0)
-    DISK_CACHE_STATS.update(hits=0, misses=0, writes=0, skips=0)
+    MEMO_STATS.reset()
+    DISK_CACHE_STATS.reset()
 
 
 def pipeline_content_hash(pipeline: Pipeline) -> str:
@@ -69,14 +73,19 @@ class _Context:
 
     def run(self, p: AnalysisPass) -> PassResult:
         key = (self.pipe_hash, _input_ranges_key(self.input_ranges), p.key())
-        hit = _MEMO.get(key)
-        if hit is not None:
-            MEMO_STATS["hits"] += 1
-            return hit
-        MEMO_STATS["misses"] += 1
-        res = p.run(self)
-        _MEMO[key] = res
-        return res
+        with obs.span("analysis.pass", **{"pass": p.name},
+                      column=p.column, key=p.key()) as sp:
+            hit = _MEMO.get(key)
+            if hit is not None:
+                MEMO_STATS.add("hits")
+                sp.set(memo="hit")
+                return hit
+            MEMO_STATS.add("misses")
+            sp.set(memo="miss")
+            res = p.run(self)
+            sp.set(notes=len(res.notes))
+            _MEMO[key] = res
+            return res
 
     def with_input_ranges(self, ir: Dict[str, Interval]) -> "_Context":
         return dataclasses.replace(self, input_ranges=ir)
@@ -122,49 +131,55 @@ def run_plan(pipeline: Pipeline, passes: Sequence,
     """
     resolved: List[AnalysisPass] = [make_pass(p) for p in passes]
     pipe_hash = pipeline_content_hash(pipeline)
-    cache_path = None
-    if cache_dir is not None:
-        key = _disk_cache_key(pipe_hash, resolved, input_ranges, betas,
-                              default_column)
-        if key is None:
-            DISK_CACHE_STATS["skips"] += 1
-            warnings.warn(
-                "plan disk cache skipped: a pass key is process-local "
-                "(custom profile runner); pass key_suffix= for a stable "
-                "identity", RuntimeWarning, stacklevel=2)
-        else:
-            cache_path = os.path.join(
-                cache_dir, f"{pipeline.name}-{pipe_hash}-{key}.plan.json")
-            if os.path.exists(cache_path):
-                try:
-                    with open(cache_path) as f:
-                        plan = BitwidthPlan.from_json(f.read())
-                    if plan.content_hash == pipe_hash:
-                        DISK_CACHE_STATS["hits"] += 1
-                        return plan
-                except (OSError, ValueError, KeyError):
-                    pass          # corrupt entry: fall through and rewrite
-            DISK_CACHE_STATS["misses"] += 1
-    ctx = _Context(pipeline=pipeline, input_ranges=input_ranges,
-                   pipe_hash=pipe_hash)
-    plan = BitwidthPlan(pipeline=pipeline.name, content_hash=ctx.pipe_hash,
-                        betas=dict(betas or {}))
-    for p in resolved:
-        res = ctx.run(p)
-        plan.add_column(p.column, res.stage_ranges(),
-                        Provenance(pass_name=p.name, spec=p.key(),
-                                   notes=list(res.notes)),
-                        phases=res.phase_stage_ranges())
-    if default_column:
-        plan.default_column = default_column
-    if cache_path is not None:
-        os.makedirs(cache_dir, exist_ok=True)
-        tmp = cache_path + ".tmp"
-        with open(tmp, "w") as f:
-            f.write(plan.to_json())
-        os.replace(tmp, cache_path)
-        DISK_CACHE_STATS["writes"] += 1
-    return plan
+    with obs.span("analysis.run_plan", pipeline=pipeline.name,
+                  hash=pipe_hash, n_passes=len(resolved)) as sp:
+        cache_path = None
+        if cache_dir is not None:
+            key = _disk_cache_key(pipe_hash, resolved, input_ranges, betas,
+                                  default_column)
+            if key is None:
+                DISK_CACHE_STATS.add("skips")
+                sp.set(disk_cache="skip")
+                warnings.warn(
+                    "plan disk cache skipped: a pass key is process-local "
+                    "(custom profile runner); pass key_suffix= for a stable "
+                    "identity", RuntimeWarning, stacklevel=2)
+            else:
+                cache_path = os.path.join(
+                    cache_dir, f"{pipeline.name}-{pipe_hash}-{key}.plan.json")
+                if os.path.exists(cache_path):
+                    try:
+                        with open(cache_path) as f:
+                            plan = BitwidthPlan.from_json(f.read())
+                        if plan.content_hash == pipe_hash:
+                            DISK_CACHE_STATS.add("hits")
+                            sp.set(disk_cache="hit")
+                            return plan
+                    except (OSError, ValueError, KeyError):
+                        pass      # corrupt entry: fall through and rewrite
+                DISK_CACHE_STATS.add("misses")
+                sp.set(disk_cache="miss")
+        ctx = _Context(pipeline=pipeline, input_ranges=input_ranges,
+                       pipe_hash=pipe_hash)
+        plan = BitwidthPlan(pipeline=pipeline.name,
+                            content_hash=ctx.pipe_hash,
+                            betas=dict(betas or {}))
+        for p in resolved:
+            res = ctx.run(p)
+            plan.add_column(p.column, res.stage_ranges(),
+                            Provenance(pass_name=p.name, spec=p.key(),
+                                       notes=list(res.notes)),
+                            phases=res.phase_stage_ranges())
+        if default_column:
+            plan.default_column = default_column
+        if cache_path is not None:
+            os.makedirs(cache_dir, exist_ok=True)
+            tmp = cache_path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(plan.to_json())
+            os.replace(tmp, cache_path)
+            DISK_CACHE_STATS.add("writes")
+        return plan
 
 
 def one_pass_ranges(pipeline: Pipeline, domain, input_ranges=None):

@@ -131,14 +131,24 @@ class SmtPass:
     def run(self, ctx: PassContext) -> PassResult:
         from repro.smt import analyze_smt
         collect: Optional[Dict] = {} if self.phases else None
+        diag: Dict = {}
         res = analyze_smt(ctx.pipeline, input_ranges=ctx.input_ranges,
-                          config=self._config(), collect_phases=collect)
+                          config=self._config(), collect_phases=collect,
+                          diagnostics=diag)
         phases = None
         if collect:
             phases = {stage: (lat, dict(rmap))
                       for stage, (lat, rmap) in collect.items()}
+        notes = []
+        starved = diag.get("budget_exhausted") or []
+        if starved:
+            # lands in plan provenance (and thus serialized plan JSON), so
+            # downstream readers — benchmarks/alpha_delta.py — can flag
+            # seed-kept alphas instead of treating them as converged
+            notes.append("budget-exhausted (seed kept): "
+                         + ", ".join(starved))
         return PassResult(ranges={n: r.range for n, r in res.items()},
-                          phases=phases)
+                          phases=phases, notes=notes)
 
 
 def _hash_images(images) -> str:

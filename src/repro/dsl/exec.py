@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.absval import Domain, get_domain
 from repro.core.fixedpoint import FixedPointType, fix_round
 from repro.core.graph import (BinOp, Call, Cmp, Const, Expr, ParamRef,
@@ -151,42 +152,51 @@ def _run_concrete(pipeline: Pipeline, image, params: Dict[str, float],
         inputs = {input_names[0]: image}
     for name in pipeline.topo_order():
         st = pipeline.stages[name]
-        if st.is_input:
-            out = xp.asarray(inputs[name],
-                             dtype=jnp.float32 if xp is jnp else np.float64)
-        else:
-            in_shape = shapes[st.inputs[0]]
-            out_shape = _stage_out_shape(st, in_shape)
-            padded = _pad_inputs(env, st, xp)
-            out = _eval_concrete(st.expr, padded, st.halo_yx(), out_shape,
-                                 params, xp, where)
-            sy, sx = st.stride
-            if sy > 1 or sx > 1:
-                out = out[::sy, ::sx]
-        if types is not None:
-            t = types.get(name)
-            raw = out
-            if t is not None:
-                out = _snap(raw, t, xp)
-            if phase_types is not None and name in phase_types:
-                # per-phase datapaths: each output-phase residue of the
-                # sampling lattice gets its own (alpha, beta) type, exactly
-                # like the per-residue line buffers a phase-split design
-                # would synthesize.  Residues missing from the map keep the
-                # union-column type applied above.  Each residue's strided
-                # subarray is snapped on its own — no full-array pass per
-                # phase.
-                (my, mx), tmap = phase_types[name]
-                if xp is not jnp:
-                    out = np.array(out, copy=True)
-                for (ry, rx), t_ph in sorted(tmap.items()):
-                    q = _snap(raw[ry::my, rx::mx], t_ph, xp)
-                    if xp is jnp:
-                        out = out.at[ry::my, rx::mx].set(q)
-                    else:
-                        out[ry::my, rx::mx] = q
+        with obs.span("exec.stage", stage=name, input=st.is_input):
+            if st.is_input:
+                out = xp.asarray(inputs[name],
+                                 dtype=jnp.float32 if xp is jnp
+                                 else np.float64)
+            else:
+                in_shape = shapes[st.inputs[0]]
+                out_shape = _stage_out_shape(st, in_shape)
+                padded = _pad_inputs(env, st, xp)
+                out = _eval_concrete(st.expr, padded, st.halo_yx(),
+                                     out_shape, params, xp, where)
+                sy, sx = st.stride
+                if sy > 1 or sx > 1:
+                    out = out[::sy, ::sx]
+            if types is not None:
+                t = types.get(name)
+                raw = out
+                if t is not None:
+                    out = _snap(raw, t, xp)
+                if phase_types is not None and name in phase_types:
+                    # per-phase datapaths: each output-phase residue of the
+                    # sampling lattice gets its own (alpha, beta) type,
+                    # exactly like the per-residue line buffers a
+                    # phase-split design would synthesize.  Residues
+                    # missing from the map keep the union-column type
+                    # applied above.  Each residue's strided subarray is
+                    # snapped on its own — no full-array pass per phase.
+                    (my, mx), tmap = phase_types[name]
+                    if xp is not jnp:
+                        out = np.array(out, copy=True)
+                    for (ry, rx), t_ph in sorted(tmap.items()):
+                        q = _snap(raw[ry::my, rx::mx], t_ph, xp)
+                        if xp is jnp:
+                            out = out.at[ry::my, rx::mx].set(q)
+                        else:
+                            out[ry::my, rx::mx] = q
         env[name] = out
         shapes[name] = tuple(out.shape)
+        if obs.runtime_ranges_enabled():
+            # read-only: measures the already-snapped stage value, never
+            # feeds back into the computation (bit-exactness preserved)
+            obs.runtime.record_stage(
+                name, out, types.get(name) if types is not None else None,
+                (phase_types or {}).get(name),
+                backend="interp" if xp is np else "jax")
     return env
 
 
@@ -204,6 +214,10 @@ def run_float(pipeline: Pipeline, image, params: Dict[str, float] | None = None,
 # entries.  Small FIFO cap — executors pin jit caches.
 _LOWERED_MEMO: Dict[tuple, Callable] = {}
 _LOWERED_MEMO_CAP = 16
+# executor-memo disposition (obs counter group: locked, resettable; shows
+# whether benchmark loops actually reuse their fused programs)
+EXEC_CACHE_STATS = obs.CounterGroup("lowering.executor_cache",
+                                    hits=0, misses=0)
 
 
 def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
@@ -217,6 +231,9 @@ def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
            repr(sorted(params.items())), backend, column)
     fn = _LOWERED_MEMO.get(key)
     if fn is None:
+        EXEC_CACHE_STATS.add("misses")
+        obs.event("exec.executor_cache", result="miss", backend=backend,
+                  pipeline=pipeline.name)
         from repro.lowering import compile_pipeline
         be = "jnp" if backend == "lowered" else "pallas"
         outs = list(pipeline.stages) if be == "jnp" else None
@@ -225,6 +242,10 @@ def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
         while len(_LOWERED_MEMO) >= _LOWERED_MEMO_CAP:
             _LOWERED_MEMO.pop(next(iter(_LOWERED_MEMO)))
         _LOWERED_MEMO[key] = fn
+    else:
+        EXEC_CACHE_STATS.add("hits")
+        obs.event("exec.executor_cache", result="hit", backend=backend,
+                  pipeline=pipeline.name)
     return fn
 
 

@@ -21,6 +21,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.fixedpoint import FixedPointType
 from repro.lowering.ir import (LoweredPipeline, LoweredStage, LoweringError,
                                PhaseSnap, lower)
@@ -262,12 +263,17 @@ def compile_jnp(lp: LoweredPipeline,
         if params_override is not None and dict(params_override) != params:
             raise ValueError("params are baked at compile time; re-lower "
                              "with the new params")
-        imgs, _ = normalize_images(lp, image)
-        with enable_x64():
-            arrs = tuple(jnp.asarray(np.asarray(im), dtype=jnp.float64)
-                         for im in imgs)
-            out = jitted(*arrs)
-            return {k: np.asarray(v) for k, v in out.items()}
+        with obs.span("exec.lowered", backend="jnp",
+                      pipeline=lp.pipeline.name, outputs=len(outs)):
+            imgs, _ = normalize_images(lp, image)
+            with enable_x64():
+                arrs = tuple(jnp.asarray(np.asarray(im), dtype=jnp.float64)
+                             for im in imgs)
+                out = jitted(*arrs)
+                res = {k: np.asarray(v) for k, v in out.items()}
+        # read-only post-processing: never feeds back into the computation
+        obs.runtime.record_env(res, lp, backend="jnp")
+        return res
 
     run.lowered = lp          # introspection hook for tests/benchmarks
     return run
@@ -286,9 +292,13 @@ def compile_interp(lp: LoweredPipeline,
 
     def run(image, params_override=None):
         from repro.dsl.exec import _run_concrete
-        env = _run_concrete(lp.pipeline, image,
-                            dict(params_override or lp.params), lp.types,
-                            xp=np, phase_types=phase_types or None)
+        with obs.span("exec.interp", backend="interp",
+                      pipeline=lp.pipeline.name, outputs=len(outs)):
+            # per-stage spans + runtime range telemetry live inside
+            # `_run_concrete` (it sees every intermediate stage value)
+            env = _run_concrete(lp.pipeline, image,
+                                dict(params_override or lp.params), lp.types,
+                                xp=np, phase_types=phase_types or None)
         return {k: np.asarray(env[k]) for k in outs}
 
     run.lowered = lp
@@ -322,4 +332,9 @@ def compile_backend(lp: LoweredPipeline, backend: str = "jnp",
         raise LoweringError(
             f"unknown lowering backend {backend!r}; "
             f"registered: {sorted(BACKENDS)}") from None
-    return factory(lp, outputs=outputs, **kw)
+    kinds = lp.kinds()
+    with obs.span("lowering.compile", backend=backend,
+                  pipeline=lp.pipeline.name, n_stages=len(lp.stages),
+                  intlinear=sum(1 for k in kinds.values()
+                                if k == "intlinear")):
+        return factory(lp, outputs=outputs, **kw)

@@ -274,6 +274,7 @@ def lower(pipeline: Pipeline, types, params: Optional[Dict[str, float]] = None,
     supplies its `column` types plus per-phase sub-types; a plain dict is
     a per-stage union type map.
     """
+    from repro import obs
     phase_types = {}
     col = column
     if hasattr(types, "phase_types"):            # BitwidthPlan (duck-typed)
@@ -281,42 +282,48 @@ def lower(pipeline: Pipeline, types, params: Optional[Dict[str, float]] = None,
         phase_types = plan.phase_types(column) or {}
         col = column or getattr(plan, "default_column", None)
         types = plan.types(column)
-    tmap: Dict[str, Optional[FixedPointType]] = {
-        n: types.get(n) for n in pipeline.stages}
-    stages: Dict[str, LoweredStage] = {}
-    order = pipeline.topo_order()
-    # stages whose values backends must keep as floats (no single scaled-int
-    # grid): untyped, wider than a double's mantissa, or residue-mixed-beta.
-    # Their consumers cannot take the integer path.
-    float_stored: set = set()
-    for name in order:
-        st = pipeline.stages[name]
-        t_out = tmap.get(name)
-        halo = st.halo_yx()
-        phase = None
-        if name in phase_types and t_out is not None:
-            phase = _phase_snap(t_out, phase_types[name])
-        sf = (t_out is None or t_out.width > 52
-              or (phase is not None and not phase.int_ok))
-        if sf:
-            float_stored.add(name)
-        if st.is_input:
-            stages[name] = LoweredStage(name=name, kind="input", stage=st,
-                                        t=t_out, halo=(0, 0), store_float=sf)
-            continue
-        lin = match_linear(st.expr) if t_out is not None else None
-        plan_int = None
-        if lin is not None and not sf \
-                and not any(i in float_stored for i in st.inputs):
-            plan_int = _plan_intlinear(st, lin[0], lin[1], t_out,
-                                       {i: tmap.get(i) for i in st.inputs})
-        if plan_int is not None:
-            stages[name] = LoweredStage(name=name, kind="intlinear", stage=st,
-                                        t=t_out, halo=halo, phase=phase,
-                                        **plan_int)
-        else:
-            stages[name] = LoweredStage(name=name, kind="expr", stage=st,
-                                        t=t_out, halo=halo, phase=phase,
-                                        store_float=sf)
+    with obs.span("lowering.lower", pipeline=pipeline.name, column=col,
+                  n_stages=len(pipeline.stages)) as sp:
+        tmap: Dict[str, Optional[FixedPointType]] = {
+            n: types.get(n) for n in pipeline.stages}
+        stages: Dict[str, LoweredStage] = {}
+        order = pipeline.topo_order()
+        # stages whose values backends must keep as floats (no single
+        # scaled-int grid): untyped, wider than a double's mantissa, or
+        # residue-mixed-beta.  Their consumers cannot take the integer path.
+        float_stored: set = set()
+        for name in order:
+            st = pipeline.stages[name]
+            t_out = tmap.get(name)
+            halo = st.halo_yx()
+            phase = None
+            if name in phase_types and t_out is not None:
+                phase = _phase_snap(t_out, phase_types[name])
+            sf = (t_out is None or t_out.width > 52
+                  or (phase is not None and not phase.int_ok))
+            if sf:
+                float_stored.add(name)
+            if st.is_input:
+                stages[name] = LoweredStage(name=name, kind="input", stage=st,
+                                            t=t_out, halo=(0, 0),
+                                            store_float=sf)
+                continue
+            lin = match_linear(st.expr) if t_out is not None else None
+            plan_int = None
+            if lin is not None and not sf \
+                    and not any(i in float_stored for i in st.inputs):
+                plan_int = _plan_intlinear(st, lin[0], lin[1], t_out,
+                                           {i: tmap.get(i)
+                                            for i in st.inputs})
+            if plan_int is not None:
+                stages[name] = LoweredStage(name=name, kind="intlinear",
+                                            stage=st, t=t_out, halo=halo,
+                                            phase=phase, **plan_int)
+            else:
+                stages[name] = LoweredStage(name=name, kind="expr", stage=st,
+                                            t=t_out, halo=halo, phase=phase,
+                                            store_float=sf)
+        kinds = [s.kind for s in stages.values()]
+        sp.set(intlinear=kinds.count("intlinear"), expr=kinds.count("expr"))
     return LoweredPipeline(pipeline=pipeline, stages=stages, order=order,
                            params=dict(params or {}), types=tmap, column=col)

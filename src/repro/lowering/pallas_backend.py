@@ -28,6 +28,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.lowering import backends as B
 from repro.lowering.ir import LoweredPipeline, LoweredStage, LoweringError
 from repro.lowering.schedule import Schedule, build_schedule
@@ -109,24 +110,33 @@ def compile_pallas(lp: LoweredPipeline,
                              "with the new params")
         imgs, _ = B.normalize_images(lp, image)
         img_of = dict(zip(lp.pipeline.input_stages(), imgs))
-        with enable_x64():
-            arrays = []
-            shape = None
-            for n in input_names:
-                x = jnp.asarray(np.asarray(img_of[n]), dtype=jnp.float64)
-                if shape is None:
-                    shape = tuple(x.shape)
-                elif tuple(x.shape) != shape:
-                    raise LoweringError("all pipeline inputs must share one "
-                                        f"shape; got {shape} vs {x.shape}")
-                arrays.append(B.quantize_input(
-                    x, lp.stages[n].t, B.store_dtype(lp.stages[n]), jnp))
-            key = shape
-            if key not in cache:
-                cache[key] = build(shape)
-            out_arrays = cache[key](*arrays)
-            res = {n: np.asarray(B.dequant(lp.stages[n], arr))
-                   for n, arr in zip(outs, out_arrays)}
+        with obs.span("exec.pallas", backend="pallas",
+                      pipeline=lp.pipeline.name, outputs=len(outs)) as sp:
+            with enable_x64():
+                arrays = []
+                shape = None
+                for n in input_names:
+                    x = jnp.asarray(np.asarray(img_of[n]), dtype=jnp.float64)
+                    if shape is None:
+                        shape = tuple(x.shape)
+                    elif tuple(x.shape) != shape:
+                        raise LoweringError("all pipeline inputs must share "
+                                            f"one shape; got {shape} vs "
+                                            f"{x.shape}")
+                    arrays.append(B.quantize_input(
+                        x, lp.stages[n].t, B.store_dtype(lp.stages[n]), jnp))
+                key = shape
+                if key not in cache:
+                    sp.set(kernel_cache="miss")
+                    cache[key] = build(shape)
+                else:
+                    sp.set(kernel_cache="hit")
+                out_arrays = cache[key](*arrays)
+                res = {n: np.asarray(B.dequant(lp.stages[n], arr))
+                       for n, arr in zip(outs, out_arrays)}
+        # fused kernel: intermediates never leave the band, so telemetry is
+        # limited to the pipeline outputs (read-only post-processing)
+        obs.runtime.record_env(res, lp, backend="pallas")
         return res
 
     run.lowered = lp

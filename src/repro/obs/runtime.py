@@ -1,0 +1,129 @@
+"""Runtime range telemetry — per-stage observed min/max, saturation, headroom.
+
+The paper's profile-driven analysis (§IV) bounds each stage's range from a
+handful of sample images *before* synthesis; this module closes the loop
+from the other side, measuring on the production execution path what the
+plan's alpha bits actually cover:
+
+  * **observed range** — finite min/max of the stage's (dequantized f64)
+    value array;
+  * **observed alpha** — `alpha_for_range` of that observed range, i.e.
+    the integral bits this run *needed*;
+  * **headroom** — plan alpha minus observed alpha: positive = the static
+    plan reserved more bits than this input exercised (a lower bound on
+    what a tighter analysis could reclaim), negative would mean runtime
+    values escaped the proven range (never, for certified plans);
+  * **saturation counts** — pixels sitting exactly on the type's clip
+    rails after the snap (`q == int_max`, plus `q == int_min` for signed
+    types; an unsigned lower rail of 0 would count every legitimate zero
+    pixel).  For stages with a `PhaseSnap`, each sampling-lattice residue
+    is counted against its own rails and a per-residue breakdown is
+    attached.
+
+Everything here is **read-only post-processing** of stage outputs — it
+never feeds back into the computation, which is how the tracing-enabled
+vs disabled bit-exactness guarantee holds trivially.  It only runs when
+the active tracer was created with `runtime_ranges=True` (opt-in: it
+materializes and scans every stage array).
+
+Events land in the shared stream as `rt.range` records; see
+`repro.obs.report` for the per-stage table and docs/observability.md for
+the schema.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from . import tracer as _tracer
+
+__all__ = ["enabled", "record_env", "record_stage"]
+
+
+def enabled() -> bool:
+    """True when an active tracer requested runtime range telemetry."""
+    return _tracer.runtime_ranges_enabled()
+
+
+def _rail_counts(q, t) -> Dict[str, int]:
+    """Pixels at the saturation rails of type `t` for qvalues `q`."""
+    import numpy as np
+    hi = int(np.count_nonzero(q >= t.int_max))
+    lo = int(np.count_nonzero(q <= t.int_min)) if t.int_min < 0 else 0
+    return {"lo": lo, "hi": hi}
+
+
+def record_stage(name: str, value, t=None, phase=None,
+                 backend: str = "?") -> Optional[dict]:
+    """Measure one stage value array and emit an `rt.range` event.
+
+    `t` is the stage's union `FixedPointType` (None = float stage: range
+    only, no saturation/headroom).  `phase` is either a
+    `lowering.ir.PhaseSnap` or the raw plan form `((My, Mx), {residue:
+    type})`; when given, saturation is counted per residue against that
+    residue's own rails.  Returns the attr dict (also for tests), or None
+    when telemetry is off.
+    """
+    tr = _tracer.active_tracer()
+    if tr is None or not tr.runtime_ranges:
+        return None
+    import numpy as np
+
+    v = np.asarray(value, dtype=np.float64)
+    finite = v[np.isfinite(v)] if not np.all(np.isfinite(v)) else v
+    attrs: Dict[str, Any] = {"stage": name, "backend": backend,
+                             "n": int(v.size)}
+    if finite.size:
+        vmin = float(finite.min())
+        vmax = float(finite.max())
+        attrs["min"] = vmin
+        attrs["max"] = vmax
+        from repro.core.fixedpoint import alpha_for_range
+        attrs["alpha_obs"] = int(alpha_for_range(vmin, vmax))
+    if t is not None:
+        attrs["type"] = str(t)
+        attrs["alpha_plan"] = int(t.alpha)
+        if "alpha_obs" in attrs:
+            attrs["headroom"] = attrs["alpha_plan"] - attrs["alpha_obs"]
+        # saturation: snap back to qvalues (stage arrays are already
+        # on-grid, so rint is exact) and count rail hits
+        lattice = types = None
+        if phase is not None:
+            lattice = getattr(phase, "lattice", None)
+            types = getattr(phase, "types", None)
+            if lattice is None:       # raw plan entry ((My, Mx), {res: t})
+                lattice, types = phase
+        if lattice is not None and v.ndim == 2:
+            my, mx = lattice
+            sat_lo = sat_hi = 0
+            per_res = {}
+            for ry in range(my):
+                for rx in range(mx):
+                    t_res = types.get((ry, rx), t)
+                    sub = v[ry::my, rx::mx]
+                    q = np.rint(sub * (2.0 ** t_res.beta))
+                    c = _rail_counts(q, t_res)
+                    sat_lo += c["lo"]
+                    sat_hi += c["hi"]
+                    if c["lo"] or c["hi"]:
+                        per_res[f"{ry},{rx}"] = c["lo"] + c["hi"]
+            attrs["sat_phases"] = per_res
+        else:
+            q = np.rint(v * (2.0 ** t.beta))
+            c = _rail_counts(q, t)
+            sat_lo, sat_hi = c["lo"], c["hi"]
+        attrs["sat_lo"] = sat_lo
+        attrs["sat_hi"] = sat_hi
+        attrs["sat"] = sat_lo + sat_hi
+    tr.event("rt.range", **attrs)
+    return attrs
+
+
+def record_env(env: Dict[str, Any], lp, backend: str) -> None:
+    """Measure every stage present in `env` against a `LoweredPipeline`'s
+    per-stage types (backends call this after execution)."""
+    if not enabled():
+        return
+    for n in lp.order:
+        if n in env:
+            ls = lp.stages[n]
+            record_stage(n, env[n], ls.t, ls.phase, backend=backend)

@@ -29,6 +29,8 @@ is the complete integration surface (§IV-C).  The registry lazy-loads this
 package on first use of the name, so the import is rarely explicit.
 """
 from repro.smt import domain as _domain   # registers "smt" + "smt-scalar"
-from repro.smt.optimize import SMTConfig, alpha_table_smt, analyze_smt
+from repro.smt.optimize import (BudgetExhaustedWarning, SMTConfig,
+                                alpha_table_smt, analyze_smt)
 
-__all__ = ["SMTConfig", "analyze_smt", "alpha_table_smt"]
+__all__ = ["BudgetExhaustedWarning", "SMTConfig", "analyze_smt",
+           "alpha_table_smt"]

@@ -24,8 +24,10 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Dict, Optional
 
+from repro import obs
 from repro.core.graph import Pipeline
 from repro.core.interval import Interval
 from repro.core.range_analysis import StageRange, analyze
@@ -35,6 +37,16 @@ from repro.smt.encoder import (CSP, closure_is_sampled, encode_stage,
                                encode_stage_phases, sampling_lattice)
 
 _INF = math.inf
+
+
+class BudgetExhaustedWarning(RuntimeWarning):
+    """A stage kept its interval seed because `time_budget_s` ran out.
+
+    The stage's alpha is still *sound* (the seed is a valid over-
+    approximation) but should not be read as the converged SMT answer —
+    `benchmarks/alpha_delta.py` annotates such stages, and the
+    `smt.budget_exhausted` obs event carries the same information in
+    traces."""
 
 
 @dataclasses.dataclass
@@ -278,17 +290,21 @@ def tighten_stage_phases(entries, seed: Interval, cfg: SMTConfig,
     # certified initial pass per phase: HC4 + affine relaxation on full box
     iv: Optional[Interval] = None
     all_linear = True
-    for csp, root in entries:
-        box = list(csp.init)
-        m = S._meet(box[root], seed)
-        if m is None:
-            continue            # seed excludes this phase's root box entirely
-        box[root] = m
-        if not (S.hc4(csp, box, cfg.hc4_rounds) and S.affine_sweep(csp, box)
-                and S.hc4(csp, box, 2)):
-            return seed         # should not happen (seed is sound); bail out
-        iv = box[root] if iv is None else iv.join(box[root])
-        all_linear &= csp.is_linear()
+    for pi, (csp, root) in enumerate(entries):
+        with obs.span("smt.phase", phase=pi, nvars=csp.nvars) as psp:
+            box = list(csp.init)
+            m = S._meet(box[root], seed)
+            if m is None:
+                psp.set(pruned=True)
+                continue        # seed excludes this phase's root box entirely
+            box[root] = m
+            if not (S.hc4(csp, box, cfg.hc4_rounds)
+                    and S.affine_sweep(csp, box) and S.hc4(csp, box, 2)):
+                return seed     # should not happen (seed is sound); bail out
+            iv = box[root] if iv is None else iv.join(box[root])
+            all_linear &= csp.is_linear()
+            psp.set(linear=csp.is_linear(),
+                    hull=[box[root].lo, box[root].hi])
     if iv is None:
         return seed
     if all_linear:
@@ -353,6 +369,7 @@ def analyze_smt(pipeline: Pipeline,
                 input_ranges: Optional[Dict[str, Interval]] = None,
                 config: Optional[SMTConfig] = None,
                 collect_phases: Optional[Dict] = None,
+                diagnostics: Optional[Dict] = None,
                 ) -> Dict[str, StageRange]:
     """Whole-DAG range analysis — drop-in for `range_analysis.analyze` with
     `domain="smt"`, returning the same per-stage 3-tuples.
@@ -368,6 +385,15 @@ def analyze_smt(pipeline: Pipeline,
     {(ry, rx): Interval})}``.  Collection is read-only — the union bounds
     this function returns are identical with or without it; the sub-ranges
     feed `BitwidthPlan` phase columns (one datapath per lattice residue).
+
+    `diagnostics`, when a dict, receives ``{"budget_exhausted": [stage,
+    ...]}`` — the stages that kept their interval seed because
+    `time_budget_s` ran out.  Each such stage also raises a
+    `BudgetExhaustedWarning` and emits an `smt.budget_exhausted` obs
+    event, so budget-starved alphas are never silently mistaken for
+    converged ones.  When tracing is enabled every worked stage gets an
+    `smt.stage` span (boxes explored, budget granted vs consumed,
+    verdict, deadline-exhaustion flag) with `smt.phase` child spans.
     """
     cfg = config or SMTConfig()
     seed = analyze(pipeline, "interval", input_ranges=input_ranges)
@@ -378,69 +404,109 @@ def analyze_smt(pipeline: Pipeline,
             if not pipeline.stages[n].is_input and bounds[n].width > 0}
     n_left = len(work)
     out: Dict[str, StageRange] = {}
-    for name in topo:
-        iv = bounds[name]
-        phase_entries = None
-        now = time.monotonic()
-        if name in work and now < deadline:
-            # fair-share time slicing: with the batched engine's large
-            # per-query budgets a single greedy stage could otherwise eat
-            # the whole pipeline budget and leave deep stages (where the
-            # whole-DAG analysis wins most) with their interval seeds.
-            # Each stage may use up to 2x its equal share of the remaining
-            # time; unused time rolls over to later stages.
-            slice_s = 2.0 * (deadline - now) / max(n_left, 1)
-            stage_deadline = min(deadline, now + max(slice_s, 0.5))
-            entries = None
-            if cfg.phase_split and closure_is_sampled(pipeline, name):
-                # phase-split: exactly-aligned expansion per output-phase
-                # residue; None = no uniform lattice / too many phases —
-                # fall back to the alignment-blind cut encoding below
-                entries = encode_stage_phases(pipeline, name, bounds,
-                                              input_ranges=input_ranges,
-                                              max_vars=cfg.max_vars,
-                                              max_phases=cfg.max_phases)
-            if entries is None:
-                entries = [encode_stage(pipeline, name, bounds,
-                                        input_ranges=input_ranges,
-                                        max_vars=cfg.max_vars)]
-            elif not all(c.is_linear() and "cut" not in c.kinds
-                         for c, _ in entries):
-                # nonlinear (or budget-cut) phases need search, and the
-                # exact expansions are much larger CSPs than the blind cut
-                # encoding — a fixed slice can leave them UNKNOWN where the
-                # small blind system converges.  Run the blind search on
-                # half the slice first and seed the phase pass with its
-                # result: the phase-split bound is then never looser than
-                # the alignment-blind one by construction.  (All-linear
-                # cut-free phases skip this: their union hull is exact.)
-                b_csp, b_root = encode_stage(pipeline, name, bounds,
-                                             input_ranges=input_ranges,
-                                             max_vars=cfg.max_vars)
-                now = time.monotonic()
-                b_deadline = min(stage_deadline,
-                                 now + 0.5 * (stage_deadline - now))
-                biv = tighten_stage_phases([(b_csp, b_root)], iv, cfg,
-                                           b_deadline)
-                m = S._meet(iv, biv)
-                iv = m if m is not None else iv
-            tiv = tighten_stage_phases(entries, iv, cfg, stage_deadline)
-            m = S._meet(iv, tiv)
-            iv = m if m is not None else iv
-            if len(entries) > 1:
-                phase_entries = entries
-        if name in work:
-            n_left -= 1
-        bounds[name] = iv
-        out[name] = StageRange.from_interval(iv)
-        if collect_phases is not None and phase_entries is not None:
-            lat = sampling_lattice(pipeline, name)
-            if lat is not None:
-                my, mx = lat
-                residues = [(ry, rx) for ry in range(my) for rx in range(mx)]
-                collect_phases[name] = (lat, {
-                    res: _certified_phase_hull(csp, root, iv, cfg)
-                    for res, (csp, root) in zip(residues, phase_entries)})
+    exhausted = []
+    asp = obs.span("smt.analyze", pipeline=pipeline.name, engine=cfg.engine,
+                   time_budget_s=cfg.time_budget_s, stages=len(work))
+    with asp:
+        for name in topo:
+            iv = bounds[name]
+            seed_iv = iv
+            phase_entries = None
+            now = time.monotonic()
+            stage_exhausted = False
+            if name in work and now < deadline:
+                # fair-share time slicing: with the batched engine's large
+                # per-query budgets a single greedy stage could otherwise eat
+                # the whole pipeline budget and leave deep stages (where the
+                # whole-DAG analysis wins most) with their interval seeds.
+                # Each stage may use up to 2x its equal share of the remaining
+                # time; unused time rolls over to later stages.
+                slice_s = 2.0 * (deadline - now) / max(n_left, 1)
+                stage_deadline = min(deadline, now + max(slice_s, 0.5))
+                ssp = obs.span("smt.stage", stage=name,
+                               budget_s=stage_deadline - now)
+                with ssp:
+                    t_stage = time.perf_counter()
+                    boxes0 = S.STATS["boxes"]
+                    entries = None
+                    if cfg.phase_split and closure_is_sampled(pipeline, name):
+                        # phase-split: exactly-aligned expansion per
+                        # output-phase residue; None = no uniform lattice /
+                        # too many phases — fall back to the alignment-blind
+                        # cut encoding below
+                        entries = encode_stage_phases(
+                            pipeline, name, bounds,
+                            input_ranges=input_ranges,
+                            max_vars=cfg.max_vars, max_phases=cfg.max_phases)
+                    if entries is None:
+                        entries = [encode_stage(pipeline, name, bounds,
+                                                input_ranges=input_ranges,
+                                                max_vars=cfg.max_vars)]
+                    elif not all(c.is_linear() and "cut" not in c.kinds
+                                 for c, _ in entries):
+                        # nonlinear (or budget-cut) phases need search, and
+                        # the exact expansions are much larger CSPs than the
+                        # blind cut encoding — a fixed slice can leave them
+                        # UNKNOWN where the small blind system converges.
+                        # Run the blind search on half the slice first and
+                        # seed the phase pass with its result: the
+                        # phase-split bound is then never looser than the
+                        # alignment-blind one by construction.  (All-linear
+                        # cut-free phases skip this: their union hull is
+                        # exact.)
+                        b_csp, b_root = encode_stage(
+                            pipeline, name, bounds,
+                            input_ranges=input_ranges, max_vars=cfg.max_vars)
+                        now = time.monotonic()
+                        b_deadline = min(stage_deadline,
+                                         now + 0.5 * (stage_deadline - now))
+                        biv = tighten_stage_phases([(b_csp, b_root)], iv,
+                                                   cfg, b_deadline)
+                        m = S._meet(iv, biv)
+                        iv = m if m is not None else iv
+                    tiv = tighten_stage_phases(entries, iv, cfg,
+                                               stage_deadline)
+                    m = S._meet(iv, tiv)
+                    iv = m if m is not None else iv
+                    if len(entries) > 1:
+                        phase_entries = entries
+                    unchanged = (iv.lo == seed_iv.lo and iv.hi == seed_iv.hi)
+                    stage_exhausted = (unchanged and
+                                       time.monotonic() >= stage_deadline)
+                    ssp.set(nvars=max(c.nvars for c, _ in entries),
+                            phases=len(entries),
+                            boxes=S.STATS["boxes"] - boxes0,
+                            consumed_s=time.perf_counter() - t_stage,
+                            verdict="seed" if unchanged else "tightened",
+                            range=[iv.lo, iv.hi],
+                            deadline_exhausted=stage_exhausted)
+            elif name in work:
+                # the pipeline budget ran out before this stage even started
+                stage_exhausted = True
+            if stage_exhausted:
+                exhausted.append(name)
+                obs.event("smt.budget_exhausted", stage=name,
+                          time_budget_s=cfg.time_budget_s)
+                warnings.warn(
+                    f"SMT stage {name!r} kept its interval seed: "
+                    f"time_budget_s={cfg.time_budget_s:g} exhausted",
+                    BudgetExhaustedWarning, stacklevel=2)
+            if name in work:
+                n_left -= 1
+            bounds[name] = iv
+            out[name] = StageRange.from_interval(iv)
+            if collect_phases is not None and phase_entries is not None:
+                lat = sampling_lattice(pipeline, name)
+                if lat is not None:
+                    my, mx = lat
+                    residues = [(ry, rx)
+                                for ry in range(my) for rx in range(mx)]
+                    collect_phases[name] = (lat, {
+                        res: _certified_phase_hull(csp, root, iv, cfg)
+                        for res, (csp, root) in zip(residues, phase_entries)})
+        asp.set(budget_exhausted=list(exhausted))
+    if diagnostics is not None:
+        diagnostics["budget_exhausted"] = list(exhausted)
     return out
 
 

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.affine import AffineForm
 from repro.core.interval import Interval
 
@@ -51,8 +52,11 @@ _MEET_SLACK = 1e-9     # relative slack absorbing float round-off in meets
 Box = List[Interval]
 
 # rolling throughput counters (benchmarks/run.py --only smt_throughput reads
-# these to report solver boxes/sec); reset freely, never used for logic
-STATS = {"boxes": 0, "secs": 0.0}
+# these to report solver boxes/sec); a registered obs counter group, so
+# mutation is locked and `STATS.reset()` restores the zeros between
+# `analyze_smt` runs — still a plain dict to every reader, never used for
+# solver logic
+STATS = obs.CounterGroup("smt.solver", boxes=0, secs=0.0)
 
 
 @dataclasses.dataclass
@@ -658,6 +662,13 @@ def decide_scalar_multi(entries, sense: str, threshold: float,
     requires refuting every phase, and the node budget / deadline is shared
     across all phases (one query costs one budget, phase-split or not).
     """
+    with obs.span("smt.decide", engine="scalar", phases=len(entries),
+                  sense=sense, threshold=threshold) as sp:
+        return _decide_scalar_multi(entries, sense, threshold, budget, sp)
+
+
+def _decide_scalar_multi(entries, sense: str, threshold: float,
+                         budget: Optional[BPBudget], sp) -> Verdict:
     t0 = time.perf_counter()
     bud = budget or BPBudget()
     maximize = sense == "ge"
@@ -673,15 +684,18 @@ def decide_scalar_multi(entries, sense: str, threshold: float,
         box0[root] = m
         stack.append((pi, box0))
     frozen: Dict[int, set] = {}
+    peak = len(stack)
 
     def _done(v: Verdict) -> Verdict:
-        STATS["boxes"] += v.nodes
-        STATS["secs"] += time.perf_counter() - t0
+        STATS.add("boxes", v.nodes)
+        STATS.add("secs", time.perf_counter() - t0)
+        sp.set(status=v.status, nodes=v.nodes, frontier_peak=peak)
         return v
 
     best: Optional[float] = None
     nodes = 0
     while stack:
+        peak = max(peak, len(stack))
         nodes += 1
         if nodes > bud.max_nodes or time.monotonic() > bud.deadline:
             return _done(Verdict(UNKNOWN, best, nodes - 1))
@@ -1661,6 +1675,13 @@ def decide_multi(entries, sense: str, threshold: float,
     through that phase's compiled op table.  SAT short-circuits on any
     phase; UNSAT certifies that *every* phase's frontier was refuted.
     """
+    with obs.span("smt.decide", engine="batched", phases=len(entries),
+                  sense=sense, threshold=threshold) as sp:
+        return _decide_multi(entries, sense, threshold, budget, sp)
+
+
+def _decide_multi(entries, sense: str, threshold: float,
+                  budget: Optional[BPBudget], sp) -> Verdict:
     t0 = time.perf_counter()
     bud = budget or BPBudget()
     progs = [compile_csp(c) for c, _ in entries]
@@ -1684,15 +1705,18 @@ def decide_multi(entries, sense: str, threshold: float,
         rows_hi.append(hi)
         rows_ph.append(pi)
     if not rows_lo:
+        sp.set(status=UNSAT, nodes=0, frontier_peak=0)
         return Verdict(UNSAT)
     f_lo = np.stack(rows_lo)
     f_hi = np.stack(rows_hi)
     f_ph = np.array(rows_ph, np.int32)
     f_score = np.zeros(len(rows_ph))
+    peak = f_lo.shape[0]
 
     def _done(v: Verdict) -> Verdict:
-        STATS["boxes"] += v.nodes
-        STATS["secs"] += time.perf_counter() - t0
+        STATS.add("boxes", v.nodes)
+        STATS.add("secs", time.perf_counter() - t0)
+        sp.set(status=v.status, nodes=v.nodes, frontier_peak=peak)
         return v
 
     frozen_sets: Dict[int, set] = {}
@@ -1700,6 +1724,7 @@ def decide_multi(entries, sense: str, threshold: float,
     nodes = 0
     stuck = False
     while f_lo.shape[0]:
+        peak = max(peak, f_lo.shape[0])
         remaining = bud.max_nodes - nodes
         if remaining <= 0 or time.monotonic() > bud.deadline:
             return _done(Verdict(UNKNOWN, best, nodes))
