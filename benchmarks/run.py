@@ -170,21 +170,38 @@ def _pipeline_throughput():
     dispatch overhead, not the datapath), REPRO_BENCH_REPS (default 8),
     REPRO_BENCH_PALLAS=0 to skip pallas timing (it is interpret-mode
     slow; correctness is still checked at a small size).
+
+    Each entry also records its rate-island count and an HBM roofline
+    record (`benchmarks.roofline.pipeline_roofline`): cost-model
+    bytes/pixel, the frame-time floor those bytes imply, and the
+    achieved GB/s of the lowered-jnp executor.
     """
     import warnings
 
     import numpy as np
 
+    from benchmarks.roofline import pipeline_roofline
     from repro.dsl.exec import run_fixed
-    from repro.lowering import LoweringError, compile_pipeline
+    from repro.core.cost_model import lowered_datapaths
+    from repro.lowering import compile_pipeline, partition_islands
     from repro.pipelines import dus, hcd, usm
     from repro.pipelines import workflows as W
 
-    rows_n = int(os.environ.get("REPRO_BENCH_ROWS", 512))
+    DEFAULT_ROWS = 512
+    rows_n = int(os.environ.get("REPRO_BENCH_ROWS", DEFAULT_ROWS))
     reps = int(os.environ.get("REPRO_BENCH_REPS", 8))
     time_pallas = os.environ.get("REPRO_BENCH_PALLAS", "1") != "0"
     shape = (rows_n, rows_n)
     rows, blob = [], {"shape": list(shape), "reps": reps, "benchmarks": {}}
+    if rows_n < DEFAULT_ROWS:
+        # sub-default shapes time dispatch overhead, not the datapath —
+        # keep the artifact honest about it
+        warnings.warn(
+            f"pipeline_throughput at {rows_n}x{rows_n} (default "
+            f"{DEFAULT_ROWS}x{DEFAULT_ROWS}): timings measure jax "
+            f"dispatch overhead, not the datapath; the emitted JSON is "
+            f"marked debug_shape", RuntimeWarning, stacklevel=2)
+        blob["debug_shape"] = True
     for name, pipe, params in (
             ("usm", usm.build(), dict(usm.DEFAULT_PARAMS)),
             ("hcd", hcd.build(), {}),
@@ -217,22 +234,25 @@ def _pipeline_throughput():
         entry["lowered_exact"] = bool(exact)
         entry["speedup_lowered"] = t_int * 1e3 / entry["lowered_jnp_ms"]
 
-        try:
-            run_pl = compile_pipeline(pipe, types, params=params,
-                                      backend="pallas")
-            small = img[:32, :32]
-            o_small = run_fixed(pipe, small, types, params)
-            g_small = run_pl(small)
-            entry["pallas_exact"] = bool(all(
-                np.array_equal(np.asarray(o_small[k]), g_small[k])
-                for k in g_small))
-            if time_pallas:
-                entry["pallas_interpret_ms"] = bench(
-                    lambda: run_pl(img), max(reps // 5, 1)) * 1e3
-        except LoweringError as e:
-            entry["pallas_exact"] = None
-            entry["pallas_error"] = str(e)
+        # every DAG now lowers to fused pallas islands (no LoweringError
+        # fallback left) — a failure here is a real bug and should raise
+        run_pl = compile_pipeline(pipe, types, params=params,
+                                  backend="pallas")
+        small = img[:32, :32]
+        o_small = run_fixed(pipe, small, types, params)
+        g_small = run_pl(small)
+        entry["pallas_exact"] = bool(all(
+            np.array_equal(np.asarray(o_small[k]), g_small[k])
+            for k in g_small))
+        entry["islands"] = len(
+            partition_islands(run_pl.lowered, shape).islands)
+        if time_pallas:
+            entry["pallas_interpret_ms"] = bench(
+                lambda: run_pl(img), max(reps // 5, 1)) * 1e3
 
+        entry["roofline"] = pipeline_roofline(
+            pipe, types, entry["lowered_jnp_ms"], shape,
+            datapaths=lowered_datapaths(run_jnp.lowered))
         blob["benchmarks"][name] = entry
         rows.append((name, round(entry["interp_ms"], 2),
                      round(entry["lowered_jnp_ms"], 2),
@@ -248,7 +268,7 @@ def _pipeline_throughput():
     best = max(blob["benchmarks"].items(),
                key=lambda kv: kv[1]["speedup_lowered"])
     broken = [n for n, e in blob["benchmarks"].items()
-              if not (e["lowered_exact"] and e["pallas_exact"] in (True, None))]
+              if not (e["lowered_exact"] and e["pallas_exact"] is True)]
     if broken:
         # a perf number for a wrong answer is worthless — fail the run
         # (and the CI step) outright

@@ -105,6 +105,20 @@ class BitwidthPlan:
     def stages(self) -> List[str]:
         return list(self.columns[self._col(None)])
 
+    def record_election(self, column: Optional[str],
+                        notes: List[str]) -> None:
+        """Append datapath-election provenance (narrow-mode lowering).
+
+        `repro.lowering.lower(..., datapath="narrow")` calls this with
+        its per-stage carrier/dtype census plus one justification line
+        per retained 64-bit datapath, so the plan JSON documents *why*
+        any wide resource survives the int32/f32-only election.
+        """
+        col = self._col(column)
+        for note in notes:
+            if note not in self.provenance[col].notes:
+                self.provenance[col].notes.append(note)
+
     # -- consumption --------------------------------------------------------
     def types(self, column: Optional[str] = None,
               betas: Optional[Dict[str, int]] = None,

@@ -33,6 +33,8 @@ from repro.core.graph import (BinOp, Call, Cmp, Const, Expr, ParamRef,
 
 FLOAT_ADD_FACTOR = 4.0          # soft-float adder vs int adder of same width
 FLOAT_MANTISSA = 24             # f32 mantissa incl. hidden bit
+F64_MANTISSA = 53               # f64 mantissa incl. hidden bit
+CARRIER_BITS = {"int32": 32, "int32pair": 32, "int64": 64}
 
 
 @dataclasses.dataclass
@@ -49,15 +51,18 @@ def _w(t: Optional[FixedPointType]) -> int:
 
 
 def _expr_cost(e: Expr, w_in: Dict[str, int], w_out: int, is_float: bool,
-               params_width: int = 32) -> Tuple[float, float, float]:
+               params_width: int = 32,
+               mantissa: int = FLOAT_MANTISSA) -> Tuple[float, float, float]:
     """(bit_ops, lut_bits, dsp_bits) for one evaluation of `e`.
 
     Width discipline: each op computes at the max of its operand widths
     (the HLS datapath the paper's generated code produces); the final result
-    is stored at `w_out`.
+    is stored at `w_out`.  `mantissa` sets the float significand width when
+    `is_float` (24 for f32, 53 for an f64 lowered-expr datapath).
     Returns cost and implicitly the width via closure recursion.
     """
     bit_ops = lut = dsp = 0.0
+    FLOAT_MANTISSA = mantissa       # shadows the module default below
 
     def go(n: Expr) -> int:           # returns value width of subtree
         nonlocal bit_ops, lut, dsp
@@ -138,10 +143,37 @@ def phase_mean_width(phase_entry, union_width: float) -> float:
     return total / n_res
 
 
+def _intlinear_cost(dp: Dict, w_in_max: float, w_out: int,
+                    ) -> Tuple[float, float, float]:
+    """(bit_ops, lut_bits, dsp_bits) of a lowered integer MAC datapath.
+
+    Priced from the election's structure instead of the HLS max-width
+    walk: constant-weight multiplies are shift-add arrays (weight bits x
+    operand bits), the accumulate chain runs at the *carrier* register
+    width — 32 for int32 and each half of an int32pair, 64 for int64 —
+    and an int32pair pays one widening 64-bit combine adder.  The finish
+    is a round+shift at carrier width when dyadic, else one f64 multiply.
+    """
+    A = CARRIER_BITS[dp["carrier"]]
+    dsp = dp.get("wbits", 8 * dp["taps"]) * w_in_max / 8.0
+    adders = dp["taps"] * A
+    if dp["carrier"] == "int32pair":
+        adders += 64                           # the widening combine
+    if dp.get("dyadic", True):
+        finish_ops, finish_dsp = float(A), 0.0  # round add + shift
+    else:
+        finish_ops, finish_dsp = 0.0, F64_MANTISSA * F64_MANTISSA / 8.0
+    # (the output register + saturate clamp are charged by stage_cost's
+    # common tail, like every other datapath)
+    bit_ops = dsp + adders + finish_ops + finish_dsp
+    return bit_ops, adders + finish_ops, dsp + finish_dsp
+
+
 def stage_cost(pipeline: Pipeline, name: str,
                types: Dict[str, Optional[FixedPointType]],
                image_width: int = 1920,
-               eff_widths: Optional[Dict[str, float]] = None) -> StageCost:
+               eff_widths: Optional[Dict[str, float]] = None,
+               datapath: Optional[Dict] = None) -> StageCost:
     """Cost of one stage's datapath.
 
     `eff_widths` (optional) overrides the *operand* width of named
@@ -149,6 +181,13 @@ def stage_cost(pipeline: Pipeline, name: str,
     datapaths: a phase-split producer feeds this stage's operators (and
     its line buffers) at the residue-mean width instead of the union
     width (`phase_mean_width`).
+
+    `datapath` (optional) is one `lowered_datapaths` entry: the stage's
+    operators are then priced from the lowering's actual election — the
+    integer MAC at its carrier width (`_intlinear_cost`), or the expr
+    tree as float at the elected mantissa (24 for f32, 53 for f64) —
+    instead of the HLS max-width model.  Storage and line buffers still
+    follow `types` (the stored representation is unchanged by election).
     """
     st = pipeline.stages[name]
     w_out = _w(types.get(name))
@@ -157,7 +196,16 @@ def stage_cost(pipeline: Pipeline, name: str,
     is_float = types.get(name) is None
     eff = eff_widths or {}
     w_in = {i: eff.get(i, _w(types.get(i))) for i in st.inputs}
-    bit_ops, lut, dsp = _expr_cost(st.expr, w_in, w_out, is_float)
+    if datapath is not None and datapath.get("kind") == "intlinear":
+        bit_ops, lut, dsp = _intlinear_cost(
+            datapath, max(w_in.values(), default=8.0), w_out)
+    elif datapath is not None and datapath.get("kind") == "expr":
+        mant = FLOAT_MANTISSA if datapath.get("dtype") == "f32" \
+            else F64_MANTISSA
+        bit_ops, lut, dsp = _expr_cost(st.expr, w_in, w_out, True,
+                                       mantissa=mant)
+    else:
+        bit_ops, lut, dsp = _expr_cost(st.expr, w_in, w_out, is_float)
     # output stage: every stream stage ends in a register (switches w_out
     # bits per pixel) and, in fixed point, a quantize/saturate clamp
     # (compare-select of width w_out).  Priced at the residue-mean width
@@ -195,25 +243,59 @@ class DesignCost:
         }
 
 
+def lowered_datapaths(lp) -> Dict[str, Dict]:
+    """Datapath descriptors for `design_cost(..., datapaths=...)`.
+
+    `lp` is a `repro.lowering.LoweredPipeline`; each non-input stage maps
+    to the structure its election actually synthesizes — the quantity the
+    narrow re-election (`lower(..., datapath="narrow")`) changes and the
+    type-map-only model cannot see:
+
+      intlinear: {"kind", "carrier", "taps", "wbits", "dyadic"}
+      expr:      {"kind", "dtype"}           # "f64" | "f32"
+    """
+    out: Dict[str, Dict] = {}
+    for n, ls in lp.stages.items():
+        if ls.stage.is_input:
+            continue
+        if ls.kind == "intlinear":
+            out[n] = {"kind": "intlinear", "carrier": ls.carrier,
+                      "taps": len(ls.int_taps),
+                      "wbits": sum(max(abs(tp.W).bit_length(), 1)
+                                   for tp in ls.int_taps),
+                      "dyadic": ls.dyadic}
+        elif ls.kind == "expr":
+            out[n] = {"kind": "expr", "dtype": ls.expr_dtype}
+    return out
+
+
 def design_cost(pipeline: Pipeline,
                 types: Dict[str, Optional[FixedPointType]],
                 image_width: int = 1920,
-                phase_types: Optional[Dict] = None) -> DesignCost:
+                phase_types: Optional[Dict] = None,
+                datapaths: Optional[Dict[str, Dict]] = None) -> DesignCost:
     """Whole-design cost.  `phase_types` (the `BitwidthPlan.phase_types`
     shape, ``stage -> ((My, Mx), residue -> type)``) prices per-phase
     datapaths: a phase-split stage feeds its consumers (operators and line
     buffers) at the residue-mean width, and its storage traffic is the
     residue mean of the per-residue container bytes — the quantity the
     union-width model erases (closing the ROADMAP per-phase cost item).
+
+    `datapaths` (a `lowered_datapaths` map) prices each stage's operators
+    from the lowering's carrier/dtype election instead of the HLS
+    max-width walk, so exact vs narrow lowerings of the same type map get
+    different costs.  Omitted -> byte-identical to the historical model.
     """
     from repro.core.policy import container_bytes
     phase_types = phase_types or {}
+    datapaths = datapaths or {}
     eff: Dict[str, float] = {
         n: phase_mean_width(entry, _w(types.get(n)))
         for n, entry in phase_types.items() if types.get(n) is not None}
     power = lut = dsp = bram = tbytes = 0.0
     for name in pipeline.topo_order():
-        c = stage_cost(pipeline, name, types, image_width, eff_widths=eff)
+        c = stage_cost(pipeline, name, types, image_width, eff_widths=eff,
+                       datapath=datapaths.get(name))
         power += c.bit_ops
         lut += c.lut_bits
         dsp += c.dsp_bits

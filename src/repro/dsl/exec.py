@@ -221,14 +221,15 @@ EXEC_CACHE_STATS = obs.CounterGroup("lowering.executor_cache",
 
 
 def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
-                      backend: str, column: Optional[str]) -> Callable:
+                      backend: str, column: Optional[str],
+                      datapath: str = "exact") -> Callable:
     from repro.analysis.driver import pipeline_content_hash
     if hasattr(types, "to_json"):          # BitwidthPlan: stable serialized
         types_key = types.to_json()
     else:
         types_key = repr(sorted((k, str(v)) for k, v in types.items()))
     key = (pipeline_content_hash(pipeline), types_key,
-           repr(sorted(params.items())), backend, column)
+           repr(sorted(params.items())), backend, column, datapath)
     fn = _LOWERED_MEMO.get(key)
     if fn is None:
         EXEC_CACHE_STATS.add("misses")
@@ -238,7 +239,8 @@ def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
         be = "jnp" if backend == "lowered" else "pallas"
         outs = list(pipeline.stages) if be == "jnp" else None
         fn = compile_pipeline(pipeline, types, params=params,
-                              backend=be, outputs=outs, column=column)
+                              backend=be, outputs=outs, column=column,
+                              datapath=datapath)
         while len(_LOWERED_MEMO) >= _LOWERED_MEMO_CAP:
             _LOWERED_MEMO.pop(next(iter(_LOWERED_MEMO)))
         _LOWERED_MEMO[key] = fn
@@ -252,7 +254,8 @@ def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
 def run_fixed(pipeline: Pipeline, image, types,
               params: Dict[str, float] | None = None,
               backend: str = "numpy",
-              column: Optional[str] = None) -> Dict[str, Array]:
+              column: Optional[str] = None,
+              datapath: str = "exact") -> Dict[str, Array]:
     """Bit-accurate fixed-point design (saturating, round-to-nearest-even).
 
     `types` is either a plain per-stage type map or a
@@ -270,10 +273,15 @@ def run_fixed(pipeline: Pipeline, image, types,
         Pallas kernel.  Both are bit-identical to ``"numpy"``;
         ``"lowered"`` returns the full stage env, ``"pallas"`` only the
         pipeline outputs (intermediates never leave VMEM).
+
+    `datapath` (lowered backends only) selects the carrier election:
+    ``"exact"`` (int64/f64 wherever the bound needs it) or ``"narrow"``
+    (int32/f32-first re-election under exactness proofs — see
+    `repro.lowering.ir`).  Both are bit-identical to the numpy oracle.
     """
     if backend in ("lowered", "pallas"):
         run = _lowered_executor(pipeline, types, params or {}, backend,
-                                column)
+                                column, datapath=datapath)
         return run(image)
     xp = np if backend == "numpy" else jnp
     phase_types = None

@@ -142,7 +142,14 @@ def _fused_kernel(*refs, program: Sequence[Dict], n_in: int):
                     uy=uy, ux=ux, W=W):
                 pd = by_name[pname]
                 p_start = i * pd["step"] + pd["lo"]
-                src = jnp.floor_divide(rows_abs * sy + dy, uy) - p_start
+                # band-relative clamp: a no-op under a banded schedule
+                # (the span pass keeps src inside the parent band) but
+                # load-bearing for single-tile schedules, where the full
+                # parent column is resident and clamping to [0, L-1] IS
+                # the oracle's absolute edge-replicate clamp
+                src = jnp.clip(
+                    jnp.floor_divide(rows_abs * sy + dy, uy) - p_start,
+                    0, pd["L"] - 1)
                 t = jnp.take(tiles[pname], src, axis=0)
                 cols = jnp.clip(jnp.floor_divide(jnp.arange(W) * sx + dx, ux),
                                 0, pd["W"] - 1)

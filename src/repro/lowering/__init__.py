@@ -7,20 +7,29 @@ The compile path the analysis plans exist for (docs/execution_backends.md):
     outs = run(image)          # {output stage: float64 ndarray}
 
 Backends: ``interp`` (the per-stage run_fixed oracle), ``jnp`` (one fused
-jit program), ``pallas`` (fused line-buffer kernel).  All three are
-bit-for-bit identical on every pipeline — the differential battery in
-tests/test_lowering.py pins it.
+jit program), ``pallas`` (fused line-buffer kernels, one per rate island
+— `repro.lowering.islands`).  All three are bit-for-bit identical on
+every pipeline — the differential battery in tests/test_lowering.py and
+tests/test_islands.py pins it.
+
+`lower(..., datapath="narrow")` re-elects every datapath int32/f32-first
+for real-hardware targets (see `repro.lowering.ir`).
 """
 from repro.lowering.ir import (IntTap, LoweredPipeline, LoweredStage,
                                LoweringError, PhaseSnap, Tap, dyadic_scale,
                                dyadic_weights, lower, match_linear)
 from repro.lowering.backends import (BACKENDS, compile_backend,
                                      compile_pipeline, register_backend)
-from repro.lowering.schedule import Schedule, StageSched, build_schedule
+from repro.lowering.islands import Island, IslandPlan, partition_islands
+from repro.lowering.schedule import (Schedule, StageSched,
+                                     build_island_schedule, build_schedule,
+                                     single_tile_schedule)
 
 __all__ = [
     "IntTap", "LoweredPipeline", "LoweredStage", "LoweringError",
     "PhaseSnap", "Tap", "dyadic_scale", "dyadic_weights", "lower",
     "match_linear", "BACKENDS", "compile_backend", "compile_pipeline",
-    "register_backend", "Schedule", "StageSched", "build_schedule",
+    "register_backend", "Island", "IslandPlan", "partition_islands",
+    "Schedule", "StageSched", "build_island_schedule", "build_schedule",
+    "single_tile_schedule",
 ]

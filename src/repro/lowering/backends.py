@@ -76,8 +76,9 @@ def residue_bounds(phase: PhaseSnap, t: FixedPointType, rows_abs, W: int):
 
 
 def carrier_dtype(name: str):
+    """MAC register dtype: an "int32pair" accumulates in int32 lanes."""
     import jax.numpy as jnp
-    return jnp.int32 if name == "int32" else jnp.int64
+    return jnp.int32 if name in ("int32", "int32pair") else jnp.int64
 
 
 def store_dtype(ls: LoweredStage):
@@ -86,8 +87,36 @@ def store_dtype(ls: LoweredStage):
     if ls.store_float:
         return jnp.float64
     if ls.kind == "intlinear":
+        if ls.carrier == "int32pair":
+            # pair MACs are int32 but the finished (clipped) value is
+            # only bounded by the output type
+            return jnp.int32 if ls.t.width <= 31 else jnp.int64
         return carrier_dtype(ls.carrier)
     return jnp.int32 if ls.t.width <= 31 else jnp.int64
+
+
+def accumulate_intlinear(ls: LoweredStage, tap_of, zeros):
+    """Shared MAC loop: `tap_of(tp)` yields the carrier-typed tap tile,
+    `zeros()` a fresh carrier-typed accumulator.
+
+    For an "int32pair" carrier the taps before `acc_split` and the rest
+    accumulate in separate int32 registers, combined by ONE widening add
+    before the finishing rule — bit-equal to a flat sum because integer
+    adds are associative/commutative and the combined value was proved
+    below 2^53 at lowering time.
+    """
+    import jax.numpy as jnp
+    pair = ls.carrier == "int32pair" and 0 < ls.acc_split < len(ls.int_taps)
+    accs = [zeros(), zeros()] if pair else [zeros()]
+    for k, tp in enumerate(ls.int_taps):
+        g = 1 if pair and k >= ls.acc_split else 0
+        accs[g] = accs[g] + tp.W * tap_of(tp)
+    if ls.carrier != "int32pair":
+        return accs[0]
+    acc = accs[0].astype(jnp.int64)
+    if pair:
+        acc = acc + accs[1].astype(jnp.int64)
+    return acc
 
 
 def snap_float(raw, t: FixedPointType, xp):
@@ -153,6 +182,17 @@ def dequant(ls: LoweredStage, tile):
     if ls.store_float:
         return tile
     return tile.astype(jnp.float64) * (2.0 ** -ls.t.beta)
+
+
+def dequant_f32(ls: LoweredStage, tile):
+    """Stored tile -> the *exact* f32 stage value (narrow-mode f32 path).
+
+    Exact because the demotion proof (`ir._expr_fits_f32`) bounds the
+    scaled magnitude below 2^24 and a power-of-two rescale is lossless —
+    so this f32 value equals the f64 value `dequant` produces, bit for
+    bit after the final upconversion."""
+    import jax.numpy as jnp
+    return tile.astype(jnp.float32) * np.float32(2.0 ** -ls.t.beta)
 
 
 def needed_stages(lp: LoweredPipeline, outputs: Sequence[str]) -> List[str]:
@@ -230,17 +270,26 @@ def compile_jnp(lp: LoweredPipeline,
                 # stride folded into the tap slices: decimated pixels are
                 # never computed (the interpreter computes-then-drops)
                 Hs, Ws = _ceil_div(H, sy), _ceil_div(W, sx)
-                acc = jnp.zeros((Hs, Ws), cdt)
-                for tp in ls.int_taps:
+
+                def tap_of(tp, padded=padded, hy=hy, hx=hx, H=H, W=W,
+                           sy=sy, sx=sx):
                     a = padded[tp.stage]
-                    sl = a[hy + tp.dy: hy + tp.dy + H: sy,
-                           hx + tp.dx: hx + tp.dx + W: sx]
-                    acc = acc + tp.W * sl
+                    return a[hy + tp.dy: hy + tp.dy + H: sy,
+                             hx + tp.dx: hx + tp.dx + W: sx]
+
+                acc = accumulate_intlinear(
+                    ls, tap_of, lambda: jnp.zeros((Hs, Ws), cdt))
                 rows_abs = jnp.arange(acc.shape[0])
                 q = finish_intlinear(ls, acc, rows_abs, acc.shape[1])
                 tiles[name] = q
             else:
-                padded = _pad_inputs({i: vals[i] for i in st.inputs}, st, jnp)
+                if ls.expr_dtype == "f32":
+                    padded = _pad_inputs(
+                        {i: dequant_f32(lp.stages[i], tiles[i])
+                         for i in st.inputs}, st, jnp)
+                else:
+                    padded = _pad_inputs({i: vals[i] for i in st.inputs},
+                                         st, jnp)
 
                 def ref(stage, dy, dx, padded=padded, H=H, W=W,
                         hy=hy, hx=hx):
@@ -316,9 +365,11 @@ def register_backend(name: str, factory) -> None:
 
 
 def compile_pipeline(pipeline, types, params=None, backend: str = "jnp",
-                     outputs=None, column=None, **kw) -> Executor:
+                     outputs=None, column=None, datapath: str = "exact",
+                     **kw) -> Executor:
     """Lower + compile in one call (the `repro.lowering` front door)."""
-    lp = lower(pipeline, types, params=params, column=column)
+    lp = lower(pipeline, types, params=params, column=column,
+               datapath=datapath)
     return compile_backend(lp, backend, outputs=outputs, **kw)
 
 

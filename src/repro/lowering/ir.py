@@ -32,6 +32,28 @@ The finishing step after an integer accumulation:
     s * 2^(beta_out - w_beta - bmax), exact because scaling a double by a
     power of two is lossless — one IEEE multiply, the same one the oracle
     issues.
+
+**Narrow datapath re-election** (`lower(..., datapath="narrow")`) is the
+real-hardware mode: the exact-mode election above happily hands out
+int64 carriers and f64 expression datapaths, which no FPGA/TPU lane
+holds natively.  Narrow mode re-elects every datapath int32/f32-first,
+and only keeps a 64-bit resource when it can *prove* no narrower one is
+bit-exact — recording each election (and each justified retention) in
+the plan's provenance:
+
+  * accumulator bounds are re-tightened per tap from the plan's
+    per-phase columns (a tap that only ever lands on low-magnitude
+    lattice residues is bounded by those residues' types, not the union
+    column — edge clamps handled conservatively);
+  * an accumulator whose tightened bound still exceeds `INT32_BUDGET`
+    is *split* into two int32 partial accumulators (`carrier =
+    "int32pair"`, taps partitioned by `acc_split`), combined by one wide
+    add before the finishing rule — bit-equal because integer adds are
+    associative and the combined value stays below 2^53;
+  * an `expr` stage is demoted to f32 evaluation (`expr_dtype = "f32"`)
+    when a value-grid walk over its tree proves every intermediate is a
+    dyadic rational whose scaled magnitude fits a 24-bit mantissa — then
+    every f32 op is exact, hence bit-identical to the oracle's f64 ops.
 """
 from __future__ import annotations
 
@@ -169,13 +191,21 @@ class LoweredStage:
     t_shift: int = 0                 # dyadic finishing right-shift (may be <0)
     dyadic: bool = True
     cscale: float = 1.0              # f64 finishing multiplier (non-dyadic)
-    carrier: str = "int64"           # accumulator dtype ("int32" | "int64")
+    carrier: str = "int64"           # accumulator ("int32"|"int32pair"|"int64")
     acc_bound: int = 0               # proved |accumulator| bound
+    # int32pair: int_taps[:acc_split] / int_taps[acc_split:] accumulate in
+    # separate int32 registers, combined by one wide add before finishing
+    acc_split: int = 0
+    # -- expr datapath --------------------------------------------------------
+    expr_dtype: str = "f64"          # "f32" only under a narrow-mode proof
     # -- saturation -----------------------------------------------------------
     phase: Optional[PhaseSnap] = None
     # backends keep this stage's tile as f64 values instead of scaled ints
     # (untyped, wider than a double's mantissa, or residue-mixed-beta)
     store_float: bool = False
+    # narrow-mode election record ("" in exact mode): the chosen datapath,
+    # with the proof obligation that blocked anything narrower
+    election: str = ""
 
 
 @dataclasses.dataclass
@@ -187,6 +217,7 @@ class LoweredPipeline:
     params: Dict[str, float]
     types: Dict[str, Optional[FixedPointType]]
     column: Optional[str] = None             # plan column, if plan-derived
+    datapath: str = "exact"                  # "exact" | "narrow"
 
     def outputs(self) -> List[str]:
         return list(self.pipeline.outputs)
@@ -200,6 +231,7 @@ class LoweredPipeline:
 # ---------------------------------------------------------------------------
 
 F64_EXACT = 1 << 53      # integer sums below this are exact IEEE doubles
+F32_EXACT = 1 << 24      # scaled magnitudes below this are exact IEEE singles
 INT32_BUDGET = 1 << 30
 
 
@@ -207,10 +239,181 @@ def _qabs(t: FixedPointType) -> int:
     return max(abs(t.int_min), t.int_max)
 
 
+def _touched_residues(s: int, u: int, d: int, m: int) -> Optional[set]:
+    """Row (or col) residues mod `m` a tap offset `d` can read, or None.
+
+    The consumer reads input index `floor((y*s + d)/u)`; over one lattice
+    period (`y` mod `m*u`) the unclamped indices hit a fixed residue set.
+    Edge clamping is handled conservatively: a negative offset can clamp
+    onto index 0 (residue 0, added); a positive offset can clamp onto
+    `H-1`, whose residue is shape-dependent — unknown at lowering time,
+    so the caller falls back to the union bound (None).
+    """
+    if m <= 1:
+        return {0}
+    res = {((y * s + d) // u) % m for y in range(m * u)}
+    if d < 0:
+        res.add(0)
+    if d > 0:
+        return None
+    return res
+
+
+def _tap_qabs_narrow(st: Stage, tp: Tap, t_in: FixedPointType,
+                     phase_in: Optional["PhaseSnap"]) -> int:
+    """Tightened |q| bound for one tap from the input's per-phase types.
+
+    Sound because the runtime (every backend and the oracle alike) clips
+    the input stage per lattice residue, so a stored value at residue
+    (ry, rx) obeys that residue's saturation bounds.
+    """
+    if phase_in is None or not phase_in.int_ok:
+        return _qabs(t_in)
+    my, mx = phase_in.lattice
+    ry = _touched_residues(st.stride[0], st.upsample[0], tp.dy, my)
+    rx = _touched_residues(st.stride[1], st.upsample[1], tp.dx, mx)
+    if ry is None or rx is None:
+        return _qabs(t_in)
+    best = 0
+    for a in ry:
+        for b in rx:
+            t_ph = phase_in.types.get((a, b), t_in)
+            best = max(best, _qabs(t_ph))
+    return best
+
+
+def _split_int32(tap_bounds: List[int]
+                 ) -> Optional[Tuple[List[int], int]]:
+    """2-partition tap indices so each partial sum stays under the int32
+    budget.  Returns `(reordered_indices, split_at)` — taps before the
+    split accumulate in one int32 register, the rest in the other — or
+    None when no split exists.  Integer adds are associative and
+    commutative, so any regrouping is bit-exact."""
+    if len(tap_bounds) < 2:
+        return None
+    order = sorted(range(len(tap_bounds)), key=lambda i: -tap_bounds[i])
+    a: List[int] = []
+    b: List[int] = []
+    sa = sb = 0
+    for i in order:
+        if sa <= sb:
+            a.append(i)
+            sa += tap_bounds[i]
+        else:
+            b.append(i)
+            sb += tap_bounds[i]
+    if sa >= INT32_BUDGET or sb >= INT32_BUDGET or not a or not b:
+        return None
+    return a + b, len(a)
+
+
+def _expr_fits_f32(st: Stage, t_out: Optional[FixedPointType],
+                   in_types: Dict[str, Optional[FixedPointType]],
+                   float_stored: set,
+                   phase: Optional["PhaseSnap"]) -> Optional[str]:
+    """Proof that f32 evaluation of `st.expr` is bit-identical to f64.
+
+    Walks the tree tracking an exact dyadic value grid `(bound, e)`:
+    every node's value is `k * 2^-e` with `|k| <= bound`.  When every
+    node keeps `bound < 2^24` (and `e` well inside the exponent range),
+    each op's result is exactly representable in BOTH f32 and f64, so
+    neither rounds — the two evaluations are equal, and the final snap
+    (`rint` after a lossless power-of-two rescale, clip against
+    f32-exact bounds) is the same single rounding the oracle performs.
+
+    Returns None when the proof succeeds, else the retention reason.
+    """
+    if t_out is None:
+        return "untyped output"
+    if phase is not None:
+        return "phase-split residues re-snap per lattice residue"
+    if _qabs(t_out) >= F32_EXACT:
+        return (f"output grid needs "
+                f"{_qabs(t_out).bit_length()} magnitude bits")
+    if abs(t_out.beta) > 60:
+        return "output beta outside f32 exponent headroom"
+
+    class _No(Exception):
+        pass
+
+    def fail(msg: str):
+        raise _No(msg)
+
+    def chk(b: int, e: int) -> Tuple[int, int]:
+        if b >= F32_EXACT:
+            fail(f"a node needs {b.bit_length()} magnitude bits")
+        if e > 60:
+            fail("a node's beta exceeds f32 exponent headroom")
+        return b, e
+
+    def go(n: Expr) -> Tuple[int, int]:
+        from repro.core.graph import Call, Cmp, ParamRef, Pow, Select
+        if isinstance(n, Const):
+            if n.value == 0:
+                return 0, 0
+            ds = dyadic_scale(float(n.value), max_num=F32_EXACT - 1,
+                              max_exp=60)
+            if ds is None:
+                fail(f"constant {n.value!r} is not f32-exact")
+            return chk(abs(ds[0]), ds[1])
+        if isinstance(n, Ref):
+            t = in_types.get(n.stage)
+            if t is None:
+                fail(f"input {n.stage!r} is untyped")
+            if n.stage in float_stored:
+                fail(f"input {n.stage!r} is float-stored")
+            return chk(_qabs(t), t.beta)
+        if isinstance(n, ParamRef):
+            fail(f"runtime parameter {n.name!r} has no proven grid")
+        if isinstance(n, BinOp):
+            if n.op == "/":
+                fail("division rounds")
+            (bl, el), (br, er) = go(n.left), go(n.right)
+            if n.op == "*":
+                return chk(bl * br, el + er)
+            e = max(el, er)
+            return chk((bl << (e - el)) + (br << (e - er)), e)
+        if isinstance(n, Pow):
+            b, e = go(n.base)
+            if n.n < 0:
+                fail("negative power rounds")
+            return chk(b ** n.n, e * n.n)
+        if isinstance(n, Call):
+            if n.fn == "sqrt":
+                fail("sqrt rounds")
+            gs = [go(a) for a in n.args]
+            e = max(ee for _, ee in gs)
+            return chk(max(bb << (e - ee) for bb, ee in gs), e)
+        if isinstance(n, Cmp):
+            go(n.left)
+            go(n.right)
+            return 1, 0      # exact compare of exact values
+        if isinstance(n, Select):
+            go(n.cond)
+            gs = [go(n.then), go(n.other)]
+            e = max(ee for _, ee in gs)
+            return chk(max(bb << (e - ee) for bb, ee in gs), e)
+        fail(f"unsupported node {type(n).__name__}")
+
+    try:
+        go(st.expr)
+    except _No as exc:
+        return str(exc)
+    return None
+
+
 def _plan_intlinear(st: Stage, taps: Tuple[Tap, ...], scale: float,
                     t_out: FixedPointType,
-                    in_types: Dict[str, Optional[FixedPointType]]):
-    """Integer-datapath parameters, or None when exactness is unprovable."""
+                    in_types: Dict[str, Optional[FixedPointType]],
+                    narrow: bool = False,
+                    in_phases: Optional[Dict[str, "PhaseSnap"]] = None):
+    """Integer-datapath parameters, or None when exactness is unprovable.
+
+    With `narrow=True` the carrier election is int32-first: accumulator
+    bounds are tightened per tap from the inputs' per-phase types, and a
+    bound over `INT32_BUDGET` is split across an int32 pair before an
+    int64 carrier is conceded (the retention reason lands in `election`).
+    """
     if any(in_types.get(tp.stage) is None for tp in taps):
         return None
     w = dyadic_weights([tp.w for tp in taps])
@@ -218,15 +421,18 @@ def _plan_intlinear(st: Stage, taps: Tuple[Tap, ...], scale: float,
         return None
     wq, w_beta = w
     bmax = max(in_types[tp.stage].beta for tp in taps)
-    int_taps = []
-    bound = 0
+    int_taps: List[IntTap] = []
+    tap_bounds: List[int] = []
     for tp, q in zip(taps, wq):
         t_in = in_types[tp.stage]
         W = q << (bmax - t_in.beta)
         if W == 0:
             continue
+        qa = (_tap_qabs_narrow(st, tp, t_in, (in_phases or {}).get(tp.stage))
+              if narrow else _qabs(t_in))
         int_taps.append(IntTap(tp.stage, tp.dy, tp.dx, W))
-        bound += abs(W) * _qabs(t_in)
+        tap_bounds.append(abs(W) * qa)
+    bound = sum(tap_bounds)
     if bound >= F64_EXACT:
         # the oracle's own float sum may round — only `expr` replays that
         return None
@@ -247,16 +453,45 @@ def _plan_intlinear(st: Stage, taps: Tuple[Tap, ...], scale: float,
             fin = prod + (1 << max(t_shift - 1, 0))
         if fin >= F64_EXACT:
             return None
-        carrier = "int32" if fin < INT32_BUDGET else "int64"
-        return dict(int_taps=tuple(int_taps), sm=sm, t_shift=t_shift,
-                    dyadic=True, cscale=1.0, carrier=carrier,
-                    acc_bound=bound)
-    # non-dyadic scale: one f64 multiply finishes the stage, bit-equal to
-    # the oracle's fl(scale * sum) (power-of-two rescale is lossless)
-    cscale = scale * 2.0 ** (t_out.beta - w_beta - bmax)
-    carrier = "int32" if bound < INT32_BUDGET else "int64"
-    return dict(int_taps=tuple(int_taps), sm=1, t_shift=0, dyadic=False,
-                cscale=cscale, carrier=carrier, acc_bound=bound)
+        plan = dict(int_taps=tuple(int_taps), sm=sm, t_shift=t_shift,
+                    dyadic=True, cscale=1.0, acc_bound=bound)
+        gate = fin       # the finishing multiply/shift runs in-carrier
+    else:
+        # non-dyadic scale: one f64 multiply finishes the stage, bit-equal
+        # to the oracle's fl(scale * sum) (power-of-two rescale is
+        # lossless); the carrier only has to hold the raw accumulator
+        cscale = scale * 2.0 ** (t_out.beta - w_beta - bmax)
+        plan = dict(int_taps=tuple(int_taps), sm=1, t_shift=0, dyadic=False,
+                    cscale=cscale, acc_bound=bound)
+        gate = bound
+    if gate < INT32_BUDGET:
+        plan.update(carrier="int32", acc_split=0,
+                    election="int32" if narrow else "")
+        return plan
+    if not narrow:
+        plan.update(carrier="int64", acc_split=0)
+        return plan
+    # narrow mode: split the accumulation across an int32 pair when every
+    # partial sum fits; the widening combine + finish run in int64
+    if bound < INT32_BUDGET:
+        sp = (list(range(len(int_taps))), len(int_taps))
+    else:
+        sp = _split_int32(tap_bounds)
+    if sp is not None:
+        order_ix, k = sp
+        plan["int_taps"] = tuple(int_taps[i] for i in order_ix)
+        plan.update(
+            carrier="int32pair", acc_split=k,
+            election=(f"int32pair: acc bound 2^{bound.bit_length()} split "
+                      f"{k}+{len(int_taps) - k} taps under INT32_BUDGET"))
+        return plan
+    why = ("a single tap's bound exceeds INT32_BUDGET"
+           if max(tap_bounds) >= INT32_BUDGET
+           else "no 2-way tap split fits INT32_BUDGET")
+    plan.update(carrier="int64", acc_split=0,
+                election=(f"int64 kept: acc bound "
+                          f"2^{bound.bit_length()} — {why}"))
+    return plan
 
 
 def _phase_snap(t_union: FixedPointType, entry) -> PhaseSnap:
@@ -267,23 +502,34 @@ def _phase_snap(t_union: FixedPointType, entry) -> PhaseSnap:
 
 
 def lower(pipeline: Pipeline, types, params: Optional[Dict[str, float]] = None,
-          column: Optional[str] = None) -> LoweredPipeline:
+          column: Optional[str] = None,
+          datapath: str = "exact") -> LoweredPipeline:
     """Lower `(Pipeline, BitwidthPlan-or-TypeMap)` into a typed program.
 
     Mirrors `dsl.exec.run_fixed`'s duck-typed plan handling: a plan
     supplies its `column` types plus per-phase sub-types; a plain dict is
     a per-stage union type map.
+
+    `datapath="narrow"` turns on int32/f32-first re-election (see the
+    module docstring); every election — and every justified 64-bit
+    retention — is recorded on the stages and, when `types` is a
+    `BitwidthPlan`, appended to the plan column's provenance notes.
     """
     from repro import obs
+    if datapath not in ("exact", "narrow"):
+        raise LoweringError(f"unknown datapath mode {datapath!r}; "
+                            "expected 'exact' or 'narrow'")
+    narrow = datapath == "narrow"
     phase_types = {}
     col = column
+    plan_obj = None
     if hasattr(types, "phase_types"):            # BitwidthPlan (duck-typed)
-        plan = types
-        phase_types = plan.phase_types(column) or {}
-        col = column or getattr(plan, "default_column", None)
-        types = plan.types(column)
+        plan_obj = types
+        phase_types = plan_obj.phase_types(column) or {}
+        col = column or getattr(plan_obj, "default_column", None)
+        types = plan_obj.types(column)
     with obs.span("lowering.lower", pipeline=pipeline.name, column=col,
-                  n_stages=len(pipeline.stages)) as sp:
+                  n_stages=len(pipeline.stages), datapath=datapath) as sp:
         tmap: Dict[str, Optional[FixedPointType]] = {
             n: types.get(n) for n in pipeline.stages}
         stages: Dict[str, LoweredStage] = {}
@@ -312,18 +558,55 @@ def lower(pipeline: Pipeline, types, params: Optional[Dict[str, float]] = None,
             plan_int = None
             if lin is not None and not sf \
                     and not any(i in float_stored for i in st.inputs):
-                plan_int = _plan_intlinear(st, lin[0], lin[1], t_out,
-                                           {i: tmap.get(i)
-                                            for i in st.inputs})
+                plan_int = _plan_intlinear(
+                    st, lin[0], lin[1], t_out,
+                    {i: tmap.get(i) for i in st.inputs},
+                    narrow=narrow,
+                    in_phases={i: stages[i].phase for i in st.inputs})
             if plan_int is not None:
                 stages[name] = LoweredStage(name=name, kind="intlinear",
                                             stage=st, t=t_out, halo=halo,
                                             phase=phase, **plan_int)
             else:
+                expr_dtype, election = "f64", ""
+                if narrow:
+                    reason = _expr_fits_f32(st, t_out, tmap, float_stored,
+                                            phase)
+                    if reason is None:
+                        expr_dtype, election = "f32", "f32"
+                    else:
+                        election = f"f64 kept: {reason}"
                 stages[name] = LoweredStage(name=name, kind="expr", stage=st,
                                             t=t_out, halo=halo, phase=phase,
-                                            store_float=sf)
+                                            store_float=sf,
+                                            expr_dtype=expr_dtype,
+                                            election=election)
         kinds = [s.kind for s in stages.values()]
         sp.set(intlinear=kinds.count("intlinear"), expr=kinds.count("expr"))
+        if narrow:
+            sp.set(narrowed=sum(1 for s in stages.values()
+                                if s.election in ("int32", "f32")
+                                or s.carrier == "int32pair"))
+            if plan_obj is not None and hasattr(plan_obj, "record_election"):
+                plan_obj.record_election(col, _election_notes(pipeline.name,
+                                                              stages))
     return LoweredPipeline(pipeline=pipeline, stages=stages, order=order,
-                           params=dict(params or {}), types=tmap, column=col)
+                           params=dict(params or {}), types=tmap, column=col,
+                           datapath=datapath)
+
+
+def _election_notes(pipe_name: str,
+                    stages: Dict[str, LoweredStage]) -> List[str]:
+    """Provenance lines for a narrow-mode lowering: one census line plus
+    one justification line per retained 64-bit datapath."""
+    labels = []
+    details = []
+    for name, ls in stages.items():
+        if ls.stage.is_input:
+            continue
+        label = ls.carrier if ls.kind == "intlinear" else ls.expr_dtype
+        labels.append(f"{name}={label}")
+        if ls.election.startswith(("int64 kept", "f64 kept")):
+            details.append(f"datapath[narrow] {pipe_name}.{name}: "
+                           f"{ls.election}")
+    return [f"datapath[narrow] {pipe_name}: " + ", ".join(labels)] + details

@@ -1,29 +1,47 @@
 """Fused line-buffer Pallas backend over the lowered IR.
 
-Compiles a `LoweredPipeline` + image shape into ONE `pallas_call`
-(`kernels.stencil.kernel.fused_pipeline`): a band of every stage's rows
-walks down the image, intermediates never touch HBM, and each stage's
-datapath is synthesized from its `LoweredStage`:
+Compiles a `LoweredPipeline` + image shape into a chain of fused
+`pallas_call`s — one per *rate island* (`repro.lowering.islands`): the
+DAG is partitioned into maximal band-schedulable subgraphs, each island
+walks a band of every member stage's rows down the image with
+intermediates resident in VMEM, and islands hand off through
+materialized HBM boundary buffers holding the boundary stages' *stored*
+tiles (scaled ints, or f64 for float-stored stages — f64-exact
+containers either way).  The historical whole-DAG case is the
+single-island fast path; DAGs the old backend rejected with
+`LoweringError` (mixed rates, rate-inexact heights, halos deeper than
+any aligned tile) now partition instead, so there is NO jnp whole-DAG
+fallback left (pass `islands=False` to opt back into the raising
+monolithic behavior).
 
-  * `intlinear` — integer multiply-accumulate over clamped tap gathers,
-    finished by a round-half-even shift (dyadic scale) or one f64
-    multiply + rint, saturated per lattice residue where the plan carries
-    phase types (one datapath per §IV homogeneity cluster);
-  * `expr`      — the oracle's f64 expression tree replayed on
-    dequantized gathers (`dsl.exec.eval_expr`), then snapped.
+Per-stage datapaths are synthesized from each `LoweredStage`:
 
-Both are bit-identical to `run_fixed(backend="numpy")` (see
-`repro.lowering.ir` for the exactness argument; the band geometry is
+  * `intlinear` — integer multiply-accumulate over clamped tap gathers
+    (int32, an int32 *pair* with one widening combine, or int64 —
+    narrow-mode election, see `repro.lowering.ir`), finished by a
+    round-half-even shift (dyadic scale) or one f64 multiply + rint,
+    saturated per lattice residue where the plan carries phase types;
+  * `expr`      — the oracle's expression tree replayed on dequantized
+    gathers (`dsl.exec.eval_expr`) in f64, or in f32 under a narrow-mode
+    exactness proof, then snapped.
+
+Everything is bit-identical to `run_fixed(backend="numpy")` (see
+`repro.lowering.ir` for the exactness arguments; the band geometry is
 value-equal to the oracle's padded full-array geometry by the clamp
-equivalence spelled out in `kernels.stencil.kernel`).
+equivalence spelled out in `kernels.stencil.kernel`, and island
+boundaries reproduce the oracle's stage values exactly because the
+stored representation IS the oracle's value grid).
 
-Everything runs under an x64 scope; `interpret=True` (the default) runs
-on CPU, `interpret=False` requires a real TPU — note f64/int64 stages
-only lower on targets with 64-bit support, so off-TPU CI uses interpreter
-mode throughout.
+`interpret=None` (the default) resolves by capability detection:
+`interpret=False` automatically on a real TPU/GPU whose backend passes a
+one-time 64-bit probe (or when the pipeline needs no 64-bit datapath),
+with a graceful one-time `RuntimeWarning` fallback to interpreter mode
+everywhere else — so off-accelerator CI needs no TPU runner.
 """
 from __future__ import annotations
 
+import warnings
+from fractions import Fraction
 from typing import Dict, Optional, Sequence
 
 import numpy as np
@@ -31,8 +49,86 @@ import numpy as np
 from repro import obs
 from repro.lowering import backends as B
 from repro.lowering.ir import LoweredPipeline, LoweredStage, LoweringError
+from repro.lowering.islands import Island, partition_islands
 from repro.lowering.schedule import Schedule, build_schedule
 
+# ---------------------------------------------------------------------------
+# capability detection
+# ---------------------------------------------------------------------------
+
+_warned: set = set()
+_probe_cache: Dict[str, bool] = {}
+
+
+def _warn_once(msg: str) -> None:
+    if msg not in _warned:
+        _warned.add(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def needs_64bit(lp: LoweredPipeline) -> bool:
+    """True when any stage's in-kernel datapath touches int64/f64."""
+    for ls in lp.stages.values():
+        if ls.store_float:
+            return True
+        if ls.t is not None and ls.t.width > 31:
+            return True
+        if ls.phase is not None:        # residue grids build in int64
+            return True
+        if ls.kind == "intlinear" and (ls.carrier == "int64"
+                                       or not ls.dyadic):
+            return True
+        if ls.kind == "expr" and not ls.stage.is_input \
+                and ls.expr_dtype == "f64":
+            return True
+    return False
+
+
+def supports_64bit(platform: str) -> bool:
+    """One-time probe: does this jax backend hold int64/f64 natively?"""
+    if platform in _probe_cache:
+        return _probe_cache[platform]
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+        with enable_x64():
+            i = jax.jit(lambda a: a.astype(jnp.int64) * ((1 << 40) + 1))(
+                jnp.arange(3, dtype=jnp.int32))
+            f = jax.jit(lambda a: a.astype(jnp.float64) * 2.0 ** -40)(
+                jnp.arange(3, dtype=jnp.int32))
+            ok = (i.dtype == jnp.int64 and int(i[2]) == 2 * ((1 << 40) + 1)
+                  and f.dtype == jnp.float64
+                  and float(f[1]) == 2.0 ** -40)
+    except Exception:
+        ok = False
+    _probe_cache[platform] = bool(ok)
+    return _probe_cache[platform]
+
+
+def resolve_interpret(lp: Optional[LoweredPipeline] = None) -> bool:
+    """Pick `interpret` for `pallas_call`: False on capable accelerators."""
+    import jax
+    platform = jax.default_backend()
+    if platform in ("tpu", "gpu"):
+        if lp is not None and needs_64bit(lp) \
+                and not supports_64bit(platform):
+            _warn_once(
+                f"pallas: the pipeline needs 64-bit datapaths the "
+                f"{platform} backend lacks; running the fused kernel in "
+                f"interpret mode (narrow the plan with "
+                f"lower(..., datapath='narrow'))")
+            return True
+        return False
+    _warn_once(
+        f"pallas: no TPU/GPU accelerator (jax default_backend="
+        f"{platform!r}); the fused kernel runs in interpret mode")
+    return True
+
+
+# ---------------------------------------------------------------------------
+# stage descriptors
+# ---------------------------------------------------------------------------
 
 def _input_descriptor(name: str, ls: LoweredStage, ss, slot: int):
     return dict(kind="input", name=name, step=ss.step, lo=ss.lo, L=ss.L,
@@ -51,15 +147,17 @@ def _compute_descriptor(lp: LoweredPipeline, name: str, ss):
         cdt = B.carrier_dtype(ls.carrier)
 
         def fn(tap, rows_abs, ls=ls, cdt=cdt, W=ss.W):
-            acc = jnp.zeros((rows_abs.shape[0], W), cdt)
-            for tp in ls.int_taps:
-                acc = acc + tp.W * tap(tp.stage, tp.dy, tp.dx).astype(cdt)
+            acc = B.accumulate_intlinear(
+                ls,
+                lambda tp: tap(tp.stage, tp.dy, tp.dx).astype(cdt),
+                lambda: jnp.zeros((rows_abs.shape[0], W), cdt))
             return B.finish_intlinear(ls, acc, rows_abs, W)
     else:
-        def fn(tap, rows_abs, ls=ls, W=ss.W):
+        deq = B.dequant_f32 if ls.expr_dtype == "f32" else B.dequant
+
+        def fn(tap, rows_abs, ls=ls, deq=deq, W=ss.W):
             def ref(stage, dy, dx):
-                g = tap(stage, dy, dx)
-                return B.dequant(lp.stages[stage], g)
+                return deq(lp.stages[stage], tap(stage, dy, dx))
 
             raw = eval_expr(st.expr, ref, params, jnp, jnp.where)
             return B.snap_expr(ls, raw, rows_abs, W)
@@ -70,36 +168,61 @@ def _compute_descriptor(lp: LoweredPipeline, name: str, ss):
                 inputs=tuple(st.inputs), fn=fn)
 
 
+# ---------------------------------------------------------------------------
+# compile
+# ---------------------------------------------------------------------------
+
 def compile_pallas(lp: LoweredPipeline,
                    outputs: Optional[Sequence[str]] = None,
-                   interpret: bool = True,
-                   tile_rows: Optional[int] = None) -> B.Executor:
-    """Shape-specialized executor: the schedule + kernel are built (and
-    cached) per input shape on first call."""
+                   interpret: Optional[bool] = None,
+                   tile_rows: Optional[int] = None,
+                   islands: bool = True) -> B.Executor:
+    """Shape-specialized executor: the island plan + kernels are built
+    (and cached) per input shape on first call.
+
+    `islands=False` opts out of partitioning: the whole DAG must band-
+    schedule as one program or `LoweringError` is raised (the historical
+    contract, for callers that want to catch-and-fallback themselves).
+    """
     from repro.kernels.stencil.kernel import fused_pipeline
 
     outs = list(outputs or lp.pipeline.outputs)
     order = B.needed_stages(lp, outs)
     input_names = [n for n in order if lp.stages[n].stage.is_input]
-    cache: Dict[tuple, object] = {}
+    interp = resolve_interpret(lp) if interpret is None else interpret
+    cache: Dict[tuple, list] = {}
 
-    def build(in_shape):
-        sched: Schedule = build_schedule(lp, in_shape, order=order,
-                                         outputs=outs, tile_rows=tile_rows)
+    def compile_island(isl: Island):
         program = []
-        slot = {n: i for i, n in enumerate(input_names)}
-        for n in sched.order:
-            ls = lp.stages[n]
-            ss = sched.stages[n]
-            if ls.stage.is_input:
-                program.append(_input_descriptor(n, ls, ss, slot[n]))
+        slot = {n: i for i, n in enumerate(isl.inputs)}
+        for n in isl.schedule.order:
+            ss = isl.schedule.stages[n]
+            if n in slot:
+                program.append(_input_descriptor(n, lp.stages[n], ss,
+                                                 slot[n]))
             else:
                 program.append(_compute_descriptor(lp, n, ss))
-        for out_slot, n in enumerate(outs):
+        for out_slot, n in enumerate(isl.outputs):
             for d in program:
                 if d["name"] == n:
                     d["out_slot"] = out_slot
-        return fused_pipeline(program, grid=sched.grid, interpret=interpret)
+        return fused_pipeline(program, grid=isl.schedule.grid,
+                              interpret=interp)
+
+    def build(in_shape):
+        if islands:
+            plan = partition_islands(lp, in_shape, outputs=outs,
+                                     tile_rows=tile_rows)
+            isls = plan.islands
+        else:
+            sched: Schedule = build_schedule(lp, in_shape, order=order,
+                                             outputs=outs,
+                                             tile_rows=tile_rows)
+            isls = [Island(0, [n for n in sched.order
+                               if not lp.stages[n].stage.is_input],
+                           input_names, outs, Fraction(1), sched,
+                           single_tile=False)]
+        return [(isl, compile_island(isl)) for isl in isls]
 
     def run(image, params_override=None):
         import jax.numpy as jnp
@@ -113,7 +236,7 @@ def compile_pallas(lp: LoweredPipeline,
         with obs.span("exec.pallas", backend="pallas",
                       pipeline=lp.pipeline.name, outputs=len(outs)) as sp:
             with enable_x64():
-                arrays = []
+                buffers: Dict[str, object] = {}
                 shape = None
                 for n in input_names:
                     x = jnp.asarray(np.asarray(img_of[n]), dtype=jnp.float64)
@@ -123,19 +246,30 @@ def compile_pallas(lp: LoweredPipeline,
                         raise LoweringError("all pipeline inputs must share "
                                             f"one shape; got {shape} vs "
                                             f"{x.shape}")
-                    arrays.append(B.quantize_input(
-                        x, lp.stages[n].t, B.store_dtype(lp.stages[n]), jnp))
-                key = shape
-                if key not in cache:
+                    buffers[n] = B.quantize_input(
+                        x, lp.stages[n].t, B.store_dtype(lp.stages[n]), jnp)
+                if shape not in cache:
                     sp.set(kernel_cache="miss")
-                    cache[key] = build(shape)
+                    cache[shape] = build(shape)
                 else:
                     sp.set(kernel_cache="hit")
-                out_arrays = cache[key](*arrays)
-                res = {n: np.asarray(B.dequant(lp.stages[n], arr))
-                       for n, arr in zip(outs, out_arrays)}
-        # fused kernel: intermediates never leave the band, so telemetry is
-        # limited to the pipeline outputs (read-only post-processing)
+                compiled = cache[shape]
+                sp.set(islands=len(compiled))
+                for isl, call in compiled:
+                    with obs.span("exec.pallas.island",
+                                  island=isl.idx, rate=str(isl.rate),
+                                  stages=len(isl.stages),
+                                  grid=isl.schedule.grid,
+                                  single_tile=isl.single_tile,
+                                  carriers=isl.carrier_mix(lp)):
+                        for n, arr in zip(isl.outputs,
+                                          call(*[buffers[n]
+                                                 for n in isl.inputs])):
+                            buffers[n] = arr
+                res = {n: np.asarray(B.dequant(lp.stages[n], buffers[n]))
+                       for n in outs}
+        # fused kernels: intermediates never leave their island's bands,
+        # so telemetry covers the materialized boundaries + outputs only
         obs.runtime.record_env(res, lp, backend="pallas")
         return res
 

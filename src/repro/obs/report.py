@@ -11,7 +11,10 @@ prints up to three tables (plain text, or GitHub-flavoured markdown with
     on deadline-exhausted stages;
   * **runtime stages** — execution time per stage (`exec.stage` spans)
     joined with `rt.range` telemetry: observed min/max, saturation
-    counts, and alpha headroom (plan bits − observed bits).
+    counts, and alpha headroom (plan bits − observed bits);
+  * **pallas islands** — one row per rate island of the fused pallas
+    executor (`exec.pallas.island` spans): rate, fused stage count, grid,
+    carrier mix, and time aggregated over calls.
 
 `summarize` / `render` are importable for programmatic use (benchmarks,
 examples, tests).
@@ -117,7 +120,25 @@ def summarize(records: List[dict]) -> Dict[str, List[Dict[str, Any]]]:
         if st not in seen:
             runtime.append({"stage": st, "exec_ms": ms})
 
-    return {"passes": passes, "smt_stages": smt_rows, "runtime": runtime}
+    isl: Dict[tuple, Dict[str, Any]] = {}
+    for s in spans:
+        if s["name"] != "exec.pallas.island":
+            continue
+        a = s.get("attrs", {})
+        key = (a.get("island"), a.get("rate"), a.get("carriers"))
+        row = isl.setdefault(key, {
+            "island": a.get("island"), "rate": a.get("rate"),
+            "stages": a.get("stages"), "grid": a.get("grid"),
+            "single_tile": a.get("single_tile"),
+            "carriers": a.get("carriers"), "ms": 0.0, "calls": 0,
+        })
+        row["ms"] += s["dur_us"] / 1e3
+        row["calls"] += 1
+    islands = sorted(isl.values(), key=lambda r: (r["island"] is None,
+                                                  r["island"]))
+
+    return {"passes": passes, "smt_stages": smt_rows, "runtime": runtime,
+            "islands": islands}
 
 
 def render(summary: Dict[str, List[Dict[str, Any]]],
@@ -133,6 +154,10 @@ def render(summary: Dict[str, List[Dict[str, Any]]],
                ["stage", "type", "exec_ms", "min", "max", "sat",
                 "alpha_plan", "alpha_obs", "headroom"],
                summary["runtime"], markdown),
+        _table("pallas islands",
+               ["island", "rate", "stages", "grid", "single_tile",
+                "carriers", "ms", "calls"],
+               summary.get("islands", []), markdown),
     ]
     out = "\n".join(p for p in parts if p)
     return out if out else "(trace contains no summarizable spans)\n"

@@ -356,3 +356,40 @@ def test_traced_hcd_compile_end_to_end(tmp_path):
     text = report.render(summary)
     md = report.render(summary, markdown=True)
     assert "smt stages" in text and "| stage |" in md
+
+
+# ---------------------------------------------------------------------------
+# pallas island execution spans
+# ---------------------------------------------------------------------------
+
+def test_pallas_island_spans_and_report_breakdown(tmp_path):
+    # dus at an odd height is rate-inexact: the pallas executor stitches
+    # several islands, and every island call must emit one
+    # `exec.pallas.island` span nested under the `exec.pallas` run span
+    pipe = dus.build()
+    plan = run_plan(pipe, ["interval"])
+    rng = np.random.default_rng(23)
+    img = rng.integers(0, 256, (47, 48)).astype(np.float64)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)   # cpu interpret note
+        with obs.tracing() as tr:
+            run_fixed(pipe, img, plan, backend="pallas")
+    outer, = tr.spans("exec.pallas")
+    isl = tr.spans("exec.pallas.island")
+    assert outer.attrs["islands"] == len(isl) > 1
+    for s in isl:
+        assert s.parent_id == outer.span_id
+        assert s.attrs["stages"] >= 1 and s.attrs["grid"] >= 1
+        assert "/" in s.attrs["rate"] or s.attrs["rate"].isdigit()
+        assert s.attrs["carriers"]                  # non-empty datapath census
+    assert any(s.attrs["single_tile"] for s in isl)
+
+    # the report joins the spans into a per-island breakdown table
+    obs.write_jsonl(tr, tmp_path / "p.jsonl")
+    summary = report.summarize(obs.load_jsonl(tmp_path / "p.jsonl"))
+    rows = summary["islands"]
+    assert {r["island"] for r in rows} == {s.attrs["island"] for s in isl}
+    for r in rows:
+        assert r["calls"] == 1 and r["ms"] >= 0
+    md = report.render(summary, markdown=True)
+    assert "pallas islands" in md and "single_tile" in md
