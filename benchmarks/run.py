@@ -280,6 +280,132 @@ def _pipeline_throughput():
                   f"(bit-exact); pallas interpret-mode checked")
 
 
+def _serving_throughput():
+    """Sustained serving throughput through `repro.serve.PipelineServer`.
+
+    Drives USM frame streams through the batched serving harness
+    (docs/serving.md) at batch sizes 1/4/16 and reports frames/sec plus
+    p50/p99 per-frame latency (submit -> result, queueing included) per
+    shape.  Shapes: ``smoke`` (64x64 — dispatch-overhead regime, where
+    batching shows its >=2x win), ``1080p`` (1080x1920) and ``4k``
+    (2160x3840) full-frame rates.
+
+    Bit-exactness: at the smoke shape every served frame is compared to
+    the per-image `run_fixed` numpy-oracle loop and the run fails on any
+    mismatch (larger shapes reuse the same batched program, which
+    tests/test_serving.py pins exact across shapes and plans).
+
+    Emits BENCH_serving_throughput.json at the repo root (CI artifact +
+    job summary).  Env knobs: REPRO_SERVE_SHAPES (comma list of smoke /
+    1080p / 4k / HxW; default "smoke,1080p,4k" — CI smoke runs set
+    "smoke"), REPRO_SERVE_BATCHES (default "1,4,16"),
+    REPRO_SERVE_BACKEND (default "lowered"; also "pallas"/"sharded"),
+    REPRO_SERVE_FRAMES (frames per measurement, default 2*batch,
+    min 8).
+    """
+    import warnings
+
+    import numpy as np
+
+    from repro.dsl.exec import run_fixed
+    from repro.pipelines import usm
+    from repro.pipelines import workflows as W
+    from repro.serve import PipelineServer
+
+    NAMED = {"smoke": (64, 64), "1080p": (1080, 1920),
+             "4k": (2160, 3840)}
+
+    def parse_shape(s):
+        if s in NAMED:
+            return s, NAMED[s]
+        h, w = s.lower().split("x")
+        return s, (int(h), int(w))
+
+    shapes = [parse_shape(s) for s in os.environ.get(
+        "REPRO_SERVE_SHAPES", "smoke,1080p,4k").split(",") if s]
+    batches = [int(b) for b in os.environ.get(
+        "REPRO_SERVE_BATCHES", "1,4,16").split(",") if b]
+    backend = os.environ.get("REPRO_SERVE_BACKEND", "lowered")
+    frames_env = os.environ.get("REPRO_SERVE_FRAMES", "")
+
+    pipe = usm.build()
+    params = dict(usm.DEFAULT_PARAMS)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        alphas, signed = W.static_alphas(pipe)
+        types = W.types_from_alpha(pipe, alphas, signed,
+                                   {n: 4 for n in pipe.stages})
+
+    rows = []
+    blob = {"pipeline": "usm", "backend": backend, "shapes": {}}
+    rng = np.random.default_rng(0)
+    for label, (h, w) in shapes:
+        n_frames_of = lambda b: int(frames_env) if frames_env \
+            else max(2 * b, 8)
+        imgs = [rng.integers(0, 256, (h, w)).astype(np.float64)
+                for _ in range(max(n_frames_of(b) for b in batches))]
+        oracle = None
+        if label == "smoke":
+            oracle = [run_fixed(pipe, im, types, params) for im in imgs]
+        shape_entry = {"h": h, "w": w, "batch": {}}
+        for b in batches:
+            n = n_frames_of(b)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                with PipelineServer(pipe, types, params, backend=backend,
+                                    batch_size=b) as srv:
+                    srv.warmup([(h, w)])
+                    t_done = [None] * n
+                    futs = []
+                    t0 = time.perf_counter()
+                    for i in range(n):
+                        fut = srv.submit(imgs[i])
+                        fut.add_done_callback(
+                            lambda f, i=i: t_done.__setitem__(
+                                i, time.perf_counter()))
+                        futs.append((time.perf_counter(), fut))
+                    outs = [f.result() for _, f in futs]
+                    t1 = max(t_done)
+            if oracle is not None:
+                for i, out in enumerate(outs):
+                    for k in out:
+                        if not np.array_equal(out[k],
+                                              np.asarray(oracle[i][k])):
+                            raise AssertionError(
+                                f"serving output diverged from the oracle "
+                                f"(usm/{label}, batch={b}, frame {i}, "
+                                f"stage {k!r})")
+            lat_ms = [(t_done[i] - futs[i][0]) * 1e3 for i in range(n)]
+            fps = n / (t1 - t0)
+            entry = {"fps": fps, "frames": n,
+                     "p50_ms": float(np.percentile(lat_ms, 50)),
+                     "p99_ms": float(np.percentile(lat_ms, 99)),
+                     "verified": oracle is not None}
+            shape_entry["batch"][str(b)] = entry
+            rows.append((f"usm/{label}", b, round(fps, 2),
+                         round(entry["p50_ms"], 2),
+                         round(entry["p99_ms"], 2)))
+        if "1" in shape_entry["batch"] and "16" in shape_entry["batch"]:
+            shape_entry["speedup_b16_vs_b1"] = (
+                shape_entry["batch"]["16"]["fps"]
+                / shape_entry["batch"]["1"]["fps"])
+        blob["shapes"][label] = shape_entry
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    out_path = os.path.join(os.path.dirname(here),
+                            "BENCH_serving_throughput.json")
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=1)
+    best = max((e for e in blob["shapes"].values()
+                if "speedup_b16_vs_b1" in e),
+               key=lambda e: e["speedup_b16_vs_b1"], default=None)
+    head = "" if best is None else (
+        f"; batch-16 {best['speedup_b16_vs_b1']:.1f}x batch-1 fps at "
+        f"{best['h']}x{best['w']}")
+    return rows, (f"usm serving via {backend} across "
+                  f"{len(shapes)} shapes x batches {batches}{head}")
+
+
 BENCHES = {}
 
 
@@ -303,6 +429,7 @@ def _register():
         "lm_beta_sweep": _lm_beta_sweep,
         "smt_throughput": _smt_throughput,
         "pipeline_throughput": _pipeline_throughput,
+        "serving_throughput": _serving_throughput,
     })
 
 

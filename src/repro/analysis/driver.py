@@ -15,7 +15,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
-import warnings
 from typing import Dict, List, Optional, Sequence
 
 from repro import obs
@@ -140,10 +139,10 @@ def run_plan(pipeline: Pipeline, passes: Sequence,
             if key is None:
                 DISK_CACHE_STATS.add("skips")
                 sp.set(disk_cache="skip")
-                warnings.warn(
+                obs.warn_once(
                     "plan disk cache skipped: a pass key is process-local "
                     "(custom profile runner); pass key_suffix= for a stable "
-                    "identity", RuntimeWarning, stacklevel=2)
+                    "identity")
             else:
                 cache_path = os.path.join(
                     cache_dir, f"{pipeline.name}-{pipe_hash}-{key}.plan.json")

@@ -18,6 +18,9 @@ output; upsampling stages nearest-expand their inputs before evaluation.
 """
 from __future__ import annotations
 
+import os
+import threading
+from collections import OrderedDict
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -208,47 +211,98 @@ def run_float(pipeline: Pipeline, image, params: Dict[str, float] | None = None,
 
 
 # compiled-executor memo for the lowered run_fixed backends: repeated
-# calls (per-image loops like BenchmarkSetup.fixed_envs) must reuse one
-# fused program instead of re-lowering + re-jitting per call.  Keyed on
-# content, not identity, so mutated pipelines / type maps never hit stale
-# entries.  Small FIFO cap — executors pin jit caches.
-_LOWERED_MEMO: Dict[tuple, Callable] = {}
-_LOWERED_MEMO_CAP = 16
+# calls (per-image loops like BenchmarkSetup.fixed_envs, the serving
+# batcher threads) must reuse one fused program instead of re-lowering +
+# re-jitting per call.  Keyed on content, not identity, so mutated
+# pipelines / type maps never hit stale entries.  LRU with a small
+# configurable cap — executors pin jit caches.  All access holds
+# `_LOWERED_MEMO_LOCK`, including the compile itself: concurrent
+# `run_fixed` calls for the same key (the pipeline server's background
+# threads) must produce EXACTLY ONE compile, and an entry one thread just
+# inserted must never be evicted by a racing insert it can't see.
+_LOWERED_MEMO: "OrderedDict[tuple, Callable]" = OrderedDict()
+_LOWERED_MEMO_LOCK = threading.RLock()
+_LOWERED_MEMO_CAP = int(os.environ.get("REPRO_EXEC_CACHE_CAP", "16"))
 # executor-memo disposition (obs counter group: locked, resettable; shows
 # whether benchmark loops actually reuse their fused programs)
 EXEC_CACHE_STATS = obs.CounterGroup("lowering.executor_cache",
-                                    hits=0, misses=0)
+                                    hits=0, misses=0, evictions=0)
+
+_BACKEND_OF = {"lowered": "jnp", "pallas": "pallas", "sharded": "sharded"}
 
 
-def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
-                      backend: str, column: Optional[str],
-                      datapath: str = "exact") -> Callable:
+def set_executor_cache_cap(cap: int) -> int:
+    """Set the lowered-executor memo capacity; returns the previous cap.
+
+    Default 16, or the `REPRO_EXEC_CACHE_CAP` env var.  Shrinking evicts
+    LRU entries immediately (with `exec.executor_cache` evict events)."""
+    global _LOWERED_MEMO_CAP
+    if cap < 1:
+        raise ValueError(f"executor cache cap must be >= 1, got {cap}")
+    with _LOWERED_MEMO_LOCK:
+        prev, _LOWERED_MEMO_CAP = _LOWERED_MEMO_CAP, cap
+        while len(_LOWERED_MEMO) > _LOWERED_MEMO_CAP:
+            _evict_locked()
+    return prev
+
+
+def clear_executor_cache() -> None:
+    """Drop every memoized executor (test isolation / memory pressure)."""
+    with _LOWERED_MEMO_LOCK:
+        _LOWERED_MEMO.clear()
+
+
+def _evict_locked() -> None:
+    """Evict the least-recently-used entry (lock held by caller)."""
+    key, _ = _LOWERED_MEMO.popitem(last=False)
+    EXEC_CACHE_STATS.add("evictions")
+    obs.event("exec.executor_cache", result="evict", backend=key[3],
+              cap=_LOWERED_MEMO_CAP)
+
+
+def executor_cache_key(pipeline: Pipeline, types, params: Dict[str, float],
+                       backend: str, column: Optional[str],
+                       datapath: str = "exact") -> tuple:
+    """Content key of one compiled executor: (pipeline content hash,
+    plan/type-map serialization, params, backend, column, datapath)."""
     from repro.analysis.driver import pipeline_content_hash
     if hasattr(types, "to_json"):          # BitwidthPlan: stable serialized
         types_key = types.to_json()
     else:
         types_key = repr(sorted((k, str(v)) for k, v in types.items()))
-    key = (pipeline_content_hash(pipeline), types_key,
-           repr(sorted(params.items())), backend, column, datapath)
-    fn = _LOWERED_MEMO.get(key)
-    if fn is None:
+    return (pipeline_content_hash(pipeline), types_key,
+            repr(sorted(params.items())), backend, column, datapath)
+
+
+def _lowered_executor(pipeline: Pipeline, types, params: Dict[str, float],
+                      backend: str, column: Optional[str],
+                      datapath: str = "exact") -> Callable:
+    key = executor_cache_key(pipeline, types, params, backend, column,
+                             datapath)
+    with _LOWERED_MEMO_LOCK:
+        fn = _LOWERED_MEMO.get(key)
+        if fn is not None:
+            _LOWERED_MEMO.move_to_end(key)      # LRU, not FIFO: a hit is use
+            EXEC_CACHE_STATS.add("hits")
+            obs.event("exec.executor_cache", result="hit", backend=backend,
+                      pipeline=pipeline.name)
+            return fn
         EXEC_CACHE_STATS.add("misses")
         obs.event("exec.executor_cache", result="miss", backend=backend,
                   pipeline=pipeline.name)
         from repro.lowering import compile_pipeline
-        be = "jnp" if backend == "lowered" else "pallas"
+        be = _BACKEND_OF[backend]
         outs = list(pipeline.stages) if be == "jnp" else None
+        # compile under the lock: the second thread racing for this key
+        # blocks here and takes the hit path above instead of compiling
+        # its own copy
         fn = compile_pipeline(pipeline, types, params=params,
                               backend=be, outputs=outs, column=column,
                               datapath=datapath)
         while len(_LOWERED_MEMO) >= _LOWERED_MEMO_CAP:
-            _LOWERED_MEMO.pop(next(iter(_LOWERED_MEMO)))
+            _evict_locked()
         _LOWERED_MEMO[key] = fn
-    else:
-        EXEC_CACHE_STATS.add("hits")
-        obs.event("exec.executor_cache", result="hit", backend=backend,
-                  pipeline=pipeline.name)
-    return fn
+        return fn
 
 
 def run_fixed(pipeline: Pipeline, image, types,
@@ -268,18 +322,22 @@ def run_fixed(pipeline: Pipeline, image, types,
       * ``"numpy"`` — the per-stage f64 interpreter (THE bit-exactness
         oracle every other executor is pinned against);
       * ``"jax"``   — the same per-stage walk in f32 jnp (legacy);
-      * ``"lowered"`` / ``"pallas"`` — the plan-driven compile path
-        (`repro.lowering`): one fused jit program / the fused line-buffer
-        Pallas kernel.  Both are bit-identical to ``"numpy"``;
-        ``"lowered"`` returns the full stage env, ``"pallas"`` only the
-        pipeline outputs (intermediates never leave VMEM).
+      * ``"lowered"`` / ``"pallas"`` / ``"sharded"`` — the plan-driven
+        compile path (`repro.lowering`): one fused jit program / the
+        fused line-buffer Pallas kernel / the `shard_map` band-sharded
+        program.  All bit-identical to ``"numpy"``; ``"lowered"``
+        returns the full stage env, ``"pallas"``/``"sharded"`` only the
+        pipeline outputs (intermediates never leave VMEM / the shards).
+        ``"lowered"`` and ``"pallas"`` also accept a leading batch
+        dimension — ``(B, H, W)`` images run as one batched program,
+        bit-identical to the per-image loop (docs/serving.md).
 
     `datapath` (lowered backends only) selects the carrier election:
     ``"exact"`` (int64/f64 wherever the bound needs it) or ``"narrow"``
     (int32/f32-first re-election under exactness proofs — see
     `repro.lowering.ir`).  Both are bit-identical to the numpy oracle.
     """
-    if backend in ("lowered", "pallas"):
+    if backend in _BACKEND_OF:
         run = _lowered_executor(pipeline, types, params or {}, backend,
                                 column, datapath=datapath)
         return run(image)
@@ -289,6 +347,22 @@ def run_fixed(pipeline: Pipeline, image, types,
         plan = types                           # keep dsl import-light)
         phase_types = plan.phase_types(column) or None
         types = plan.types(column)
+    names = pipeline.input_stages()
+    if isinstance(image, dict):
+        arrs = [np.asarray(image[n]) for n in names]
+    elif isinstance(image, (tuple, list)):
+        arrs = [np.asarray(a) for a in image]
+    else:
+        arrs = [np.asarray(image)]
+    if arrs and all(a.ndim == 3 for a in arrs):
+        # (B, H, W) batch: the per-image python loop — the DEFINITION the
+        # batched fused executors are pinned against (docs/serving.md)
+        per = [_run_concrete(pipeline,
+                             dict(zip(names, [a[b] for a in arrs])),
+                             params or {}, types, xp=xp,
+                             phase_types=phase_types)
+               for b in range(arrs[0].shape[0])]
+        return {k: xp.stack([p[k] for p in per]) for k in per[0]}
     return _run_concrete(pipeline, image, params or {}, types, xp=xp,
                          phase_types=phase_types)
 

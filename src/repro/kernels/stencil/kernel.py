@@ -116,20 +116,32 @@ def fixedpoint_stencil(x_q: jax.Array, taps: Sequence[Tap], halo: Halo,
 # fused multi-stage band kernel
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(*refs, program: Sequence[Dict], n_in: int):
-    in_refs, out_refs = refs[:n_in], refs[n_in:]
-    i = pl.program_id(0)
+def eval_band(program: Sequence[Dict], i, load_band) -> Dict[str, jax.Array]:
+    """Evaluate one band step `i` of a fused stage program.
+
+    This is the ONE definition of the band geometry — the tap index
+    algebra and edge-replicate clamps — shared by the pallas kernel
+    (`_fused_kernel`, where `load_band` slices an HBM ref) and the
+    `shard_map` band-sharded executor (`repro.lowering.sharded`, where
+    `load_band` is a `dynamic_slice` on a device-local array).  Sharing
+    it is what makes the sharded program bit-identical to the fused
+    kernel by construction.
+
+    `load_band(d, start)` returns the contiguous `(d["L"], d["W"])` band
+    of input descriptor `d` beginning at (already-clamped) row `start`.
+    `i` may be a traced index (pallas `program_id` or a shard's
+    `axis_index`-derived step).  Returns the full tile dict.
+    """
     by_name = {d["name"]: d for d in program}
     tiles: Dict[str, jax.Array] = {}
     for d in program:
         start = i * d["step"] + d["lo"]
         L, H = d["L"], d["H"]
         if d["kind"] == "input":
-            ref = in_refs[d["in_slot"]]
             # contiguous band load (the line-buffer copy), then reorder
             # with clamped indices for the edge-replicate rows
             b = jnp.clip(start, 0, H - L)
-            band = ref[pl.ds(b, L), :]
+            band = load_band(d, b)
             idx = jnp.clip(start + jnp.arange(L), 0, H - 1) - b
             tiles[d["name"]] = jnp.take(band, idx, axis=0)
         else:
@@ -156,33 +168,74 @@ def _fused_kernel(*refs, program: Sequence[Dict], n_in: int):
                 return jnp.take(t, cols, axis=1)
 
             tiles[d["name"]] = d["fn"](tap, rows_abs)
+    return tiles
+
+
+def band_output(d: Dict, tile: jax.Array) -> jax.Array:
+    """The `step` output rows of a stage's band tile (drops the halo)."""
+    return tile[-d["lo"]: -d["lo"] + d["step"]]
+
+
+def _fused_kernel(*refs, program: Sequence[Dict], n_in: int, batched: bool):
+    in_refs, out_refs = refs[:n_in], refs[n_in:]
+    if batched:
+        # batch is the outer grid axis: one image's band walk per inner
+        # step, intermediates still VMEM-only per (image, band)
+        bi, i = pl.program_id(0), pl.program_id(1)
+
+        def load_band(d, start):
+            return in_refs[d["in_slot"]][bi, pl.ds(start, d["L"]), :]
+    else:
+        i = pl.program_id(0)
+
+        def load_band(d, start):
+            return in_refs[d["in_slot"]][pl.ds(start, d["L"]), :]
+
+    tiles = eval_band(program, i, load_band)
     for d in program:
         slot = d.get("out_slot")
         if slot is not None:
-            tile = tiles[d["name"]]
-            out_refs[slot][...] = tile[-d["lo"]: -d["lo"] + d["step"]]
+            rows = band_output(d, tiles[d["name"]])
+            if batched:
+                out_refs[slot][0] = rows      # block carries a unit batch dim
+            else:
+                out_refs[slot][...] = rows
 
 
 def fused_pipeline(program: Sequence[Dict], grid: int,
-                   interpret: bool = True) -> Callable:
+                   interpret: bool = True,
+                   batch: int | None = None) -> Callable:
     """Compile a band-scheduled stage program into one pallas_call.
 
     Returns ``f(*input_arrays) -> tuple(output_arrays)``; see the module
-    docstring for the descriptor contract.
+    docstring for the descriptor contract.  With `batch` the inputs and
+    outputs carry a leading batch dimension and the grid gains an outer
+    batch axis — `grid=(batch, bands)` — so every (image, band) pair is
+    one grid step of the same VMEM-resident band program.
     """
     n_in = sum(1 for d in program if d["kind"] == "input")
     outs = sorted((d for d in program if d.get("out_slot") is not None),
                   key=lambda d: d["out_slot"])
     kern = functools.partial(_fused_kernel, program=tuple(program),
-                             n_in=n_in)
+                             n_in=n_in, batched=batch is not None)
+    if batch is None:
+        out_specs = [pl.BlockSpec((d["step"], d["W"]), lambda i: (i, 0))
+                     for d in outs]
+        out_shape = [jax.ShapeDtypeStruct((d["H"], d["W"]), d["dtype"])
+                     for d in outs]
+        grid_dims: Tuple[int, ...] = (grid,)
+    else:
+        out_specs = [pl.BlockSpec((1, d["step"], d["W"]),
+                                  lambda b, i: (b, i, 0)) for d in outs]
+        out_shape = [jax.ShapeDtypeStruct((batch, d["H"], d["W"]),
+                                          d["dtype"]) for d in outs]
+        grid_dims = (batch, grid)
     call = pl.pallas_call(
         kern,
-        grid=(grid,),
+        grid=grid_dims,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_in,
-        out_specs=[pl.BlockSpec((d["step"], d["W"]), lambda i: (i, 0))
-                   for d in outs],
-        out_shape=[jax.ShapeDtypeStruct((d["H"], d["W"]), d["dtype"])
-                   for d in outs],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )
 

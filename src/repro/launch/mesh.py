@@ -21,6 +21,18 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_band_mesh(n: int | None = None):
+    """1-D mesh whose ``"band"`` axis shards a pipeline's row-band grid.
+
+    The sharded pipeline executor (`repro.lowering.sharded`) splits each
+    rate island's lattice-aligned band schedule over this axis.  Defaults
+    to every local device (1 on the CPU test host — the sharded program
+    still runs through `shard_map`, exercising the full geometry).
+    """
+    n = len(jax.devices()) if n is None else n
+    return jax.make_mesh((n,), ("band",))
+
+
 def batch_axes(mesh) -> tuple:
     """The mesh axes a global-batch dimension shards over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

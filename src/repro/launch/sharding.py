@@ -38,6 +38,7 @@ BASE_RULES: Dict[str, Any] = {
     "rwkv_k": "model",
     "ssm_state": "model",
     "batch": ("pod", "data"),
+    "band_rows": "band",   # pipeline row-band grid (lowering.sharded)
     "embed": None,
     "experts": None,
     "layers": None,

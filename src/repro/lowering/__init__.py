@@ -8,9 +8,12 @@ The compile path the analysis plans exist for (docs/execution_backends.md):
 
 Backends: ``interp`` (the per-stage run_fixed oracle), ``jnp`` (one fused
 jit program), ``pallas`` (fused line-buffer kernels, one per rate island
-— `repro.lowering.islands`).  All three are bit-for-bit identical on
-every pipeline — the differential battery in tests/test_lowering.py and
-tests/test_islands.py pins it.
+— `repro.lowering.islands`), ``sharded`` (the same island band walk
+distributed over a device mesh with `shard_map` —
+`repro.lowering.sharded`).  All are bit-for-bit identical on every
+pipeline, with or without a leading batch dimension — the differential
+batteries in tests/test_lowering.py, tests/test_islands.py and
+tests/test_serving.py pin it.
 
 `lower(..., datapath="narrow")` re-elects every datapath int32/f32-first
 for real-hardware targets (see `repro.lowering.ir`).

@@ -230,6 +230,13 @@ def compile_jnp(lp: LoweredPipeline,
     other stage replays the oracle's f64 expression tree
     (`dsl.exec.eval_expr`) on dequantized operands.  Output dict values
     are the same float64 arrays `run_fixed(backend="numpy")` produces.
+
+    Images with a leading batch dimension — ``(B, H, W)`` instead of
+    ``(H, W)`` — run as ONE `vmap`-batched program over the same fused
+    forward.  Every op in the datapath is per-pixel (MACs, shifts,
+    clips, gathers; no cross-batch reduction anywhere), so the batched
+    program is bit-for-bit the per-image loop (pinned in
+    tests/test_serving.py).
     """
     import jax
     import jax.numpy as jnp
@@ -307,18 +314,32 @@ def compile_jnp(lp: LoweredPipeline,
         return {k: vals[k] for k in outs}
 
     jitted = jax.jit(forward)
+    vjitted = jax.jit(jax.vmap(forward))
 
     def run(image, params_override=None):
         if params_override is not None and dict(params_override) != params:
             raise ValueError("params are baked at compile time; re-lower "
                              "with the new params")
         with obs.span("exec.lowered", backend="jnp",
-                      pipeline=lp.pipeline.name, outputs=len(outs)):
+                      pipeline=lp.pipeline.name, outputs=len(outs)) as sp:
             imgs, _ = normalize_images(lp, image)
             with enable_x64():
                 arrs = tuple(jnp.asarray(np.asarray(im), dtype=jnp.float64)
                              for im in imgs)
-                out = jitted(*arrs)
+                ndims = {a.ndim for a in arrs}
+                if ndims == {3}:          # leading batch dim: vmap program
+                    if len({a.shape[0] for a in arrs}) != 1:
+                        raise LoweringError(
+                            "batched inputs must share one batch size; got "
+                            f"{[a.shape for a in arrs]}")
+                    sp.set(batch=int(arrs[0].shape[0]))
+                    out = vjitted(*arrs)
+                elif ndims == {2}:
+                    out = jitted(*arrs)
+                else:
+                    raise LoweringError(
+                        f"images must all be (H, W) or all (B, H, W); got "
+                        f"{[a.shape for a in arrs]}")
                 res = {k: np.asarray(v) for k, v in out.items()}
         # read-only post-processing: never feeds back into the computation
         obs.runtime.record_env(res, lp, backend="jnp")
@@ -334,21 +355,34 @@ def compile_jnp(lp: LoweredPipeline,
 
 def compile_interp(lp: LoweredPipeline,
                    outputs: Optional[Sequence[str]] = None) -> Executor:
-    """The per-stage numpy f64 oracle, as a backend (the reference)."""
+    """The per-stage numpy f64 oracle, as a backend (the reference).
+
+    Batched ``(B, H, W)`` input runs as a per-image python loop — the
+    DEFINITION the batched fused backends are pinned against."""
     outs = list(outputs or lp.pipeline.outputs)
     phase_types = {n: (ls.phase.lattice, dict(ls.phase.types))
                    for n, ls in lp.stages.items() if ls.phase is not None}
 
-    def run(image, params_override=None):
+    def one(image, params_override):
         from repro.dsl.exec import _run_concrete
+        # per-stage spans + runtime range telemetry live inside
+        # `_run_concrete` (it sees every intermediate stage value)
+        env = _run_concrete(lp.pipeline, image,
+                            dict(params_override or lp.params), lp.types,
+                            xp=np, phase_types=phase_types or None)
+        return {k: np.asarray(env[k]) for k in outs}
+
+    def run(image, params_override=None):
+        imgs, names = normalize_images(lp, image)
+        arrs = [np.asarray(im, dtype=np.float64) for im in imgs]
         with obs.span("exec.interp", backend="interp",
                       pipeline=lp.pipeline.name, outputs=len(outs)):
-            # per-stage spans + runtime range telemetry live inside
-            # `_run_concrete` (it sees every intermediate stage value)
-            env = _run_concrete(lp.pipeline, image,
-                                dict(params_override or lp.params), lp.types,
-                                xp=np, phase_types=phase_types or None)
-        return {k: np.asarray(env[k]) for k in outs}
+            if all(a.ndim == 3 for a in arrs):
+                per = [one(dict(zip(names, [a[b] for a in arrs])),
+                           params_override)
+                       for b in range(arrs[0].shape[0])]
+                return {k: np.stack([p[k] for p in per]) for k in outs}
+            return one(dict(zip(names, arrs)), params_override)
 
     run.lowered = lp
     return run
@@ -377,6 +411,8 @@ def compile_backend(lp: LoweredPipeline, backend: str = "jnp",
                     outputs=None, **kw) -> Executor:
     if backend == "pallas":
         from repro.lowering import pallas_backend  # registers itself
+    elif backend == "sharded":
+        from repro.lowering import sharded         # registers itself
     try:
         factory = BACKENDS[backend]
     except KeyError:

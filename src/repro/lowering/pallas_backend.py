@@ -40,7 +40,6 @@ everywhere else — so off-accelerator CI needs no TPU runner.
 """
 from __future__ import annotations
 
-import warnings
 from fractions import Fraction
 from typing import Dict, Optional, Sequence
 
@@ -56,14 +55,17 @@ from repro.lowering.schedule import Schedule, build_schedule
 # capability detection
 # ---------------------------------------------------------------------------
 
-_warned: set = set()
-_probe_cache: Dict[str, bool] = {}
+# capability warnings dedupe through the process-wide registry so every
+# entry point (pallas, sharded, serve) that resolves capabilities warns
+# once per process, not once per compiled executor (tests clear the set)
+from repro.obs.warnonce import _WARNED as _warned  # noqa: E402
 
 
 def _warn_once(msg: str) -> None:
-    if msg not in _warned:
-        _warned.add(msg)
-        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    obs.warn_once(msg, stacklevel=4)
+
+
+_probe_cache: Dict[str, bool] = {}
 
 
 def needs_64bit(lp: LoweredPipeline) -> bool:
@@ -168,6 +170,28 @@ def _compute_descriptor(lp: LoweredPipeline, name: str, ss):
                 inputs=tuple(st.inputs), fn=fn)
 
 
+def island_program(lp: LoweredPipeline, isl: Island) -> list:
+    """Stage descriptors (kernels.stencil.kernel contract) for one island.
+
+    Shared with the `shard_map` band-sharded executor
+    (`repro.lowering.sharded`): both execute the same descriptor list
+    through `kernels.stencil.kernel.eval_band`, so their datapaths are
+    identical closures by construction."""
+    program = []
+    slot = {n: i for i, n in enumerate(isl.inputs)}
+    for n in isl.schedule.order:
+        ss = isl.schedule.stages[n]
+        if n in slot:
+            program.append(_input_descriptor(n, lp.stages[n], ss, slot[n]))
+        else:
+            program.append(_compute_descriptor(lp, n, ss))
+    for out_slot, n in enumerate(isl.outputs):
+        for d in program:
+            if d["name"] == n:
+                d["out_slot"] = out_slot
+    return program
+
+
 # ---------------------------------------------------------------------------
 # compile
 # ---------------------------------------------------------------------------
@@ -192,24 +216,16 @@ def compile_pallas(lp: LoweredPipeline,
     interp = resolve_interpret(lp) if interpret is None else interpret
     cache: Dict[tuple, list] = {}
 
-    def compile_island(isl: Island):
-        program = []
-        slot = {n: i for i, n in enumerate(isl.inputs)}
-        for n in isl.schedule.order:
-            ss = isl.schedule.stages[n]
-            if n in slot:
-                program.append(_input_descriptor(n, lp.stages[n], ss,
-                                                 slot[n]))
-            else:
-                program.append(_compute_descriptor(lp, n, ss))
-        for out_slot, n in enumerate(isl.outputs):
-            for d in program:
-                if d["name"] == n:
-                    d["out_slot"] = out_slot
-        return fused_pipeline(program, grid=isl.schedule.grid,
-                              interpret=interp)
+    def compile_island(isl: Island, batch: Optional[int]):
+        return fused_pipeline(island_program(lp, isl),
+                              grid=isl.schedule.grid,
+                              interpret=interp, batch=batch)
 
-    def build(in_shape):
+    def build(shape):
+        # a leading batch dim becomes the kernels' outer grid axis; the
+        # band plan itself is a function of the per-image (H, W) only
+        batch = shape[0] if len(shape) == 3 else None
+        in_shape = tuple(shape[-2:])
         if islands:
             plan = partition_islands(lp, in_shape, outputs=outs,
                                      tile_rows=tile_rows)
@@ -222,7 +238,7 @@ def compile_pallas(lp: LoweredPipeline,
                                if not lp.stages[n].stage.is_input],
                            input_names, outs, Fraction(1), sched,
                            single_tile=False)]
-        return [(isl, compile_island(isl)) for isl in isls]
+        return [(isl, compile_island(isl, batch)) for isl in isls]
 
     def run(image, params_override=None):
         import jax.numpy as jnp
@@ -240,6 +256,10 @@ def compile_pallas(lp: LoweredPipeline,
                 shape = None
                 for n in input_names:
                     x = jnp.asarray(np.asarray(img_of[n]), dtype=jnp.float64)
+                    if x.ndim not in (2, 3):
+                        raise LoweringError(
+                            f"images must be (H, W) or (B, H, W); got "
+                            f"{tuple(x.shape)}")
                     if shape is None:
                         shape = tuple(x.shape)
                     elif tuple(x.shape) != shape:
@@ -248,6 +268,8 @@ def compile_pallas(lp: LoweredPipeline,
                                             f"{x.shape}")
                     buffers[n] = B.quantize_input(
                         x, lp.stages[n].t, B.store_dtype(lp.stages[n]), jnp)
+                if len(shape) == 3:
+                    sp.set(batch=int(shape[0]))
                 if shape not in cache:
                     sp.set(kernel_cache="miss")
                     cache[shape] = build(shape)

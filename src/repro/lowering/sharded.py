@@ -1,0 +1,216 @@
+"""`shard_map` band-sharded execution of the lowered island plan.
+
+The pallas backend walks each rate island's row-band schedule serially
+down the image; this backend distributes the *same* band walk across
+devices: a 1-D mesh (`launch.mesh.make_band_mesh`, axis ``"band"``)
+splits each island's grid into contiguous runs of ``grid // n_shards``
+bands, every device executes its run with the island's intermediates
+device-local, and the per-shard output rows concatenate back into the
+full stage arrays along the lattice-aligned band axis — bands are the
+partition unit exactly as they are the VMEM-residency unit in the fused
+kernel, and island boundaries stay materialized (replicated) buffers
+just like the HBM stitching.
+
+Bit-exactness is by construction, not by re-derivation: the shard body
+executes the SAME stage descriptors (`pallas_backend.island_program`)
+through the SAME band geometry (`kernels.stencil.kernel.eval_band`) as
+the fused Pallas kernel, with `load_band` a clamped `dynamic_slice` on
+the replicated input instead of an HBM-ref slice.  Device ``d`` computes
+band steps ``[d*k, (d+1)*k)`` via `lax.axis_index`; since every band's
+value depends only on the (replicated) island inputs, the concatenated
+result is bit-identical to the serial walk — pinned against the numpy
+oracle in tests/test_serving.py, batched and phase-split plans included.
+
+Fallbacks (one-time `RuntimeWarning` via `repro.obs.warn_once`):
+
+  * an island whose grid does not divide over the mesh, and
+  * single-tile islands (grid == 1 cannot split),
+
+run the identical band walk unsharded on the local device — never a
+different datapath, so exactness is unaffected.
+
+Images with a leading batch dimension ``(B, H, W)`` vmap the shard body
+over the batch axis inside `shard_map` (bands stay the partition unit;
+the batch axis is replicated).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro import obs
+from repro.lowering import backends as B
+from repro.lowering.ir import LoweredPipeline, LoweringError
+from repro.lowering.islands import Island, partition_islands
+from repro.lowering.pallas_backend import island_program
+
+
+def _band_walk(program: Sequence[dict], k: int, base_of):
+    """f(*inputs) -> tuple of output stage arrays for `k` band steps.
+
+    `base_of()` yields the first band index of this walk — 0 for the
+    serial fallback, ``axis_index("band") * k`` inside a shard.  The
+    loop over the k steps is a static python loop (k is small: bands
+    per shard), each step re-running `eval_band` — the one shared
+    definition of the tap/clamp geometry.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.stencil.kernel import band_output, eval_band
+
+    outs = sorted((d for d in program if d.get("out_slot") is not None),
+                  key=lambda d: d["out_slot"])
+
+    def fn(*inputs):
+        def load_band(d, start):
+            return jax.lax.dynamic_slice_in_dim(
+                inputs[d["in_slot"]], start, d["L"], axis=0)
+
+        base = base_of()
+        chunks: Dict[str, List] = {d["name"]: [] for d in outs}
+        for j in range(k):
+            tiles = eval_band(program, base + j, load_band)
+            for d in outs:
+                chunks[d["name"]].append(band_output(d, tiles[d["name"]]))
+        return tuple(jnp.concatenate(chunks[d["name"]], axis=0)
+                     for d in outs)
+
+    return fn
+
+
+def compile_sharded(lp: LoweredPipeline,
+                    outputs: Optional[Sequence[str]] = None,
+                    mesh=None,
+                    tile_rows: Optional[int] = None) -> B.Executor:
+    """Band-sharded executor over `mesh` (default: all local devices).
+
+    Shape-specialized like the pallas backend: the island plan and the
+    jitted shard programs are built (and cached) per input shape on
+    first call.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_band_mesh
+    from repro.launch.sharding import spec_for
+
+    outs = list(outputs or lp.pipeline.outputs)
+    order = B.needed_stages(lp, outs)
+    input_names = [n for n in order if lp.stages[n].stage.is_input]
+    cache: Dict[tuple, list] = {}
+
+    def compile_island(isl: Island, mesh, batch: Optional[int]):
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError:            # newer jax: promoted out of experimental
+            from jax.sharding import shard_map   # type: ignore
+        program = island_program(lp, isl)
+        S = mesh.shape["band"]
+        grid = isl.schedule.grid
+        outs_d = sorted((d for d in program
+                         if d.get("out_slot") is not None),
+                        key=lambda d: d["out_slot"])
+        if isl.single_tile or grid % S != 0:
+            reason = ("single-tile island" if isl.single_tile else
+                      f"grid {grid} does not divide over {S} shards")
+            obs.warn_once(
+                f"sharded: island {isl.idx} of {lp.pipeline.name!r} falls "
+                f"back to the serial band walk ({reason}); pad the image "
+                f"or shrink the mesh for full band sharding")
+            body = _band_walk(program, grid, lambda: 0)
+            fn = jax.jit(jax.vmap(body) if batch else body)
+            return fn, False
+        k = grid // S
+        body = _band_walk(
+            program, k, lambda: jax.lax.axis_index("band") * k)
+        if batch:
+            body = jax.vmap(body)
+        # every input is replicated; outputs shard their band-built row
+        # axis — spec_for maps the "band_rows" logical axis onto the mesh
+        # (grid % S == 0 implies row divisibility: H = grid * step)
+        row_axes = ("band_rows",) if not batch else (None, "band_rows")
+        out_specs = tuple(
+            spec_for((d["H"], d["W"]) if not batch
+                     else (batch, d["H"], d["W"]),
+                     row_axes + (None,), mesh)
+            for d in outs_d)
+        fn = jax.jit(shard_map(body, mesh=mesh,
+                               in_specs=(P(),) * len(isl.inputs),
+                               out_specs=out_specs, check_rep=False))
+        return fn, True
+
+    def build(shape, mesh):
+        batch = shape[0] if len(shape) == 3 else None
+        in_shape = tuple(shape[-2:])
+        plan = partition_islands(lp, in_shape, outputs=outs,
+                                 tile_rows=tile_rows)
+        return [(isl,) + compile_island(isl, mesh, batch)
+                for isl in plan.islands]
+
+    def run(image, params_override=None):
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+        if params_override is not None and \
+                dict(params_override) != lp.params:
+            raise ValueError("params are baked at compile time; re-lower "
+                             "with the new params")
+        m = make_band_mesh() if mesh is None else mesh
+        imgs, _ = B.normalize_images(lp, image)
+        img_of = dict(zip(lp.pipeline.input_stages(), imgs))
+        with obs.span("exec.sharded", backend="sharded",
+                      pipeline=lp.pipeline.name, outputs=len(outs),
+                      shards=m.shape["band"]) as sp:
+            with enable_x64():
+                buffers: Dict[str, object] = {}
+                shape = None
+                for n in input_names:
+                    x = jnp.asarray(np.asarray(img_of[n]),
+                                    dtype=jnp.float64)
+                    if x.ndim not in (2, 3):
+                        raise LoweringError(
+                            f"images must be (H, W) or (B, H, W); got "
+                            f"{tuple(x.shape)}")
+                    if shape is None:
+                        shape = tuple(x.shape)
+                    elif tuple(x.shape) != shape:
+                        raise LoweringError(
+                            "all pipeline inputs must share one shape; "
+                            f"got {shape} vs {x.shape}")
+                    buffers[n] = B.quantize_input(
+                        x, lp.stages[n].t, B.store_dtype(lp.stages[n]),
+                        jnp)
+                if len(shape) == 3:
+                    sp.set(batch=int(shape[0]))
+                key = shape + (m.shape["band"],)
+                if key not in cache:
+                    sp.set(kernel_cache="miss")
+                    cache[key] = build(shape, m)
+                else:
+                    sp.set(kernel_cache="hit")
+                compiled = cache[key]
+                sp.set(islands=len(compiled),
+                       sharded_islands=sum(1 for _, _, s in compiled
+                                           if s))
+                for isl, call, is_sharded in compiled:
+                    with obs.span("exec.sharded.island",
+                                  island=isl.idx, rate=str(isl.rate),
+                                  stages=len(isl.stages),
+                                  grid=isl.schedule.grid,
+                                  sharded=is_sharded):
+                        for n, arr in zip(isl.outputs,
+                                          call(*[buffers[i]
+                                                 for i in isl.inputs])):
+                            buffers[n] = arr
+                res = {n: np.asarray(B.dequant(lp.stages[n], buffers[n]))
+                       for n in outs}
+        # like pallas: intermediates never materialize, telemetry covers
+        # island boundaries + outputs only
+        obs.runtime.record_env(res, lp, backend="sharded")
+        return res
+
+    run.lowered = lp
+    return run
+
+
+B.register_backend("sharded", compile_sharded)

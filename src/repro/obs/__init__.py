@@ -24,11 +24,13 @@ from .exporters import (         # noqa: F401
     load_jsonl, to_chrome_trace, to_jsonl_records, write_chrome_trace,
     write_jsonl,
 )
+from .warnonce import reset_warn_once, warn_once   # noqa: F401
 from . import runtime            # noqa: F401
 
 __all__ = [
     "CounterGroup", "Span", "Tracer", "active_tracer", "all_counters",
     "disable", "enable", "event", "gauge", "is_enabled", "load_jsonl",
-    "runtime", "runtime_ranges_enabled", "span", "to_chrome_trace",
-    "to_jsonl_records", "tracing", "write_chrome_trace", "write_jsonl",
+    "reset_warn_once", "runtime", "runtime_ranges_enabled", "span",
+    "to_chrome_trace", "to_jsonl_records", "tracing", "warn_once",
+    "write_chrome_trace", "write_jsonl",
 ]

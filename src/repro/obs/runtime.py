@@ -20,6 +20,12 @@ plan's alpha bits actually cover:
     is counted against its own rails and a per-residue breakdown is
     attached.
 
+Stage arrays are `(y, x)` planes, optionally under any number of leading
+batch axes (the batched executors produce `(B, H, W)`): every reduction
+runs over *all* leading axes, and the sampling-lattice residue slicing
+applies to the trailing two — so batched and per-image-looped telemetry
+agree (min/max join, rail counts sum; pinned in tests/test_serving.py).
+
 Everything here is **read-only post-processing** of stage outputs — it
 never feeds back into the computation, which is how the tracing-enabled
 vs disabled bit-exactness guarantee holds trivially.  It only runs when
@@ -92,14 +98,17 @@ def record_stage(name: str, value, t=None, phase=None,
             types = getattr(phase, "types", None)
             if lattice is None:       # raw plan entry ((My, Mx), {res: t})
                 lattice, types = phase
-        if lattice is not None and v.ndim == 2:
+        if lattice is not None and v.ndim >= 2:
+            # residues live on the trailing (y, x) axes; leading batch
+            # axes pass through the slice so batched rail counts are the
+            # sum of the per-image counts
             my, mx = lattice
             sat_lo = sat_hi = 0
             per_res = {}
             for ry in range(my):
                 for rx in range(mx):
                     t_res = types.get((ry, rx), t)
-                    sub = v[ry::my, rx::mx]
+                    sub = v[..., ry::my, rx::mx]
                     q = np.rint(sub * (2.0 ** t_res.beta))
                     c = _rail_counts(q, t_res)
                     sat_lo += c["lo"]

@@ -1,0 +1,41 @@
+"""Process-once warning dedupe for capability / fallback notices.
+
+Serving traffic calls the same entry points thousands of times per
+second; a capability notice (pallas interpret-mode fallback, plan
+disk-cache skip, band-sharding degradation) that fires per call floods
+the log and the `warnings` registry.  Every such notice routes through
+`warn_once`, which emits each distinct message text exactly once per
+process — thread-safe, because the first callers race in from the
+serving batcher threads.
+
+Tests that assert on a specific warning clear the registry first
+(`reset_warn_once()`, or clear the shared `_WARNED` set directly).
+"""
+from __future__ import annotations
+
+import threading
+import warnings
+
+__all__ = ["warn_once", "reset_warn_once"]
+
+_WARNED: set = set()
+_LOCK = threading.Lock()
+
+
+def warn_once(msg: str, category=RuntimeWarning, stacklevel: int = 3) -> bool:
+    """Emit `msg` as a warning the first time it is seen; no-op after.
+
+    Returns True when the warning was actually emitted (first sighting).
+    """
+    with _LOCK:
+        if msg in _WARNED:
+            return False
+        _WARNED.add(msg)
+    warnings.warn(msg, category, stacklevel=stacklevel)
+    return True
+
+
+def reset_warn_once() -> None:
+    """Forget every deduped message (test isolation hook)."""
+    with _LOCK:
+        _WARNED.clear()

@@ -1,0 +1,11 @@
+"""Serving layer: continuous batched inference over compiled pipelines.
+
+`PipelineServer` (`repro.serve.pipeline_server`) is the maxtext
+`OfflineInference`-shaped harness: a warmup-compiled executor behind a
+background batcher that packs request streams into fixed-size batches
+for the batched/sharded execution backends (docs/serving.md).
+"""
+from repro.serve.pipeline_server import (PipelineServer, SERVE_STATS,
+                                         serve_offline)
+
+__all__ = ["PipelineServer", "SERVE_STATS", "serve_offline"]

@@ -464,9 +464,11 @@ def test_disk_cache_key_covers_passes_betas_and_content(tmp_path):
 
 
 def test_disk_cache_skips_process_local_profile_runners(tmp_path):
+    from repro import obs
     from repro.analysis import DISK_CACHE_STATS
     p = usm.build()
     clear_memo()
+    obs.reset_warn_once()       # the skip warning is process-once now
     prof = ProfilePass(_profile_images(),
                        runner=lambda im, par: run_float(p, im, par),
                        params=usm.DEFAULT_PARAMS)

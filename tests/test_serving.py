@@ -1,0 +1,343 @@
+"""Serving layer: batched/sharded execution + the concurrent compile cache.
+
+Three contracts under test (docs/serving.md):
+
+  * **batched bit-exactness** — every lowered backend accepts a leading
+    batch dimension and is bit-for-bit the per-image numpy-oracle loop,
+    on every benchmark pipeline, including deliberately-saturating
+    phase-split residue plans;
+  * **executor cache** — the `dsl.exec` memo is a locked LRU: concurrent
+    `run_fixed` calls for one key produce EXACTLY ONE compile, hits
+    refresh recency, shrinking the cap evicts;
+  * **PipelineServer** — fixed-batch padding, drain-on-close, and
+    end-to-end oracle equality through the background batcher.
+"""
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.interval import Interval
+from repro.core.range_analysis import StageRange
+from repro.analysis import run_plan
+from repro.dsl.exec import (EXEC_CACHE_STATS, clear_executor_cache,
+                            run_fixed, set_executor_cache_cap)
+from repro.lowering import compile_backend, lower
+from repro.pipelines import dus, hcd, optical_flow, usm
+from repro.pipelines import workflows as W
+
+RNG = np.random.default_rng(777)
+
+
+def _types_for(pipe, beta=4):
+    alphas, signed = W.static_alphas(pipe)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return W.types_from_alpha(pipe, alphas, signed,
+                                  {n: beta for n in pipe.stages})
+
+
+def _phase_plan(pipe, betas=3):
+    """Deliberately-saturating residue plan (test_lowering's dus_ext
+    story): residue ranges tighter than true, so per-residue saturation
+    engages on random data."""
+    plan = run_plan(pipe, ["interval"],
+                    betas={n: betas for n in pipe.stages})
+    plan.phases["interval"] = {
+        "resS": ((2, 1), {(0, 0): StageRange.from_interval(
+            Interval(-50.0, 50.0))}),
+        "UyS": ((2, 1), {(0, 0): StageRange.from_interval(
+            Interval(0.0, 150.0)),
+            (1, 0): StageRange.from_interval(Interval(0.0, 250.0))}),
+        "band": ((2, 2), {(0, 0): StageRange.from_interval(
+            Interval(-30.0, 30.0))}),
+    }
+    return plan
+
+
+def _batch(n_in, B, shape, seed):
+    rng = np.random.default_rng(seed)
+    arrs = tuple(rng.integers(0, 256, (B,) + shape).astype(np.float64)
+                 for _ in range(n_in))
+    return arrs if n_in > 1 else arrs[0]
+
+
+BENCHES = [
+    ("usm", usm.build, dict(usm.DEFAULT_PARAMS), 1, (48, 48)),
+    ("hcd", hcd.build, {}, 1, (48, 48)),
+    ("dus_ext", dus.build_extended, {}, 1, (48, 48)),
+    ("of_pyramid", lambda: optical_flow.build_pyramid(1), {}, 2, (40, 40)),
+]
+
+
+# ---------------------------------------------------------------------------
+# batched differential battery: every backend vs the per-image oracle loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,build,params,n_in,shape",
+                         BENCHES, ids=[b[0] for b in BENCHES])
+@pytest.mark.parametrize("backend", ["lowered", "pallas", "sharded"])
+def test_batched_backends_bit_exact(name, build, params, n_in, shape,
+                                    backend):
+    pipe = build()
+    types = _types_for(pipe)
+    arg = _batch(n_in, 3, shape, seed=5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        oracle = run_fixed(pipe, arg, types, params)   # per-image loop
+        out = run_fixed(pipe, arg, types, params, backend=backend)
+        for k in out:
+            np.testing.assert_array_equal(
+                np.asarray(oracle[k]), np.asarray(out[k]),
+                err_msg=f"{name}/{backend}/{k}")
+        # the same executor still takes single images afterwards
+        single_arg = tuple(a[0] for a in arg) if n_in > 1 else arg[0]
+        one = run_fixed(pipe, single_arg, types, params, backend=backend)
+        for k in one:
+            np.testing.assert_array_equal(
+                np.asarray(oracle[k])[0], np.asarray(one[k]),
+                err_msg=f"{name}/{backend}/{k}/single")
+
+
+@pytest.mark.parametrize("backend", ["lowered", "pallas", "sharded"])
+def test_batched_phase_split_saturating_plan_bit_exact(backend):
+    """Batched residue datapaths: per-residue saturation engages and the
+    batched program still matches the per-image oracle bit-for-bit."""
+    pipe = dus.build_extended()
+    plan = _phase_plan(pipe)
+    imgs = _batch(1, 3, (48, 48), seed=9)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        lp = lower(pipe, plan)
+        assert lp.stages["resS"].phase is not None
+        oracle = run_fixed(pipe, imgs, plan)
+        out = run_fixed(pipe, imgs, plan, backend=backend)
+    for k in out:
+        np.testing.assert_array_equal(np.asarray(oracle[k]),
+                                      np.asarray(out[k]), err_msg=k)
+    # the tightened (0,0)-residue rail must actually clip somewhere,
+    # else this proved nothing
+    t_res = lp.stages["resS"].phase.types[(0, 0)]
+    q = np.rint(np.asarray(oracle["resS"])[:, 0::2, :] * 2.0 ** t_res.beta)
+    assert (np.count_nonzero(q >= t_res.int_max)
+            + np.count_nonzero(q <= t_res.int_min)) > 0
+
+
+def test_sharded_explicit_mesh_and_fallback():
+    """compile_backend(..., "sharded", mesh=...): the 1-device band mesh
+    runs the shard_map program; a rate-inexact height partitions into
+    single-tile islands that take the warned serial fallback — both
+    bit-exact."""
+    from repro.launch.mesh import make_band_mesh
+    pipe = usm.build()
+    types = _types_for(pipe)
+    params = dict(usm.DEFAULT_PARAMS)
+    img = _batch(1, 2, (48, 48), seed=13)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        lp = lower(pipe, types, params=params)
+        run = compile_backend(lp, "sharded", mesh=make_band_mesh(1))
+        oracle = run_fixed(pipe, img, types, params)
+        out = run(img)
+    for k in out:
+        np.testing.assert_array_equal(np.asarray(oracle[k]),
+                                      np.asarray(out[k]), err_msg=k)
+
+    pyr = dus.build()                  # 47 rows: rate-inexact heights
+    ptypes = _types_for(pyr)
+    pimg = _batch(1, 2, (47, 48), seed=14)
+    obs.reset_warn_once()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        o2 = run_fixed(pyr, pimg, ptypes, {})
+        s2 = run_fixed(pyr, pimg, ptypes, {}, backend="sharded")
+    caught = [w for w in rec if "serial band walk" in str(w.message)]
+    for k in s2:
+        np.testing.assert_array_equal(np.asarray(o2[k]),
+                                      np.asarray(s2[k]), err_msg=k)
+    assert caught, "expected the sharded fallback RuntimeWarning"
+
+
+# ---------------------------------------------------------------------------
+# batched runtime telemetry
+# ---------------------------------------------------------------------------
+
+def test_batched_telemetry_matches_per_image_sums():
+    """`record_stage` on a (B, H, W) array: min/max join and rail counts
+    sum over the per-image planes (the 2-D-only assumption is gone)."""
+    from repro.core.fixedpoint import FixedPointType
+    from repro.obs.runtime import record_stage
+    t = FixedPointType(6, 2, signed=True)
+    phase = ((2, 1), {(0, 0): FixedPointType(4, 2, signed=True)})
+    rng = np.random.default_rng(21)
+    batched = rng.uniform(-9, 9, (3, 8, 8)).round(1)
+    with obs.tracing(runtime_ranges=True):
+        whole = record_stage("s", batched, t, phase, backend="test")
+        per = [record_stage("s", batched[b], t, phase, backend="test")
+               for b in range(3)]
+    assert whole["min"] == min(p["min"] for p in per)
+    assert whole["max"] == max(p["max"] for p in per)
+    assert whole["n"] == sum(p["n"] for p in per)
+    for key in ("sat", "sat_lo", "sat_hi"):
+        assert whole[key] == sum(p[key] for p in per), key
+    assert whole["alpha_obs"] == max(p["alpha_obs"] for p in per)
+
+
+# ---------------------------------------------------------------------------
+# executor cache: locked LRU, one compile per key under contention
+# ---------------------------------------------------------------------------
+
+def test_concurrent_run_fixed_compiles_exactly_once():
+    """The hammer: many threads, one (pipeline, plan, backend) key ->
+    exactly one compile (miss), the rest hits, all outputs exact."""
+    pipe = usm.build()
+    types = _types_for(pipe)
+    params = dict(usm.DEFAULT_PARAMS)
+    img = _batch(1, 1, (32, 32), seed=2)[0]
+    clear_executor_cache()
+    EXEC_CACHE_STATS.reset()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        oracle = run_fixed(pipe, img, types, params)
+        results, errors = [None] * 8, []
+        barrier = threading.Barrier(8)
+
+        def work(i):
+            try:
+                barrier.wait()
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", RuntimeWarning)
+                    results[i] = run_fixed(pipe, img, types, params,
+                                           backend="lowered")
+            except BaseException as e:       # surface, don't deadlock
+                errors.append(e)
+
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    assert not errors, errors
+    assert EXEC_CACHE_STATS["misses"] == 1
+    assert EXEC_CACHE_STATS["hits"] == 7
+    for r in results:
+        for k in r:
+            np.testing.assert_array_equal(np.asarray(oracle[k]),
+                                          np.asarray(r[k]), err_msg=k)
+
+
+def test_executor_cache_lru_and_cap():
+    """Hits refresh recency (LRU, not FIFO) and the cap is enforced with
+    eviction counters; `set_executor_cache_cap` shrinks immediately."""
+    pipes = {b: _types_for(usm.build(), beta=b) for b in (3, 4, 5)}
+    pipe = usm.build()
+    params = dict(usm.DEFAULT_PARAMS)
+    img = _batch(1, 1, (32, 32), seed=4)[0]
+    clear_executor_cache()
+    EXEC_CACHE_STATS.reset()
+    prev = set_executor_cache_cap(2)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            run_fixed(pipe, img, pipes[3], params, backend="lowered")  # A
+            run_fixed(pipe, img, pipes[4], params, backend="lowered")  # B
+            run_fixed(pipe, img, pipes[3], params, backend="lowered")  # hit A
+            assert EXEC_CACHE_STATS["hits"] == 1
+            # C evicts the LRU entry — B, because the hit refreshed A
+            run_fixed(pipe, img, pipes[5], params, backend="lowered")
+            assert EXEC_CACHE_STATS["evictions"] == 1
+            run_fixed(pipe, img, pipes[3], params, backend="lowered")
+            assert EXEC_CACHE_STATS["hits"] == 2          # A survived
+            run_fixed(pipe, img, pipes[4], params, backend="lowered")
+            assert EXEC_CACHE_STATS["misses"] == 4        # B recompiled
+            # shrinking the cap evicts down to size right away
+            set_executor_cache_cap(1)
+            assert EXEC_CACHE_STATS["evictions"] >= 2
+    finally:
+        set_executor_cache_cap(prev)
+        clear_executor_cache()
+
+
+# ---------------------------------------------------------------------------
+# PipelineServer: padding, drain, oracle equality through the batcher
+# ---------------------------------------------------------------------------
+
+def test_pipeline_server_end_to_end_exact():
+    from repro.serve import PipelineServer, serve_offline
+    pipe = usm.build()
+    types = _types_for(pipe)
+    params = dict(usm.DEFAULT_PARAMS)
+    frames = [_batch(1, 1, (32, 32), seed=100 + i)[0] for i in range(7)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with PipelineServer(pipe, types, params, backend="lowered",
+                            batch_size=4) as srv:
+            assert srv.warmup([(32, 32)]) == [(4, 32, 32)]
+            assert srv.warmup([(32, 32)]) == []      # already warm
+            outs = serve_offline(srv, frames)
+        for f, o in zip(frames, outs):
+            ref = run_fixed(pipe, f, types, params)
+            for k in o:
+                np.testing.assert_array_equal(np.asarray(ref[k]), o[k],
+                                              err_msg=k)
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(frames[0])
+
+
+def test_pipeline_server_pads_partial_batches_and_drains():
+    from repro.serve import SERVE_STATS, PipelineServer
+    pipe = usm.build()
+    types = _types_for(pipe)
+    params = dict(usm.DEFAULT_PARAMS)
+    SERVE_STATS.reset()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        srv = PipelineServer(pipe, types, params, backend="lowered",
+                             batch_size=4, batch_timeout_s=0.05)
+        fut = srv.submit(_batch(1, 1, (32, 32), seed=7)[0])
+        fut.result(timeout=60)        # lone request: padded 1 -> 4
+        srv.close()
+        srv.close()                   # idempotent
+    assert SERVE_STATS["frames"] == 1
+    assert SERVE_STATS["batches"] == 1
+    assert SERVE_STATS["padded"] == 3
+
+
+def test_pipeline_server_concurrent_producers_share_one_compile():
+    """Multi-threaded submitters + the memo: one compile for the server's
+    key even with producers racing the warmup."""
+    from repro.serve import PipelineServer
+    pipe = usm.build()
+    types = _types_for(pipe)
+    params = dict(usm.DEFAULT_PARAMS)
+    clear_executor_cache()
+    EXEC_CACHE_STATS.reset()
+    frames = [_batch(1, 1, (32, 32), seed=200 + i)[0] for i in range(12)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        ref = run_fixed(pipe, frames[0], types, params)
+        EXEC_CACHE_STATS.reset()      # count only the server's traffic
+        clear_executor_cache()
+        with PipelineServer(pipe, types, params, backend="lowered",
+                            batch_size=4) as srv:
+            futs = [None] * len(frames)
+
+            def produce(lo, hi):
+                for i in range(lo, hi):
+                    futs[i] = srv.submit(frames[i])
+
+            threads = [threading.Thread(target=produce,
+                                        args=(j * 4, (j + 1) * 4))
+                       for j in range(3)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            outs = [f.result(timeout=120) for f in futs]
+    assert EXEC_CACHE_STATS["misses"] == 1     # the server's own compile
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]), outs[0][k],
+                                      err_msg=k)
