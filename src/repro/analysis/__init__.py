@@ -18,6 +18,8 @@ Legacy entry points (`core.range_analysis.analyze`,
 `workflows.static_alphas` / `smt_alphas` / `alpha_columns`) are thin shims
 over one-pass plans — see docs/analysis_api.md for the migration table.
 """
+from repro.analysis.cluster import (ClusterPass, cluster,
+                                    homogeneity_clusters, stage_rates)
 from repro.analysis.combinators import (MeetPass, RefinePass, WidenPass,
                                         meet, refine, widen_to)
 from repro.analysis.driver import (DISK_CACHE_STATS, MEMO_STATS, clear_memo,
@@ -29,10 +31,11 @@ from repro.analysis.passes import (AnalysisPass, DomainPass, PassResult,
 from repro.analysis.plan import (BitwidthPlan, PlanNestingError, Provenance)
 
 __all__ = [
-    "AnalysisPass", "BitwidthPlan", "DISK_CACHE_STATS", "DomainPass",
-    "MeetPass", "MEMO_STATS",
+    "AnalysisPass", "BitwidthPlan", "ClusterPass", "DISK_CACHE_STATS",
+    "DomainPass", "MeetPass", "MEMO_STATS",
     "PassResult", "PlanNestingError", "ProfilePass", "Provenance",
-    "RefinePass", "SmtPass", "WidenPass", "clear_memo", "make_pass", "meet",
+    "RefinePass", "SmtPass", "WidenPass", "clear_memo", "cluster",
+    "homogeneity_clusters", "make_pass", "meet",
     "one_pass_ranges", "pipeline_content_hash", "refine", "register_pass",
-    "run_plan", "widen_to",
+    "run_plan", "stage_rates", "widen_to",
 ]

@@ -64,23 +64,25 @@ def uniform_beta_search(stage_names: Sequence[str], quality_fn: QualityFn,
     return hi, passes
 
 
-def reverse_topo_refine(pipeline: Pipeline, betas: Dict[str, int],
-                        quality_fn: QualityFn, target: float,
-                        frozen: Sequence[str] = ()) -> tuple[Dict[str, int], int]:
-    """One reverse-topological pass of per-stage binary searches (§V-B).
+def refine_sequence(order: Sequence[str], betas: Dict[str, int],
+                    quality_fn: QualityFn, target: float,
+                    beta_lo: int = 0) -> tuple[Dict[str, int], int]:
+    """Per-name downward binary searches in the given order (§V-B core).
 
-    `frozen` stages (e.g. 8-bit inputs) are not touched.  Returns the
-    refined beta map and the number of profile passes consumed.
+    For each name in `order`, finds the minimal beta in `[beta_lo, cur]`
+    still meeting the target while every other assignment is held fixed.
+    This is the refinement kernel shared by the pipeline-stage search
+    (`reverse_topo_refine`, beta_lo=0) and the LM weight-class search
+    (`quant.autoquant`, beta_lo=MIN_BITS).  Returns (refined, passes).
     """
     betas = dict(betas)
     passes = 0
-    order = [n for n in reversed(pipeline.topo_order()) if n not in frozen]
 
     for name in order:
         cur = betas[name]
-        if cur == 0:
+        if cur <= beta_lo:
             continue
-        lo, hi = 0, cur           # find min b in [0, cur] with quality >= target
+        lo, hi = beta_lo, cur     # find min b in [beta_lo, cur] meeting target
 
         def q(b: int) -> float:
             nonlocal passes
@@ -89,8 +91,8 @@ def reverse_topo_refine(pipeline: Pipeline, betas: Dict[str, int],
             trial[name] = b
             return quality_fn(trial)
 
-        if q(0) >= target:
-            betas[name] = 0
+        if q(beta_lo) >= target:
+            betas[name] = beta_lo
             continue
         # invariant: q(lo) < target <= q(hi)  (hi=cur met target on entry)
         while hi - lo > 1:
@@ -101,6 +103,18 @@ def reverse_topo_refine(pipeline: Pipeline, betas: Dict[str, int],
                 lo = mid
         betas[name] = hi
     return betas, passes
+
+
+def reverse_topo_refine(pipeline: Pipeline, betas: Dict[str, int],
+                        quality_fn: QualityFn, target: float,
+                        frozen: Sequence[str] = ()) -> tuple[Dict[str, int], int]:
+    """One reverse-topological pass of per-stage binary searches (§V-B).
+
+    `frozen` stages (e.g. 8-bit inputs) are not touched.  Returns the
+    refined beta map and the number of profile passes consumed.
+    """
+    order = [n for n in reversed(pipeline.topo_order()) if n not in frozen]
+    return refine_sequence(order, betas, quality_fn, target)
 
 
 def search(pipeline: Pipeline, quality_fn: QualityFn, target: float,

@@ -1,0 +1,38 @@
+"""`repro.dse` — closed-loop bitwidth design-space exploration.
+
+The layer ROADMAP item 3 asked for on top of analysis → plan → compile →
+execute: search per-stage `(alpha, beta)` assignments against
+`cost_model.design_cost` under a measured output-error budget and return
+a Pareto frontier of error vs area/power.
+
+    from repro.dse import ErrorBudget, run_design_search
+    plan = setup.plan()
+    res = plan and run_design_search(setup.pipeline, plan,
+                                     setup.train_images,
+                                     ErrorBudget(min_psnr=50.0))
+    res.chosen            # cheapest feasible DesignPoint
+    res.frontier.to_json()
+
+Pieces: `frontier` (DesignPoint / Frontier model + serde), `evaluate`
+(measured scoring through `run_fixed`, executor-cache memoized),
+`betas` (plan-aware §V-B beta search — `core.beta_search` un-orphaned),
+`strategies` (beta sweep / cluster alpha descent / annealing controller),
+`driver` (`run_design_search`).  Homogeneity clustering itself is an
+`AnalysisPass` — `repro.analysis.ClusterPass`.  See docs/design_search.md.
+"""
+from repro.dse.betas import (min_output_psnr, quality_fn_from_plan,
+                             search_betas)
+from repro.dse.driver import DSEResult, run_design_search, seed_alphas
+from repro.dse.evaluate import DSE_STATS, Evaluator, output_stages, psnr_of
+from repro.dse.frontier import (PSNR_CAP, DesignPoint, ErrorBudget,
+                                Frontier)
+from repro.dse.strategies import (anneal, cluster_alpha_descent,
+                                  seeded_beta_sweep)
+
+__all__ = [
+    "DSE_STATS", "DSEResult", "DesignPoint", "ErrorBudget", "Evaluator",
+    "Frontier", "PSNR_CAP", "anneal", "cluster_alpha_descent",
+    "min_output_psnr", "output_stages", "psnr_of", "quality_fn_from_plan",
+    "run_design_search", "search_betas", "seed_alphas",
+    "seeded_beta_sweep",
+]

@@ -1,0 +1,107 @@
+"""Plan-aware beta search — `core.beta_search` un-orphaned from plans.
+
+`core/beta_search.py` is the paper's §V-B two-phase heuristic over an
+opaque `quality_fn(beta_map)`; historically every caller hand-built that
+callback from raw `(alphas, signed)` dicts.  `search_betas` is the one
+modern entry point: hand it a `BitwidthPlan` (or raw columns) plus
+calibration images and it constructs the measured quality callback —
+fixed-point execution on a named `run_fixed` backend against the f64
+float oracle — and runs uniform search + reverse-topo refinement.
+
+`pipelines.workflows.BenchmarkSetup.run_beta_search` is now a deprecated
+shim over this function (numerically identical on the same inputs — the
+shim-equivalence test in `tests/test_dse.py` pins it on USM).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import beta_search
+from repro.core.beta_search import BetaSearchResult
+from repro.core.fixedpoint import FixedPointType
+from repro.core.graph import Pipeline
+
+
+def plan_columns(plan_or_alphas, signed=None, column: Optional[str] = None):
+    """(alphas, signed, column_name) from a plan or raw dict columns."""
+    if hasattr(plan_or_alphas, "alphas") and hasattr(plan_or_alphas, "_col"):
+        plan = plan_or_alphas
+        return (plan.alphas(column), plan.signed(column),
+                plan._col(column))
+    if signed is None:
+        raise TypeError("raw alphas need an explicit signed map "
+                        "(or pass a BitwidthPlan)")
+    return dict(plan_or_alphas), dict(signed), column or ""
+
+
+def min_output_psnr(pipeline: Pipeline):
+    """Default quality metric: worst-output PSNR vs the reference env."""
+    from repro.dse.evaluate import output_stages, psnr_of
+
+    outs = output_stages(pipeline)
+
+    def metric(ref_env, fix_env, params) -> float:
+        vals = []
+        for o in outs:
+            r = np.asarray(ref_env[o], dtype=np.float64)
+            peak = float(np.max(np.abs(r)))
+            vals.append(psnr_of(r, np.asarray(fix_env[o]), peak))
+        return min(vals)
+
+    return metric
+
+
+def quality_fn_from_plan(pipeline: Pipeline, plan_or_alphas, *,
+                         images: Sequence, signed=None,
+                         column: Optional[str] = None,
+                         params: Optional[Dict[str, float]] = None,
+                         metric: Optional[Callable] = None,
+                         backend: str = "numpy",
+                         refs=None) -> Callable[[Dict[str, int]], float]:
+    """Measured `quality_fn(beta_map)` for `core.beta_search`.
+
+    `metric(ref_env, fixed_env, params) -> float` (higher = better)
+    defaults to worst-output PSNR; quality is the mean over `images`.
+    Alphas below 1 take the standard clamp-to-1 (plan discipline).
+    """
+    from repro.dsl.exec import run_fixed, run_float
+
+    alphas, signed, _col = plan_columns(plan_or_alphas, signed, column)
+    params = dict(params or {})
+    metric = metric or min_output_psnr(pipeline)
+    if refs is None:
+        refs = [run_float(pipeline, im, params) for im in images]
+
+    def qf(beta_map: Dict[str, int]) -> float:
+        types = {n: FixedPointType(alpha=max(alphas[n], 1),
+                                   beta=beta_map.get(n, 0),
+                                   signed=signed[n])
+                 for n in pipeline.stages}
+        qs = [metric(r, run_fixed(pipeline, im, types, params,
+                                  backend=backend), params)
+              for im, r in zip(images, refs)]
+        return float(np.mean(qs))
+
+    return qf
+
+
+def search_betas(pipeline: Pipeline, plan_or_alphas, *, images: Sequence,
+                 target: float, signed=None, column: Optional[str] = None,
+                 params: Optional[Dict[str, float]] = None,
+                 metric: Optional[Callable] = None, backend: str = "numpy",
+                 refs=None, beta_hi: int = 12, frozen: Sequence[str] = (),
+                 fixed_betas: Optional[Dict[str, int]] = None,
+                 ) -> BetaSearchResult:
+    """Uniform sweep + reverse-topo refine against a measured quality.
+
+    The plan-aware face of `core.beta_search.search`: alphas/signed come
+    from the plan's `column` (default column when None), quality from
+    executing each trial design on `images` via `backend`.
+    """
+    qf = quality_fn_from_plan(pipeline, plan_or_alphas, images=images,
+                              signed=signed, column=column, params=params,
+                              metric=metric, backend=backend, refs=refs)
+    return beta_search.search(pipeline, qf, target, beta_hi=beta_hi,
+                              frozen=frozen, fixed_betas=fixed_betas)

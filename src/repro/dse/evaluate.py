@@ -1,0 +1,243 @@
+"""Measured candidate evaluation — every `DesignPoint` earns its numbers.
+
+A candidate `(alpha, beta)` assignment is *specialized* into a concrete
+fixed-point program (`dsl.exec.run_fixed` over the plan-driven lowering)
+and run on the calibration images; quality is PSNR / max-abs-err of the
+pipeline outputs against the f64 float oracle, and area/power come from
+`cost_model.design_cost` on the same type map.  There is deliberately **no
+analytical quality model** anywhere in this module — the paper's search
+trusts only executed designs, and so does this one (AnyHLS-style: each
+candidate is a fully specialized program, which the bit-exact lowered
+backends make cheap).
+
+Two memo layers keep the closed loop fast:
+
+  * the evaluator's own result memo, keyed on the candidate's
+    (alphas, betas) content — a re-proposed duplicate config returns its
+    `DesignPoint` without touching an executor at all (`DSE_STATS.cached`);
+  * the process-wide locked-LRU executor cache in `dsl.exec`
+    (`EXEC_CACHE_STATS`), keyed on the type-map content hash — distinct
+    configs that *lower identically* (or one config across many images)
+    compile exactly once.
+
+`verify(point)` re-scores a point through the **lowered** backend and
+asserts bit-identity with the recorded score, then cross-checks the
+numpy oracle (exact up to rint rounding ties under XLA FP contraction —
+see `Evaluator.verify`) — the "every returned point was scored via
+bit-exact lowered execution" gate the `design_search` benchmark enforces
+on its whole frontier.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.core import cost_model
+from repro.core.fixedpoint import FixedPointType
+from repro.core.graph import Pipeline
+from repro.dsl.exec import run_fixed, run_float
+from repro.dse.frontier import PSNR_CAP, DesignPoint, ErrorBudget
+
+# closed-loop search telemetry: how many candidates were actually executed,
+# how many short-circuited on the result memo, how many the frontier threw
+# away (budget violation / dominated), how many it kept
+DSE_STATS = obs.CounterGroup("dse", evaluated=0, cached=0, rejected=0,
+                             accepted=0)
+
+# Oracle cross-check tolerance for rint rounding-tie flips (see
+# Evaluator.verify): one flipped LSB at one pixel moves PSNR by far less
+# than this, while any real lowering bug drifts by whole decibels.
+ORACLE_TIE_TOL_DB = 1e-3
+
+
+def output_stages(pipeline: Pipeline) -> List[str]:
+    """The pipeline's terminal stages — the signals quality is scored on."""
+    outs = [n for n in pipeline.topo_order() if not pipeline.consumers(n)]
+    return outs or list(pipeline.topo_order())[-1:]
+
+
+def psnr_of(ref: np.ndarray, test: np.ndarray, peak: float) -> float:
+    """PSNR against an explicit peak (the reference signal's own scale)."""
+    mse = float(np.mean((np.asarray(ref, dtype=np.float64)
+                         - np.asarray(test, dtype=np.float64)) ** 2))
+    if mse == 0.0:
+        return PSNR_CAP
+    if peak <= 0.0:
+        return PSNR_CAP if mse == 0.0 else 0.0
+    return min(10.0 * math.log10(peak * peak / mse), PSNR_CAP)
+
+
+class Evaluator:
+    """Scores candidate configs by executing them on calibration images.
+
+    `backend` is the `run_fixed` backend the search loop scores with —
+    ``"lowered"`` (default: the fused jit program, flowing through the
+    locked-LRU executor cache) or ``"numpy"`` (the per-stage oracle; no
+    compile, bit-identical by construction).  `verify` always uses the
+    lowered path regardless, so frontier points are lowered-scored either
+    way.
+    """
+
+    def __init__(self, pipeline: Pipeline, signed: Dict[str, bool],
+                 images: Sequence, budget: ErrorBudget,
+                 params: Optional[Dict[str, float]] = None,
+                 image_width: int = 1920, backend: str = "lowered",
+                 plan_hash: str = "", plan_column: str = "",
+                 sink: Optional[Callable[[DesignPoint], None]] = None):
+        self.pipeline = pipeline
+        self.signed = dict(signed)
+        self.images = list(images)
+        self.budget = budget
+        self.params = dict(params or {})
+        self.image_width = image_width
+        self.backend = backend
+        self.plan_hash = plan_hash
+        self.plan_column = plan_column
+        self.sink = sink
+        self._memo: Dict[Tuple, DesignPoint] = {}
+        self.outputs = output_stages(pipeline)
+        # f64 float oracle envs, computed once; per-output peak = the
+        # reference's own max magnitude (so deep-integer outputs like
+        # HCD's `harris` are scored on their real scale, not [0, 255])
+        self.refs = [run_float(pipeline, im, self.params, backend="numpy")
+                     for im in self.images]
+        self.peaks = {o: max(float(np.max(np.abs(r[o]))) for r in self.refs)
+                      for o in self.outputs}
+
+    # -- candidate -> concrete design ---------------------------------------
+    def types_of(self, alphas: Dict[str, int],
+                 betas: Dict[str, int]) -> Dict[str, FixedPointType]:
+        """Type map of one candidate (alpha floor of 1, plan discipline)."""
+        return {n: FixedPointType(alpha=max(int(alphas[n]), 1),
+                                  beta=int(betas.get(n, 0)),
+                                  signed=self.signed[n])
+                for n in self.pipeline.stages}
+
+    def _score(self, types: Dict[str, FixedPointType],
+               backend: str) -> Tuple[float, float]:
+        """(psnr, max_abs_err) of executed outputs vs the f64 oracle.
+
+        psnr is the worst output's PSNR (mse averaged over images);
+        max_abs_err is the global worst-case across outputs and images.
+        """
+        errs = {o: [] for o in self.outputs}
+        abs_err = 0.0
+        for im, ref in zip(self.images, self.refs):
+            env = run_fixed(self.pipeline, im, types, self.params,
+                            backend=backend)
+            for o in self.outputs:
+                r = np.asarray(ref[o], dtype=np.float64)
+                f = np.asarray(env[o], dtype=np.float64)
+                errs[o].append(float(np.mean((r - f) ** 2)))
+                abs_err = max(abs_err, float(np.max(np.abs(r - f))))
+        psnr = PSNR_CAP
+        for o in self.outputs:
+            mse = float(np.mean(errs[o]))
+            peak = self.peaks[o]
+            if mse == 0.0:
+                continue
+            p = 0.0 if peak <= 0.0 else min(
+                10.0 * math.log10(peak * peak / mse), PSNR_CAP)
+            psnr = min(psnr, p)
+        return psnr, abs_err
+
+    # -- the one evaluation entry point -------------------------------------
+    def evaluate(self, alphas: Dict[str, int], betas: Dict[str, int],
+                 strategy: str = "") -> DesignPoint:
+        key = (tuple(sorted((n, max(int(a), 1)) for n, a in alphas.items())),
+               tuple(sorted((n, int(b)) for n, b in betas.items())))
+        hit = self._memo.get(key)
+        if hit is not None:
+            DSE_STATS.add("cached")
+            obs.event("dse.evaluate", result="cached", strategy=strategy,
+                      pipeline=self.pipeline.name)
+            return hit
+        with obs.span("dse.evaluate", pipeline=self.pipeline.name,
+                      strategy=strategy, backend=self.backend) as sp:
+            types = self.types_of(alphas, betas)
+            psnr, abs_err = self._score(types, self.backend)
+            cost = cost_model.design_cost(self.pipeline, types,
+                                          self.image_width)
+            point = DesignPoint(
+                alphas={n: t.alpha for n, t in types.items()},
+                betas={n: t.beta for n, t in types.items()},
+                signed=dict(self.signed),
+                psnr=psnr, max_abs_err=abs_err,
+                power=cost.power_proxy, lut_bits=cost.lut_bits,
+                dsp_bits=cost.dsp_bits, bram_bits=cost.bram_bits,
+                total_bits=sum(t.width for t in types.values()),
+                meets_budget=self.budget.met_by(psnr, abs_err),
+                strategy=strategy, pipeline=self.pipeline.name,
+                plan_hash=self.plan_hash, plan_column=self.plan_column,
+                verified=False)   # only verify() asserts, never assumes
+            sp.set(psnr=round(psnr, 3), max_abs_err=abs_err,
+                   power=cost.power_proxy,
+                   area=cost.lut_bits + cost.dsp_bits,
+                   total_bits=point.total_bits,
+                   meets_budget=point.meets_budget)
+        DSE_STATS.add("evaluated")
+        self._memo[key] = point
+        if self.sink is not None:
+            self.sink(point)
+        return point
+
+    def verify(self, point: DesignPoint) -> DesignPoint:
+        """Assert the point's score came from bit-exact lowered execution.
+
+        Two checks, with different strictness on purpose:
+
+        * the fused lowered backend must reproduce the recorded score
+          **bit-exactly** — the score is a deterministic measurement of
+          the real lowered program, never a guess;
+        * the numpy per-stage oracle must agree exactly too, *except* on
+          rint rounding ties in the expr f64 fallback, where XLA's FP
+          contraction (FMA / excess precision) can land 1 ulp off a
+          representable tie point and flip a single output LSB.  That
+          envelope is bounded — at most one resolution step per output
+          pixel — so oracle drift beyond one LSB (or beyond
+          `ORACLE_TIE_TOL_DB` of PSNR) still raises.  Such points are
+          kept but flagged `oracle_exact=False`.
+        """
+        types = self.types_of(point.alphas, point.betas)
+        low = self._score(types, "lowered")
+        if low != (point.psnr, point.max_abs_err):
+            raise AssertionError(
+                f"lowered re-score drifted on {self.pipeline.name}: "
+                f"lowered={low} point=({point.psnr}, {point.max_abs_err})")
+        if self.backend in ("lowered", "pallas", "sharded"):
+            ora = self._score(types, "numpy")
+        else:
+            ora = low   # scored on numpy already; lowered equality proven
+        point.oracle_exact = ora == low
+        if not point.oracle_exact:
+            lsb = max(2.0 ** -types[o].beta for o in self.outputs)
+            if (abs(ora[0] - low[0]) > ORACLE_TIE_TOL_DB
+                    or abs(ora[1] - low[1]) > lsb):
+                raise AssertionError(
+                    f"lowered/oracle divergence beyond the rounding-tie "
+                    f"envelope on {self.pipeline.name}: lowered={low} "
+                    f"oracle={ora} (tol {ORACLE_TIE_TOL_DB} dB / {lsb})")
+            obs.event("dse.verify", pipeline=self.pipeline.name,
+                      result="tie-flip", strategy=point.strategy,
+                      psnr_delta=abs(ora[0] - low[0]),
+                      abs_err_delta=abs(ora[1] - low[1]))
+        point.verified = True
+        return point
+
+    def quality_fn(self, alphas: Dict[str, int],
+                   strategy: str = "beta-search") -> Callable:
+        """`core.beta_search`-shaped callback over this evaluator.
+
+        quality(beta_map) = measured worst-output PSNR; every probe the
+        beta search makes lands in the evaluator memo (and the sink, i.e.
+        the frontier) as a first-class candidate — the un-orphaning of
+        `core/beta_search.py`: its binary searches now *are* DSE moves.
+        """
+
+        def qf(beta_map: Dict[str, int]) -> float:
+            return self.evaluate(alphas, beta_map, strategy=strategy).psnr
+
+        return qf

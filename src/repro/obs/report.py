@@ -14,7 +14,10 @@ prints up to three tables (plain text, or GitHub-flavoured markdown with
     counts, and alpha headroom (plan bits − observed bits);
   * **pallas islands** — one row per rate island of the fused pallas
     executor (`exec.pallas.island` spans): rate, fused stage count, grid,
-    carrier mix, and time aggregated over calls.
+    carrier mix, and time aggregated over calls;
+  * **design search** — per-strategy evaluation rollup (`dse.evaluate`
+    spans + cached hits) and the Pareto frontier as accepted during the
+    search (`dse.accept` events): psnr / power / area / total bits.
 
 `summarize` / `render` are importable for programmatic use (benchmarks,
 examples, tests).
@@ -137,8 +140,52 @@ def summarize(records: List[dict]) -> Dict[str, List[Dict[str, Any]]]:
     islands = sorted(isl.values(), key=lambda r: (r["island"] is None,
                                                   r["island"]))
 
+    # design search: per-strategy evaluation rollup (dse.evaluate spans +
+    # cached-hit events) and the frontier as accepted (dse.accept events)
+    strat: Dict[tuple, Dict[str, Any]] = {}
+    for s in spans:
+        if s["name"] != "dse.evaluate":
+            continue
+        a = s.get("attrs", {})
+        key = (a.get("pipeline"), a.get("strategy") or "?")
+        row = strat.setdefault(key, {
+            "pipeline": key[0], "strategy": key[1],
+            "evals": 0, "cached": 0, "ms": 0.0, "best_psnr": None,
+        })
+        row["evals"] += 1
+        row["ms"] += s["dur_us"] / 1e3
+        p = a.get("psnr")
+        if p is not None and (row["best_psnr"] is None
+                              or p > row["best_psnr"]):
+            row["best_psnr"] = p
+    for e in events:
+        if e["name"] != "dse.evaluate":
+            continue
+        a = e.get("attrs", {})
+        key = (a.get("pipeline"), a.get("strategy") or "?")
+        if key in strat:
+            strat[key]["cached"] += 1
+    dse_strategies = sorted(strat.values(),
+                            key=lambda r: (str(r["pipeline"]),
+                                           -r["evals"], r["strategy"]))
+
+    dse_frontier = []
+    for e in events:
+        if e["name"] != "dse.accept":
+            continue
+        a = e.get("attrs", {})
+        dse_frontier.append({
+            "pipeline": a.get("pipeline"), "strategy": a.get("strategy"),
+            "psnr": a.get("psnr"), "power": a.get("power"),
+            "area": a.get("area"), "total_bits": a.get("total_bits"),
+        })
+    dse_frontier.sort(key=lambda r: (str(r["pipeline"]),
+                                     r["power"] if r["power"] is not None
+                                     else 0.0))
+
     return {"passes": passes, "smt_stages": smt_rows, "runtime": runtime,
-            "islands": islands}
+            "islands": islands, "dse_strategies": dse_strategies,
+            "dse_frontier": dse_frontier}
 
 
 def render(summary: Dict[str, List[Dict[str, Any]]],
@@ -158,6 +205,14 @@ def render(summary: Dict[str, List[Dict[str, Any]]],
                ["island", "rate", "stages", "grid", "single_tile",
                 "carriers", "ms", "calls"],
                summary.get("islands", []), markdown),
+        _table("design search strategies",
+               ["pipeline", "strategy", "evals", "cached", "ms",
+                "best_psnr"],
+               summary.get("dse_strategies", []), markdown),
+        _table("design frontier (accepted points)",
+               ["pipeline", "strategy", "psnr", "power", "area",
+                "total_bits"],
+               summary.get("dse_frontier", []), markdown),
     ]
     out = "\n".join(p for p in parts if p)
     return out if out else "(trace contains no summarizable spans)\n"

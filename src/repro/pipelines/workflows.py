@@ -184,9 +184,25 @@ class BenchmarkSetup:
         return qf
 
     def run_beta_search(self, alphas, signed, beta_hi: int = 12):
-        qf = self.beta_quality_fn(alphas, signed)
-        return beta_search.search(self.pipeline, qf, self.quality_target,
-                                  beta_hi=beta_hi)
+        """Deprecated raw-dict beta search — shim over `repro.dse`.
+
+        `repro.dse.search_betas` is the plan-aware entry point (same
+        uniform + reverse-topo machinery, measured quality callback);
+        this shim forwards the benchmark's quality metric and training
+        images and is numerically identical to the historical path
+        (pinned by the shim-equivalence test in tests/test_dse.py).
+        """
+        warnings.warn(
+            "BenchmarkSetup.run_beta_search is deprecated; use "
+            "repro.dse.search_betas(pipeline, plan, images=..., "
+            "target=...) instead", DeprecationWarning, stacklevel=2)
+        from repro.dse import search_betas
+        return search_betas(
+            self.pipeline, alphas, signed=signed, column=None,
+            images=self.train_images, target=self.quality_target,
+            params=self.params,
+            metric=lambda r, f, p: self.quality_of(r, f, p),
+            backend="numpy", beta_hi=beta_hi)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.beta_search import uniform_beta_search
+from repro.core.beta_search import refine_sequence, uniform_beta_search
 from repro.core.fixedpoint import alpha_for_range
 from repro.models.registry import ModelBundle
 from repro.quant.calibrate import (REVERSE_TOPO_CLASSES, classify_path,
@@ -114,19 +114,11 @@ def autoquant(bundle: ModelBundle, params, probe_batches: Sequence[Dict],
     uniform_bits = MIN_BITS + offset
     bits = {c: uniform_bits for c in classes}
 
-    # phase 2: reverse-topological per-class refinement
-    for cls in classes:
-        lo, hi = MIN_BITS, bits[cls]
-        # find the minimal bits for this class holding the target
-        while lo < hi:
-            mid = (lo + hi) // 2
-            trial = dict(bits)
-            trial[cls] = mid
-            if quality(trial) >= target_agreement:
-                hi = mid
-            else:
-                lo = mid + 1
-        bits[cls] = hi
+    # phase 2: reverse-topological per-class refinement — the same §V-B
+    # kernel the pipeline beta search uses (`core.beta_search`), with the
+    # int8-container floor as the search's lower bound
+    bits, _ = refine_sequence(classes, bits, quality, target_agreement,
+                              beta_lo=MIN_BITS)
 
     final_q = quality(bits)
     # bytes: bits/16 per quantized class, uniform-weighted approximation

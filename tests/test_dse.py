@@ -1,0 +1,296 @@
+"""repro.dse: frontier invariants, cluster soundness, closed-loop search.
+
+Pins the guarantees docs/design_search.md advertises:
+
+  * `Frontier` — budget gating, mutual non-domination, eviction on
+    insert, stable serde;
+  * `ClusterPass` — §IV homogeneity clustering is a sound widening of
+    its sub-pass (`check_nesting` holds) and groups the stages the paper
+    groups (HCD's Ix/Iy, Ixx/Iyy, Sxx/Syy);
+  * `search_betas` / the deprecated `run_beta_search` shim are
+    numerically identical on USM;
+  * evaluations memoize — a re-proposed candidate never re-executes,
+    and identical type maps share one compiled executor across
+    evaluators (the locked-LRU executor cache);
+  * `run_design_search` is deterministic under a fixed seed and, end to
+    end on DUS-ext, returns a verified fixed design that beats the
+    all-float design on both modeled power and area within budget.
+
+No hypothesis imports here — this file runs in the CI no-hypothesis lane.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.analysis import ClusterPass, homogeneity_clusters, stage_rates
+from repro.analysis.driver import run_plan
+from repro.core import cost_model
+from repro.core.beta_search import refine_sequence
+from repro.dse import (DSE_STATS, DesignPoint, ErrorBudget, Evaluator,
+                       Frontier, PSNR_CAP, run_design_search, search_betas,
+                       seed_alphas)
+from repro.dsl.exec import EXEC_CACHE_STATS
+from repro.pipelines import hcd
+from repro.pipelines import workflows as W
+
+
+@pytest.fixture(scope="module")
+def usm_setup():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return W.make_usm(n_train=2, n_test=2, shape=(24, 24))
+
+
+@pytest.fixture(scope="module")
+def usm_plan(usm_setup):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return usm_setup.plan()
+
+
+@pytest.fixture(scope="module")
+def dus_setup():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return W.make_dus_ext(n_train=2, n_test=2, shape=(24, 24))
+
+
+def _point(psnr, power, area, tag="t", meets=True):
+    return DesignPoint(alphas={"s": 8}, betas={"s": int(tag == "t")},
+                       signed={"s": False}, psnr=psnr, max_abs_err=0.1,
+                       power=power, lut_bits=area, dsp_bits=0.0,
+                       bram_bits=0.0, total_bits=8, meets_budget=meets,
+                       strategy=tag)
+
+
+# -- frontier model ---------------------------------------------------------
+
+def test_error_budget():
+    b = ErrorBudget(min_psnr=40.0, max_abs_err=1.0)
+    assert b.met_by(45.0, 0.5)
+    assert not b.met_by(39.0, 0.5)
+    assert not b.met_by(45.0, 2.0)
+    assert ErrorBudget.from_json_dict(b.to_json_dict()) == b
+
+
+def test_dominance():
+    a, b = _point(50, 10, 10), _point(50, 12, 10)
+    assert a.dominates(b) and not b.dominates(a)
+    assert not a.dominates(a)                      # never dominates self
+    c = _point(60, 12, 10)                         # trade-off: incomparable
+    assert not a.dominates(c) and not c.dominates(a)
+
+
+def test_frontier_add_evict_invariants():
+    fr = Frontier(ErrorBudget(min_psnr=40.0))
+    assert fr.add(_point(30, 5, 5, meets=False)) == "budget"
+    assert fr.add(_point(50, 10, 10)) == "accepted"
+    assert fr.add(_point(50, 12, 12, tag="u")) == "dominated"
+    # a cheaper point evicts the dominated incumbent
+    p = _point(50, 8, 8, tag="v")
+    p.betas = {"s": 2}                             # distinct config key
+    assert fr.add(p) == "accepted"
+    assert len(fr) == 1 and fr.points()[0].strategy == "v"
+    # duplicate configuration never re-enters
+    assert fr.add(p) == "dominated"
+    fr.check_invariants()
+    assert fr.best("power").strategy == "v"
+
+
+def test_frontier_json_roundtrip():
+    fr = Frontier(ErrorBudget(min_psnr=40.0, max_abs_err=2.0))
+    p = _point(PSNR_CAP, 10, 10)
+    p.verified, p.oracle_exact = True, False
+    fr.add(p)
+    q = _point(50, 5, 20, tag="u")
+    q.betas = {"s": 3}
+    fr.add(q)
+    fr2 = Frontier.from_json(fr.to_json())
+    assert fr.to_json() == fr2.to_json()
+    assert [r.key() for r in fr2.points()] == [r.key() for r in fr.points()]
+    assert fr2.points()[-1].verified and not fr2.points()[-1].oracle_exact
+    # PSNR_CAP keeps exact designs finite in strict JSON
+    assert "Infinity" not in fr.to_json()
+
+
+# -- homogeneity clustering (§IV) ------------------------------------------
+
+def test_cluster_pass_groups_and_nests():
+    pipe = hcd.build()
+    plan = run_plan(pipe, ["interval", ClusterPass(sub="interval")])
+    # the cluster column is a sound widening of its sub-column
+    plan.check_nesting(["interval", "cluster(interval)"])
+    clusters = homogeneity_clusters(pipe, plan.stage_ranges("interval"))
+    multi = [set(c) for c in clusters if len(c) > 1]
+    for pair in ({"Ix", "Iy"}, {"Ixx", "Iyy"}, {"Sxx", "Syy"}):
+        assert any(pair <= m for m in multi), f"{pair} not clustered"
+    # cluster alphas are the member max (here: members agree exactly)
+    srs = plan.stage_ranges("cluster(interval)")
+    sub = plan.stage_ranges("interval")
+    for members in clusters:
+        alpha = max(sub[m].alpha for m in members)
+        assert all(srs[m].alpha == alpha for m in members)
+    # provenance: membership is recorded in the column notes
+    note = " ".join(plan.provenance["cluster(interval)"].notes)
+    assert "homogeneity cluster" in note
+
+
+def test_stage_rates_follow_stride(dus_setup):
+    rates = stage_rates(dus_setup.pipeline)
+    assert min(min(r) for r in rates.values()) < 1   # a downsampled stage
+    # stages at different rates never share a cluster
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        plan = run_plan(dus_setup.pipeline, ["interval"])
+    for members in homogeneity_clusters(
+            dus_setup.pipeline, plan.stage_ranges("interval")):
+        assert len({rates[m] for m in members}) == 1
+
+
+# -- beta search un-orphaned ------------------------------------------------
+
+def test_refine_sequence_unit():
+    quality = lambda bm: 100.0 if bm["a"] >= 2 and bm["b"] >= 3 else 0.0
+    betas, passes = refine_sequence(["a", "b"], {"a": 6, "b": 6},
+                                    quality, target=50.0)
+    assert betas == {"a": 2, "b": 3} and passes > 0
+
+
+def test_shim_matches_search_betas(usm_setup):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        alphas, signed = W.static_alphas(usm_setup.pipeline)
+    with pytest.warns(DeprecationWarning):
+        shim = usm_setup.run_beta_search(alphas, signed, beta_hi=8)
+    direct = search_betas(
+        usm_setup.pipeline, alphas, signed=signed,
+        images=usm_setup.train_images, target=usm_setup.quality_target,
+        params=usm_setup.params,
+        metric=lambda r, f, p: usm_setup.quality_of(r, f, p),
+        backend="numpy", beta_hi=8)
+    assert shim.betas == direct.betas
+    assert shim.uniform_beta == direct.uniform_beta
+    assert shim.quality == direct.quality
+
+
+# -- evaluator memoization --------------------------------------------------
+
+def test_evaluator_memoizes(usm_setup, usm_plan):
+    col = usm_plan._col(None)
+    ev = Evaluator(usm_setup.pipeline, usm_plan.signed(col),
+                   usm_setup.train_images, ErrorBudget(min_psnr=30.0),
+                   params=usm_setup.params, backend="lowered")
+    alphas = usm_plan.alphas(col)
+    betas = {n: 4 for n in usm_setup.pipeline.stages}
+    p1 = ev.evaluate(alphas, betas, strategy="a")
+    before = (dict(DSE_STATS), dict(EXEC_CACHE_STATS))
+    p2 = ev.evaluate(alphas, betas, strategy="b")
+    assert p2 is p1                                  # no re-execution
+    assert DSE_STATS["cached"] == before[0]["cached"] + 1
+    assert DSE_STATS["evaluated"] == before[0]["evaluated"]
+    assert EXEC_CACHE_STATS["misses"] == before[1]["misses"]
+    # a *fresh* evaluator re-executes but reuses the compiled executor:
+    # the locked-LRU cache keys on the type-map content hash
+    ev2 = Evaluator(usm_setup.pipeline, usm_plan.signed(col),
+                    usm_setup.train_images, ErrorBudget(min_psnr=30.0),
+                    params=usm_setup.params, backend="lowered")
+    p3 = ev2.evaluate(alphas, betas, strategy="c")
+    assert EXEC_CACHE_STATS["misses"] == before[1]["misses"]
+    assert (p3.psnr, p3.max_abs_err) == (p1.psnr, p1.max_abs_err)
+
+
+def test_verify_detects_tamper(usm_setup, usm_plan):
+    col = usm_plan._col(None)
+    ev = Evaluator(usm_setup.pipeline, usm_plan.signed(col),
+                   usm_setup.train_images, ErrorBudget(min_psnr=30.0),
+                   params=usm_setup.params, backend="lowered")
+    p = ev.evaluate(usm_plan.alphas(col),
+                    {n: 4 for n in usm_setup.pipeline.stages})
+    assert not p.verified
+    ev.verify(p)
+    assert p.verified
+    bad = DesignPoint.from_json_dict(p.to_json_dict())
+    bad.psnr += 1.0
+    with pytest.raises(AssertionError):
+        ev.verify(bad)
+
+
+# -- closed-loop driver -----------------------------------------------------
+
+def test_seed_alphas_profile_capped(usm_plan):
+    start = seed_alphas(usm_plan)
+    sound = usm_plan.alphas(None)
+    prof = usm_plan.alphas("profile")
+    assert start == {n: min(prof[n], sound[n]) for n in sound}
+
+
+def test_run_design_search_deterministic(usm_setup, usm_plan):
+    kw = dict(params=usm_setup.params, seed=3, anneal_iters=8, ladder=1,
+              backend="numpy")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        r1 = run_design_search(usm_setup.pipeline, usm_plan,
+                               usm_setup.train_images,
+                               ErrorBudget(min_psnr=45.0), **kw)
+        r2 = run_design_search(usm_setup.pipeline, usm_plan,
+                               usm_setup.train_images,
+                               ErrorBudget(min_psnr=45.0), **kw)
+    assert len(r1.frontier) > 0
+    assert r1.frontier.to_json() == r2.frontier.to_json()
+    assert r1.evaluations == r2.evaluations
+
+
+def test_design_search_dus_ext_beats_float(dus_setup):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        plan = dus_setup.plan()
+        res = run_design_search(dus_setup.pipeline, plan,
+                                dus_setup.train_images,
+                                ErrorBudget(min_psnr=40.0),
+                                params=dus_setup.params, seed=0,
+                                anneal_iters=6, ladder=1,
+                                backend="lowered", verify=True)
+    res.frontier.check_invariants()
+    ch = res.chosen
+    assert ch is not None and ch.meets_budget and ch.psnr >= 40.0
+    assert all(p.verified for p in res.frontier.points())
+    flt = cost_model.design_cost(
+        dus_setup.pipeline, cost_model.float_design(dus_setup.pipeline))
+    assert ch.power < flt.power_proxy
+    assert ch.area < flt.lut_bits + flt.dsp_bits
+    # provenance links every point back to the seeding plan
+    assert ch.plan_hash == plan.content_hash
+    assert ch.plan_column == plan._col(None)
+    # the serialized result is self-consistent
+    d = res.to_json_dict()
+    assert d["plan_column"] == plan._col(None)
+    assert len(d["frontier"]["points"]) == len(res.frontier)
+
+
+# -- obs report tables ------------------------------------------------------
+
+def test_report_renders_dse_tables():
+    from repro.obs.report import render, summarize
+    records = [
+        {"kind": "span", "name": "dse.evaluate", "dur_us": 2000,
+         "attrs": {"pipeline": "usm", "strategy": "anneal", "psnr": 50.5}},
+        {"kind": "span", "name": "dse.evaluate", "dur_us": 1000,
+         "attrs": {"pipeline": "usm", "strategy": "anneal", "psnr": 52.0}},
+        {"kind": "event", "name": "dse.evaluate",
+         "attrs": {"pipeline": "usm", "strategy": "anneal",
+                   "result": "cached"}},
+        {"kind": "event", "name": "dse.accept",
+         "attrs": {"pipeline": "usm", "strategy": "anneal", "psnr": 52.0,
+                   "power": 123.0, "area": 456.0, "total_bits": 42}},
+    ]
+    s = summarize(records)
+    assert s["dse_strategies"] == [{"pipeline": "usm", "strategy": "anneal",
+                                    "evals": 2, "cached": 1, "ms": 3.0,
+                                    "best_psnr": 52.0}]
+    assert s["dse_frontier"][0]["total_bits"] == 42
+    out = render(s)
+    assert "design search strategies" in out
+    assert "design frontier (accepted points)" in out
+    md = render(s, markdown=True)
+    assert "| usm | anneal |" in md
