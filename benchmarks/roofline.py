@@ -29,13 +29,52 @@ from typing import Dict, Optional
 HBM_BW = 819e9               # B/s per chip (TPU v5e)
 
 
+def measured_bytes(lp, shape, outputs=None) -> Dict[str, object]:
+    """*Measured* stored-container traffic of a lowered program.
+
+    Unlike the cost model's `bytes_per_pixel_tpu` (a design-time price),
+    this sums what the executors actually materialize: every needed
+    stage's ``H_s * W_s * itemsize(store_dtype)``, per root pixel —
+    deterministic, so it can gate hard in CI.  `wide_bytes_per_pixel`
+    re-prices the same stages under the pre-legalization int32/int64/f64
+    rule; their ratio is the traffic the narrow containers removed.
+    """
+    import numpy as np
+
+    from repro.lowering.backends import (needed_stages, store_dtype,
+                                         wide_store_dtype)
+    from repro.lowering.schedule import stage_shapes
+
+    order = needed_stages(lp, list(outputs or lp.pipeline.outputs))
+    shapes = stage_shapes(lp, tuple(shape))
+    pixels = float(shape[0] * shape[1])
+    narrow = wide = 0.0
+    mix: Dict[str, int] = {}
+    for n in order:
+        ls = lp.stages[n]
+        h, w = shapes[n]
+        dt = np.dtype(store_dtype(ls))
+        narrow += h * w * dt.itemsize
+        wide += h * w * np.dtype(wide_store_dtype(ls)).itemsize
+        mix[dt.name] = mix.get(dt.name, 0) + 1
+    return {
+        "measured_bytes_per_pixel": narrow / pixels,
+        "wide_bytes_per_pixel": wide / pixels,
+        "container_mix": ",".join(f"{k}x{v}" for k, v in sorted(mix.items())),
+        "bytes_saved_frac": 1.0 - narrow / wide if wide else 0.0,
+    }
+
+
 def pipeline_roofline(pipeline, types, frame_ms: float, shape,
                       phase_types: Optional[Dict] = None,
-                      datapaths: Optional[Dict] = None) -> Dict[str, float]:
+                      datapaths: Optional[Dict] = None,
+                      lowered=None) -> Dict[str, float]:
     """Roofline record for one (pipeline, type map, measured frame time).
 
     `datapaths` (a `cost_model.lowered_datapaths` map) prices the model
-    bytes from the actual lowering election when given.
+    bytes from the actual lowering election when given; `lowered` (a
+    `LoweredPipeline`) additionally reports the *measured* stored-
+    container bytes next to the model number (`measured_bytes`).
     """
     from repro.core.cost_model import design_cost
     cost = design_cost(pipeline, types, image_width=shape[1],
@@ -43,13 +82,16 @@ def pipeline_roofline(pipeline, types, frame_ms: float, shape,
     pixels = float(shape[0] * shape[1])
     model_bytes = cost.bytes_per_pixel_tpu * pixels
     achieved = model_bytes / (frame_ms * 1e-3) if frame_ms > 0 else 0.0
-    return {
+    rec = {
         "bytes_per_pixel": cost.bytes_per_pixel_tpu,
         "model_mb_per_frame": model_bytes / 1e6,
         "floor_ms": model_bytes / HBM_BW * 1e3,
         "achieved_gbs": achieved / 1e9,
         "hbm_frac": achieved / HBM_BW,
     }
+    if lowered is not None:
+        rec.update(measured_bytes(lowered, shape))
+    return rec
 
 
 def main() -> None:
@@ -60,13 +102,17 @@ def main() -> None:
         blob = json.load(f)
     h, w = blob["shape"]
     print(f"shape {h}x{w}  (HBM roof {HBM_BW / 1e9:.0f} GB/s)")
-    print(f"{'bench':10s} {'B/px':>7s} {'floor_ms':>9s} "
-          f"{'jnp_ms':>8s} {'GB/s':>7s} {'roof%':>6s}")
+    print(f"{'bench':10s} {'B/px':>7s} {'meas':>7s} {'wide':>7s} "
+          f"{'floor_ms':>9s} {'jnp_ms':>8s} {'GB/s':>7s} {'roof%':>6s}")
     for name, e in blob["benchmarks"].items():
         r = e.get("roofline")
         if not r:
             continue
+        meas = r.get("measured_bytes_per_pixel")
+        wide = r.get("wide_bytes_per_pixel")
         print(f"{name:10s} {r['bytes_per_pixel']:7.1f} "
+              f"{meas if meas is not None else float('nan'):7.1f} "
+              f"{wide if wide is not None else float('nan'):7.1f} "
               f"{r['floor_ms']:9.4f} {e['lowered_jnp_ms']:8.2f} "
               f"{r['achieved_gbs']:7.2f} {100 * r['hbm_frac']:5.1f}%")
 

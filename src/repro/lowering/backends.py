@@ -82,17 +82,63 @@ def carrier_dtype(name: str):
 
 
 def store_dtype(ls: LoweredStage):
-    """Tile dtype a fused backend materializes for this stage."""
+    """Tile dtype a fused backend materializes for this stage.
+
+    The smallest *legalized* container (`core.policy.legalize`) that
+    holds the stage's (alpha, beta) width: int8/uint8/int16/uint16/
+    int32/uint32 — this is where the paper's bit-width savings become
+    real HBM/VMEM traffic instead of a cost-model line.  Exact by
+    construction: every store site (`finish_intlinear`, `snap_expr`,
+    `quantize_input`) clips to ``[t.int_min, t.int_max]`` *before* the
+    final ``astype``, and the legalized container holds that full range,
+    so narrowing the astype never changes a stored value; loads widen
+    back into the MAC carrier (``.astype(carrier)``, zero/sign-extending)
+    or dequantize to f64, both lossless.  Widths 33–52 keep an int64
+    container (legalize's float32 fallback would round); float-stored
+    stages stay f64.
+    """
     import jax.numpy as jnp
     if ls.store_float:
         return jnp.float64
-    if ls.kind == "intlinear":
-        if ls.carrier == "int32pair":
-            # pair MACs are int32 but the finished (clipped) value is
-            # only bounded by the output type
-            return jnp.int32 if ls.t.width <= 31 else jnp.int64
-        return carrier_dtype(ls.carrier)
+    from repro.core.policy import legalize
+    lt = legalize(ls.t)
+    if lt.fp is not None:              # width <= 32: smallest container
+        return lt.dtype
+    return jnp.int64                   # 33..52 exact-int bits
+
+
+def wide_store_dtype(ls: LoweredStage):
+    """The pre-legalization container rule (int32/int64/f64) — kept as
+    the baseline `measured bytes/pixel` is compared against."""
+    import jax.numpy as jnp
+    if ls.store_float:
+        return jnp.float64
     return jnp.int32 if ls.t.width <= 31 else jnp.int64
+
+
+def fused_store_dtype(ls: LoweredStage):
+    """In-program container for the fused jnp executor's intermediates.
+
+    Inside ONE jit program nothing between stages reaches HBM — XLA
+    fuses the elementwise chains — so there the stored container is
+    only visible as vector converts, and sub-32-bit lanes pessimize
+    CPU XLA by ~10% (hcd) while moving zero real bytes.  Trace-time
+    specialization (the AnyHLS idiom, no runtime branching): on CPU
+    hosts in-program intermediates are floored at 32 bits; on TPU/GPU
+    the true legalized container is kept — there narrow tiles are the
+    real VMEM/HBM win.  Value-neutral either way: the clip into
+    ``[t.int_min, t.int_max]`` precedes the cast and the wider
+    container holds the range.  Every *materialization* point — input
+    tiles, pallas band copies, island boundary buffers, sharded
+    replicated buffers, serving batches — always uses the true
+    `store_dtype`.
+    """
+    import jax
+    import jax.numpy as jnp
+    dt = np.dtype(store_dtype(ls))
+    if jax.default_backend() in ("tpu", "gpu") or dt.itemsize >= 4:
+        return store_dtype(ls)
+    return jnp.uint32 if dt.kind == "u" else jnp.int32
 
 
 def accumulate_intlinear(ls: LoweredStage, tap_of, zeros):
@@ -133,8 +179,33 @@ def quantize_input(x, t: Optional[FixedPointType], dtype, xp):
     return q.astype(dtype)
 
 
-def finish_intlinear(ls: LoweredStage, acc, rows_abs, W: int):
-    """Accumulator -> saturated scaled-int tile (union + per-residue)."""
+def ingest_input(x, ls: LoweredStage, xp):
+    """Image (or pre-quantized container array) -> stored input tile.
+
+    The zero-copy ingestion convention: an array arriving already in the
+    stage's legalized container dtype is treated as *pre-quantized* —
+    its values are the scaled integers ``rint(v * 2^beta)`` — and used
+    as the stored tile directly, skipping the f64 round-trip (for a
+    uint8 beta-0 full-range input the raw pixel buffer IS that tile).
+    Anything else takes the oracle path: cast to f64, snap to `t`'s
+    grid.  Callers must only hand container-dtype arrays that really
+    are on-grid (``repro.serve`` quantizes once at submit).
+    """
+    dt = store_dtype(ls)
+    if ls.t is not None and x.dtype == dt:
+        return x
+    x = x.astype(xp.float64)
+    if ls.t is None:
+        return x
+    return quantize_input(x, ls.t, dt, xp)
+
+
+def finish_intlinear(ls: LoweredStage, acc, rows_abs, W: int,
+                     container=None):
+    """Accumulator -> saturated scaled-int tile (union + per-residue).
+
+    `container` overrides the stored dtype (must hold the clipped
+    range; the fused jnp program passes `fused_store_dtype`)."""
     import jax.numpy as jnp
     if ls.dyadic:
         q = rhe_shift(acc * ls.sm if ls.sm != 1 else acc, ls.t_shift)
@@ -145,11 +216,15 @@ def finish_intlinear(ls: LoweredStage, acc, rows_abs, W: int):
         q = jnp.clip(q, qmin, qmax)
     else:
         q = jnp.clip(q, ls.t.int_min, ls.t.int_max)
-    return q.astype(store_dtype(ls))
+    return q.astype(container if container is not None else store_dtype(ls))
 
 
-def snap_expr(ls: LoweredStage, raw, rows_abs, W: int):
-    """Raw f64 stage tile -> stored tile (int grid or oracle-float)."""
+def snap_expr(ls: LoweredStage, raw, rows_abs, W: int, container=None):
+    """Raw f64 stage tile -> stored tile (int grid or oracle-float).
+
+    `container` overrides the stored dtype on the integer path (must
+    hold the clipped range; the fused jnp program passes
+    `fused_store_dtype`); the float paths ignore it."""
     import jax.numpy as jnp
     t = ls.t
     if t is None:
@@ -173,7 +248,7 @@ def snap_expr(ls: LoweredStage, raw, rows_abs, W: int):
         q = jnp.clip(q, qmin, qmax)
     else:
         q = jnp.clip(q, t.int_min, t.int_max)
-    return q.astype(store_dtype(ls))
+    return q.astype(container if container is not None else store_dtype(ls))
 
 
 def dequant(ls: LoweredStage, tile):
@@ -257,11 +332,10 @@ def compile_jnp(lp: LoweredPipeline,
             ls = lp.stages[name]
             st = ls.stage
             if st.is_input:
-                x = img_of[name].astype(jnp.float64)
-                if ls.t is None:
-                    tiles[name] = x
-                else:
-                    tiles[name] = quantize_input(x, ls.t, store_dtype(ls), jnp)
+                x = img_of[name]
+                # trace-time branch: a container-dtype input arrives
+                # pre-quantized and is the stored tile zero-copy
+                tiles[name] = ingest_input(x, ls, jnp)
                 vals[name] = dequant(ls, tiles[name])
                 shapes[name] = x.shape
                 continue
@@ -287,7 +361,8 @@ def compile_jnp(lp: LoweredPipeline,
                 acc = accumulate_intlinear(
                     ls, tap_of, lambda: jnp.zeros((Hs, Ws), cdt))
                 rows_abs = jnp.arange(acc.shape[0])
-                q = finish_intlinear(ls, acc, rows_abs, acc.shape[1])
+                q = finish_intlinear(ls, acc, rows_abs, acc.shape[1],
+                                     container=fused_store_dtype(ls))
                 tiles[name] = q
             else:
                 if ls.expr_dtype == "f32":
@@ -308,7 +383,8 @@ def compile_jnp(lp: LoweredPipeline,
                 if sy > 1 or sx > 1:
                     raw = raw[::sy, ::sx]
                 rows_abs = jnp.arange(raw.shape[0])
-                tiles[name] = snap_expr(ls, raw, rows_abs, raw.shape[1])
+                tiles[name] = snap_expr(ls, raw, rows_abs, raw.shape[1],
+                                        container=fused_store_dtype(ls))
             vals[name] = dequant(ls, tiles[name])
             shapes[name] = tuple(vals[name].shape)
         return {k: vals[k] for k in outs}
@@ -322,10 +398,20 @@ def compile_jnp(lp: LoweredPipeline,
                              "with the new params")
         with obs.span("exec.lowered", backend="jnp",
                       pipeline=lp.pipeline.name, outputs=len(outs)) as sp:
-            imgs, _ = normalize_images(lp, image)
+            imgs, in_names = normalize_images(lp, image)
             with enable_x64():
-                arrs = tuple(jnp.asarray(np.asarray(im), dtype=jnp.float64)
-                             for im in imgs)
+                # container-dtype frames ship narrow (zero-copy ingest);
+                # everything else takes the f64 quantize path in-trace
+                def to_dev(im, n):
+                    a = np.asarray(im)
+                    ls = lp.stages[n]
+                    if ls.t is not None \
+                            and a.dtype == np.dtype(store_dtype(ls)):
+                        return jnp.asarray(a)
+                    return jnp.asarray(a, dtype=jnp.float64)
+
+                arrs = tuple(to_dev(im, n)
+                             for im, n in zip(imgs, in_names))
                 ndims = {a.ndim for a in arrs}
                 if ndims == {3}:          # leading batch dim: vmap program
                     if len({a.shape[0] for a in arrs}) != 1:
@@ -374,7 +460,17 @@ def compile_interp(lp: LoweredPipeline,
 
     def run(image, params_override=None):
         imgs, names = normalize_images(lp, image)
-        arrs = [np.asarray(im, dtype=np.float64) for im in imgs]
+        # the oracle is definitionally f64: a pre-quantized container
+        # frame (zero-copy convention, `ingest_input`) dequantizes to
+        # the on-grid value the oracle's own input snap reproduces
+        def to_f64(im, n):
+            a = np.asarray(im)
+            ls = lp.stages[n]
+            if ls.t is not None and a.dtype == np.dtype(store_dtype(ls)):
+                return a.astype(np.float64) * (2.0 ** -ls.t.beta)
+            return a.astype(np.float64)
+
+        arrs = [to_f64(im, n) for im, n in zip(imgs, names)]
         with obs.span("exec.interp", backend="interp",
                       pipeline=lp.pipeline.name, outputs=len(outs)):
             if all(a.ndim == 3 for a in arrs):

@@ -4,12 +4,16 @@ A *rate island* is a maximal rate-uniform subgraph of the
 `LoweredPipeline` DAG that admits one lattice-aligned row-band schedule
 (`build_island_schedule`).  Each island fuses through the Pallas
 line-buffer kernel; islands are stitched with materialized HBM boundary
-buffers holding each boundary stage's *stored* representation (scaled
-integers, or f64 for float-stored stages) — f64-exact containers, so
-stitching preserves the bit-for-bit differential contract against the
-numpy oracle: the downstream island's clamped gathers over a
-materialized boundary read exactly the values the oracle's padded
-geometry reads.
+buffers holding each boundary stage's *stored* representation — the
+smallest legalized container (`core.policy.legalize` via
+`backends.store_dtype`: int8/uint8/int16/uint16/int32, int64 for 33–52
+exact-integer bits, f64 for float-stored stages).  Narrow stitching
+preserves the bit-for-bit differential contract against the numpy
+oracle: the stored value was clipped into the container's range before
+the narrowing astype, loads widen losslessly, so the downstream
+island's clamped gathers over a materialized boundary read exactly the
+values the oracle's padded geometry reads — in a quarter of the bytes
+where the plan proves 8-bit ranges.
 
 This is the Rigel / heterogeneous-systems-DSL composition (PAPERS.md):
 multi-rate pipelines are built from rate-uniform fused segments joined
@@ -60,6 +64,33 @@ class Island:
                 label = getattr(ls, "expr_dtype", "f64")
             counts[label] = counts.get(label, 0) + 1
         return ",".join(f"{k}x{v}" for k, v in sorted(counts.items()))
+
+    def stored_mix(self, lp: LoweredPipeline) -> str:
+        """Stored-container census (legalized tile dtypes), e.g.
+        'int16x3,uint8x1' — the storage-side twin of `carrier_mix`."""
+        import numpy as np
+
+        from repro.lowering.backends import store_dtype
+        counts: Dict[str, int] = {}
+        for n in self.stages:
+            label = np.dtype(store_dtype(lp.stages[n])).name
+            counts[label] = counts.get(label, 0) + 1
+        return ",".join(f"{k}x{v}" for k, v in sorted(counts.items()))
+
+    def boundary_bytes(self, lp: LoweredPipeline) -> Tuple[int, int]:
+        """(stored, saved) bytes of this island's materialized HBM
+        outputs per image — `saved` relative to a uniform int32
+        baseline (negative for f64-stored boundaries)."""
+        import numpy as np
+
+        from repro.lowering.backends import store_dtype
+        stored = saved = 0
+        for n in self.outputs:
+            ss = self.schedule.stages[n]
+            nb = np.dtype(store_dtype(lp.stages[n])).itemsize
+            stored += ss.H * ss.W * nb
+            saved += ss.H * ss.W * (4 - nb)
+        return stored, saved
 
 
 @dataclasses.dataclass

@@ -6,8 +6,9 @@ DAG is partitioned into maximal band-schedulable subgraphs, each island
 walks a band of every member stage's rows down the image with
 intermediates resident in VMEM, and islands hand off through
 materialized HBM boundary buffers holding the boundary stages' *stored*
-tiles (scaled ints, or f64 for float-stored stages — f64-exact
-containers either way).  The historical whole-DAG case is the
+tiles in their smallest legalized container (`backends.store_dtype`:
+int8/uint8/int16/uint16/int32 scaled ints, int64 for 33–52 exact bits,
+f64 only for float-stored stages).  The historical whole-DAG case is the
 single-island fast path; DAGs the old backend rejected with
 `LoweringError` (mixed rates, rate-inexact heights, halos deeper than
 any aligned tile) now partition instead, so there is NO jnp whole-DAG
@@ -200,13 +201,18 @@ def compile_pallas(lp: LoweredPipeline,
                    outputs: Optional[Sequence[str]] = None,
                    interpret: Optional[bool] = None,
                    tile_rows: Optional[int] = None,
-                   islands: bool = True) -> B.Executor:
+                   islands: bool = True,
+                   prefetch: Optional[bool] = None) -> B.Executor:
     """Shape-specialized executor: the island plan + kernels are built
     (and cached) per input shape on first call.
 
     `islands=False` opts out of partitioning: the whole DAG must band-
     schedule as one program or `LoweringError` is raised (the historical
     contract, for callers that want to catch-and-fallback themselves).
+
+    `prefetch` (default auto: on for native TPU runs) selects the
+    double-buffered two-slot band DMA so each island overlaps the next
+    band's HBM->VMEM copy with the current band's compute.
     """
     from repro.kernels.stencil.kernel import fused_pipeline
 
@@ -219,7 +225,8 @@ def compile_pallas(lp: LoweredPipeline,
     def compile_island(isl: Island, batch: Optional[int]):
         return fused_pipeline(island_program(lp, isl),
                               grid=isl.schedule.grid,
-                              interpret=interp, batch=batch)
+                              interpret=interp, batch=batch,
+                              prefetch=prefetch)
 
     def build(shape):
         # a leading batch dim becomes the kernels' outer grid axis; the
@@ -255,7 +262,7 @@ def compile_pallas(lp: LoweredPipeline,
                 buffers: Dict[str, object] = {}
                 shape = None
                 for n in input_names:
-                    x = jnp.asarray(np.asarray(img_of[n]), dtype=jnp.float64)
+                    x = jnp.asarray(np.asarray(img_of[n]))
                     if x.ndim not in (2, 3):
                         raise LoweringError(
                             f"images must be (H, W) or (B, H, W); got "
@@ -266,8 +273,9 @@ def compile_pallas(lp: LoweredPipeline,
                         raise LoweringError("all pipeline inputs must share "
                                             f"one shape; got {shape} vs "
                                             f"{x.shape}")
-                    buffers[n] = B.quantize_input(
-                        x, lp.stages[n].t, B.store_dtype(lp.stages[n]), jnp)
+                    # container-dtype frames are pre-quantized stored
+                    # tiles (zero-copy); others quantize from f64
+                    buffers[n] = B.ingest_input(x, lp.stages[n], jnp)
                 if len(shape) == 3:
                     sp.set(batch=int(shape[0]))
                 if shape not in cache:
@@ -278,12 +286,16 @@ def compile_pallas(lp: LoweredPipeline,
                 compiled = cache[shape]
                 sp.set(islands=len(compiled))
                 for isl, call in compiled:
+                    out_b, saved_b = isl.boundary_bytes(lp)
                     with obs.span("exec.pallas.island",
                                   island=isl.idx, rate=str(isl.rate),
                                   stages=len(isl.stages),
                                   grid=isl.schedule.grid,
                                   single_tile=isl.single_tile,
-                                  carriers=isl.carrier_mix(lp)):
+                                  carriers=isl.carrier_mix(lp),
+                                  containers=isl.stored_mix(lp),
+                                  out_mb=round(out_b / 1e6, 4),
+                                  saved_mb=round(saved_b / 1e6, 4)):
                         for n, arr in zip(isl.outputs,
                                           call(*[buffers[n]
                                                  for n in isl.inputs])):

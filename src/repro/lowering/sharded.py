@@ -165,8 +165,7 @@ def compile_sharded(lp: LoweredPipeline,
                 buffers: Dict[str, object] = {}
                 shape = None
                 for n in input_names:
-                    x = jnp.asarray(np.asarray(img_of[n]),
-                                    dtype=jnp.float64)
+                    x = jnp.asarray(np.asarray(img_of[n]))
                     if x.ndim not in (2, 3):
                         raise LoweringError(
                             f"images must be (H, W) or (B, H, W); got "
@@ -177,9 +176,9 @@ def compile_sharded(lp: LoweredPipeline,
                         raise LoweringError(
                             "all pipeline inputs must share one shape; "
                             f"got {shape} vs {x.shape}")
-                    buffers[n] = B.quantize_input(
-                        x, lp.stages[n].t, B.store_dtype(lp.stages[n]),
-                        jnp)
+                    # narrow replicated inputs: container-dtype frames
+                    # ship as-is across the mesh (zero-copy ingest)
+                    buffers[n] = B.ingest_input(x, lp.stages[n], jnp)
                 if len(shape) == 3:
                     sp.set(batch=int(shape[0]))
                 key = shape + (m.shape["band"],)

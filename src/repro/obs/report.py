@@ -14,7 +14,9 @@ prints up to three tables (plain text, or GitHub-flavoured markdown with
     counts, and alpha headroom (plan bits − observed bits);
   * **pallas islands** — one row per rate island of the fused pallas
     executor (`exec.pallas.island` spans): rate, fused stage count, grid,
-    carrier mix, and time aggregated over calls;
+    carrier mix, stored-container mix with the boundary-buffer MB it
+    materializes and the MB saved vs a uniform int32 baseline, and time
+    aggregated over calls;
   * **design search** — per-strategy evaluation rollup (`dse.evaluate`
     spans + cached hits) and the Pareto frontier as accepted during the
     search (`dse.accept` events): psnr / power / area / total bits.
@@ -128,12 +130,16 @@ def summarize(records: List[dict]) -> Dict[str, List[Dict[str, Any]]]:
         if s["name"] != "exec.pallas.island":
             continue
         a = s.get("attrs", {})
-        key = (a.get("island"), a.get("rate"), a.get("carriers"))
+        key = (a.get("island"), a.get("rate"), a.get("carriers"),
+               a.get("containers"))
         row = isl.setdefault(key, {
             "island": a.get("island"), "rate": a.get("rate"),
             "stages": a.get("stages"), "grid": a.get("grid"),
             "single_tile": a.get("single_tile"),
-            "carriers": a.get("carriers"), "ms": 0.0, "calls": 0,
+            "carriers": a.get("carriers"),
+            "containers": a.get("containers"),
+            "out_mb": a.get("out_mb"), "saved_mb": a.get("saved_mb"),
+            "ms": 0.0, "calls": 0,
         })
         row["ms"] += s["dur_us"] / 1e3
         row["calls"] += 1
@@ -203,7 +209,8 @@ def render(summary: Dict[str, List[Dict[str, Any]]],
                summary["runtime"], markdown),
         _table("pallas islands",
                ["island", "rate", "stages", "grid", "single_tile",
-                "carriers", "ms", "calls"],
+                "carriers", "containers", "out_mb", "saved_mb",
+                "ms", "calls"],
                summary.get("islands", []), markdown),
         _table("design search strategies",
                ["pipeline", "strategy", "evals", "cached", "ms",

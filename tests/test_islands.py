@@ -386,3 +386,75 @@ def test_needs_64bit_tracks_the_election():
     lp2 = lower(p2, t2, params=dict(usm.DEFAULT_PARAMS))
     # usm has f64 expr stages -> needs 64-bit
     assert needs_64bit(lp2)
+
+
+# ---------------------------------------------------------------------------
+# stored containers at island boundaries
+# ---------------------------------------------------------------------------
+
+def test_island_descriptors_carry_stored_containers():
+    """The fused kernel's stage descriptors (shared by the pallas and
+    shard_map executors) carry `backends.store_dtype` — the legalized
+    narrow container, not the MAC carrier."""
+    from repro.lowering import backends as B
+    from repro.lowering.pallas_backend import island_program
+    pipe = dus.build_extended()
+    lp = lower(pipe, _types_for(pipe))
+    plan = partition_islands(lp, (48, 48))
+    for isl in plan.islands:
+        for d in island_program(lp, isl):
+            want = np.dtype(B.store_dtype(lp.stages[d["name"]]))
+            assert np.dtype(d["dtype"]) == want, d["name"]
+            assert want.itemsize <= 2, \
+                f"{d['name']}: dus_ext tiles must all fit 16-bit containers"
+
+
+def test_boundary_buffers_stitch_narrow_and_save_bytes():
+    """Multi-island stitching materializes HBM boundaries in the stored
+    container: every dus boundary is sub-int32, `boundary_bytes` prices
+    real savings vs the uniform int32 baseline, and `stored_mix` shows
+    no int64/f64 leakage."""
+    from repro.lowering.backends import store_dtype
+    pipe = dus.build()
+    types = _types_for(pipe)
+    lp = lower(pipe, types)
+    plan = partition_islands(lp, (47, 48))
+    assert len(plan.islands) > 1
+    for isl in plan.islands:
+        for out in isl.outputs:
+            assert np.dtype(store_dtype(lp.stages[out])).itemsize <= 2, out
+        stored, saved = isl.boundary_bytes(lp)
+        assert stored > 0 and saved > 0
+        mix = isl.stored_mix(lp)
+        assert "int64" not in mix and "float64" not in mix, mix
+    # and the stitched execution over those narrow boundaries is exact
+    img = _img((47, 48), seed=23)
+    oracle = run_fixed(pipe, img, types)
+    outs = compile_backend(lp, "pallas")(img)
+    for stage in pipe.outputs:
+        np.testing.assert_array_equal(np.asarray(oracle[stage]),
+                                      outs[stage], err_msg=stage)
+
+
+def test_boundary_bytes_accounts_f64_as_negative_savings():
+    """A float-stored boundary costs 8 B/px: `boundary_bytes` must report
+    it as negative savings, not silently fold it into the narrow wins."""
+    pipe = dus.build_extended()
+    types = _types_for(pipe)
+    phase_types = {"resS": ((2, 1), {(0, 0): FixedPointType(8, 1, True)})}
+
+    class FakePlan:
+        def phase_types(self, column=None):
+            return phase_types
+
+        def types(self, column=None):
+            return types
+
+    lp = lower(pipe, FakePlan())
+    assert lp.stages["resS"].store_float
+    iplan = partition_islands(lp, (48, 48), outputs=["resS"])
+    isl = next(i for i in iplan.islands if "resS" in i.outputs)
+    stored, saved = isl.boundary_bytes(lp)
+    h, w = isl.schedule.stages["resS"].H, isl.schedule.stages["resS"].W
+    assert stored >= h * w * 8
+    assert saved <= -h * w * 4      # 4 - 8 bytes per resS pixel, at least

@@ -428,3 +428,220 @@ def test_F2_pallas_matches_oracle_on_random_pipelines(pipe, seed):
     for stage in outs:
         np.testing.assert_array_equal(np.asarray(oracle[stage]), outs[stage],
                                       err_msg=stage)
+
+
+# ---------------------------------------------------------------------------
+# stored containers: legalized narrow tiles end-to-end
+# ---------------------------------------------------------------------------
+
+from repro.core.policy import legalize
+from repro.lowering import backends as B
+
+
+@pytest.mark.parametrize("name,build,params,n_in,shape",
+                         BENCHES, ids=[b[0] for b in BENCHES])
+def test_store_dtype_is_the_legalized_container(name, build, params,
+                                                n_in, shape):
+    """Every integer-stored tile lives in `policy.legalize`'s smallest
+    container; 33-52 exact-integer bits stay int64; float-stored stages
+    stay f64 (docs/execution_backends.md, "Stored containers")."""
+    pipe = build()
+    lp = lower(pipe, _types_for(pipe), params=params)
+    narrow = 0
+    for n, ls in lp.stages.items():
+        dt = np.dtype(B.store_dtype(ls))
+        if ls.store_float:
+            assert dt == np.float64, n
+            continue
+        if ls.t.width <= 32:
+            lt = legalize(ls.t)
+            assert lt.fp is not None and dt == np.dtype(lt.dtype), \
+                f"{name}/{n}: stored {dt}, legalized {lt.container}"
+        else:
+            assert dt == np.int64, n
+        narrow += dt.itemsize < 4
+    # the beta-4 battery designs are 8-bit imaging pipelines: a plan
+    # that elects zero sub-int32 containers means legalization regressed
+    assert narrow, f"{name}: no stage elected a sub-int32 container"
+
+
+def _narrow_pipe():
+    """Handmade design whose plan elects int8 / uint8 / int16 / uint16 —
+    every sub-int32 container at once."""
+    p = PipelineBuilder("narrowpipe")
+    a = p.image("img", 0, 15)
+    d = p.define("diff", a - 7.0)
+    s = p.stencil("blur", a, [[1.0, 2.0, 1.0]], scale=0.25)
+    m = p.define("mix", s - d)
+    p.output(m)
+    pipe = p.build()
+    types = {
+        "img": FixedPointType(alpha=4, beta=0, signed=False),    # uint8
+        "diff": FixedPointType(alpha=4, beta=0, signed=True),    # int8
+        "blur": FixedPointType(alpha=4, beta=8, signed=False),   # uint16
+        "mix": FixedPointType(alpha=5, beta=8, signed=True),     # int16
+    }
+    return pipe, types
+
+
+def test_narrow_tiles_bit_exact_across_backends():
+    pipe, types = _narrow_pipe()
+    lp = lower(pipe, types)
+    stored = {n: np.dtype(B.store_dtype(ls)) for n, ls in lp.stages.items()}
+    assert stored == {"img": np.dtype(np.uint8), "diff": np.dtype(np.int8),
+                      "blur": np.dtype(np.uint16), "mix": np.dtype(np.int16)}
+    img = _img((24, 24), seed=13, hi=16)
+    oracle = run_fixed(pipe, img, types)
+    for backend in ("jnp", "pallas"):
+        outs = compile_backend(lp, backend, outputs=list(pipe.stages))(img)
+        for stage in pipe.topo_order():
+            np.testing.assert_array_equal(
+                np.asarray(oracle[stage]), outs[stage],
+                err_msg=f"{backend}/{stage} (narrow containers)")
+
+
+def test_saturating_phase_plan_stores_narrow_containers():
+    """Per-residue saturation runs in the *union* container — which the
+    plan still narrows below int32 — and stays oracle-exact."""
+    pipe = dus.build_extended()
+    plan = _phase_plan(pipe)
+    lp = lower(pipe, plan)
+    for n in ("resS", "UyS", "band"):
+        ls = lp.stages[n]
+        assert ls.phase is not None and not ls.store_float, n
+        assert np.dtype(B.store_dtype(ls)).itemsize < 4, \
+            f"{n}: saturating phase stage lost its narrow container"
+    img = _img((48, 48), seed=17)
+    oracle = run_fixed(pipe, img, plan)
+    env = run_fixed(pipe, img, plan, backend="lowered")
+    for stage in pipe.topo_order():
+        np.testing.assert_array_equal(np.asarray(oracle[stage]), env[stage],
+                                      err_msg=stage)
+
+
+def test_narrow_equals_wide_equals_oracle(monkeypatch):
+    """Storage narrowing is value-neutral: forcing the pre-legalization
+    int32/int64/f64 containers (`wide_store_dtype`) produces byte-equal
+    outputs on both lowered backends."""
+    pipe = dus.build_extended()
+    types = _types_for(pipe)
+    lp = lower(pipe, types)
+    img = _img((48, 48), seed=31)
+    oracle = run_fixed(pipe, img, types)
+    narrow = {b: compile_backend(lp, b)(img) for b in ("jnp", "pallas")}
+    monkeypatch.setattr(B, "store_dtype", B.wide_store_dtype)
+    wide = {b: compile_backend(lp, b)(img) for b in ("jnp", "pallas")}
+    for b in ("jnp", "pallas"):
+        for stage in pipe.outputs:
+            np.testing.assert_array_equal(
+                np.asarray(oracle[stage]), narrow[b][stage],
+                err_msg=f"{b}/{stage} narrow != oracle")
+            np.testing.assert_array_equal(
+                narrow[b][stage], wide[b][stage],
+                err_msg=f"{b}/{stage}: narrow != wide storage")
+
+
+def test_container_dtype_input_is_zero_copy_and_bit_exact():
+    """The zero-copy ingestion convention: an input already in its
+    stage's container dtype is treated as pre-quantized scaled integers
+    and must land byte-identical to the f64 path on every backend —
+    for a beta-0 8-bit input the raw uint8 frame IS the stored tile."""
+    pipe = usm.build()
+    params = dict(usm.DEFAULT_PARAMS)
+    types = _types_for(pipe, beta=0)
+    lp = lower(pipe, types, params=params)
+    ls = lp.stages["img"]
+    assert np.dtype(B.store_dtype(ls)) == np.uint8
+    img = _img((48, 48), seed=23)
+    raw = img.astype(np.uint8)              # beta=0: values == scaled ints
+    assert np.array_equal(
+        raw, np.asarray(B.quantize_input(img, ls.t, np.uint8, np)))
+    for backend in ("interp", "jnp", "pallas"):
+        run = compile_backend(lp, backend)
+        a, b = run(img), run(raw)
+        for stage in pipe.outputs:
+            np.testing.assert_array_equal(
+                np.asarray(a[stage]), np.asarray(b[stage]),
+                err_msg=f"{backend}/{stage}: uint8 ingest != f64 ingest")
+
+
+def test_prequantized_fractional_input_matches_f64_path():
+    """Same convention off the trivial grid: beta=4 scaled ints in the
+    legalized uint16 container replace the f64 quantization exactly."""
+    pipe = usm.build()
+    params = dict(usm.DEFAULT_PARAMS)
+    types = _types_for(pipe)                # beta=4 -> 12-bit -> uint16
+    lp = lower(pipe, types, params=params)
+    ls = lp.stages["img"]
+    dt = np.dtype(B.store_dtype(ls))
+    assert dt == np.uint16
+    img = _img((48, 48), seed=24)
+    q = np.asarray(B.quantize_input(img, ls.t, dt, np))
+    assert q.dtype == dt
+    for backend in ("jnp", "pallas"):
+        run = compile_backend(lp, backend)
+        a, b = run(img), run(q)
+        for stage in pipe.outputs:
+            np.testing.assert_array_equal(
+                np.asarray(a[stage]), np.asarray(b[stage]),
+                err_msg=f"{backend}/{stage}: pre-quantized != f64 ingest")
+
+
+@pytest.mark.parametrize("name,build,params,n_in,shape",
+                         [BENCHES[0], BENCHES[3]], ids=["usm", "dus_ext"])
+def test_pallas_prefetch_double_buffer_bit_exact(name, build, params,
+                                                 n_in, shape):
+    """Forced double-buffered band prefetch (interpret mode emulates the
+    DMA copies + semaphores) stays bit-identical to the numpy oracle,
+    single-frame and batched."""
+    pipe = build()
+    types = _types_for(pipe)
+    lp = lower(pipe, types, params=params)
+    run = compile_backend(lp, "pallas", prefetch=True, interpret=True)
+    img = _img(shape, seed=29)
+    oracle = run_fixed(pipe, img, types, params)
+    outs = run(img)
+    for stage in pipe.outputs:
+        np.testing.assert_array_equal(
+            np.asarray(oracle[stage]), outs[stage],
+            err_msg=f"{name}/{stage}: prefetch kernel != oracle")
+    batch = np.stack([img, _img(shape, seed=30)])
+    per = [run_fixed(pipe, batch[i], types, params) for i in range(2)]
+    outs_b = run(batch)
+    for stage in pipe.outputs:
+        np.testing.assert_array_equal(
+            np.stack([np.asarray(p[stage]) for p in per]), outs_b[stage],
+            err_msg=f"{name}/{stage}: batched prefetch != oracle")
+
+
+@given(sampled_pipelines(), st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_F3_containers_and_prequantized_ingest_on_random_pipelines(pipe,
+                                                                   seed):
+    """Random DAGs: every integer-stored stage lands in its legalized
+    container, and a pre-quantized container-dtype input round-trips
+    bit-exact through the lowered backend."""
+    res = analyze(pipe)
+    if any(np.isinf(r.range.hi) or r.alpha > 24 for r in res.values()):
+        return
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        types = {n: FixedPointType(alpha=max(r.alpha, 1), beta=2,
+                                   signed=r.signed)
+                 for n, r in res.items()}
+    lp = lower(pipe, types)
+    for n, ls in lp.stages.items():
+        if ls.store_float or ls.t is None:
+            continue
+        lt = legalize(ls.t)
+        if lt.fp is not None:
+            assert np.dtype(B.store_dtype(ls)) == np.dtype(lt.dtype), n
+    img = _img((16, 16), seed=seed)
+    oracle = run_fixed(pipe, img, types)
+    ls_in = lp.stages["img"]
+    q = np.asarray(B.quantize_input(
+        img, ls_in.t, np.dtype(B.store_dtype(ls_in)), np))
+    env = compile_backend(lp, "jnp", outputs=list(pipe.stages))(q)
+    for stage in pipe.topo_order():
+        np.testing.assert_array_equal(np.asarray(oracle[stage]), env[stage],
+                                      err_msg=stage)

@@ -341,3 +341,34 @@ def test_pipeline_server_concurrent_producers_share_one_compile():
     for k in ref:
         np.testing.assert_array_equal(np.asarray(ref[k]), outs[0][k],
                                       err_msg=k)
+
+
+def test_pipeline_server_zero_copy_uint8_ingestion():
+    """uint8 frames on a beta-0 design are ingested zero-copy (quantized
+    once at submit, stored tile == the raw pixel buffer) and produce
+    byte-identical results to the same frames submitted as f64."""
+    from repro.lowering import backends as B
+    from repro.serve import PipelineServer, serve_offline
+    pipe = usm.build()
+    types = _types_for(pipe, beta=0)
+    params = dict(usm.DEFAULT_PARAMS)
+    lp = lower(pipe, types, params=params)
+    assert np.dtype(B.store_dtype(lp.stages["img"])) == np.uint8
+    f64 = [_batch(1, 1, (32, 32), seed=200 + i)[0] for i in range(5)]
+    u8 = [f.astype(np.uint8) for f in f64]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with PipelineServer(pipe, types, params, backend="lowered",
+                            batch_size=4) as srv:
+            srv.warmup([(32, 32)])
+            outs_u8 = serve_offline(srv, u8)
+        with PipelineServer(pipe, types, params, backend="lowered",
+                            batch_size=4) as srv:
+            outs_f64 = serve_offline(srv, f64)
+    for f, a, b in zip(f64, outs_u8, outs_f64):
+        ref = run_fixed(pipe, f, types, params)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(ref[k]), a[k],
+                                          err_msg=f"uint8/{k}")
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"uint8 vs f64/{k}")
